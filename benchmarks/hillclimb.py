@@ -1,0 +1,132 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Hillclimb harness: lower variant programs for the three chosen cells and
+record the three roofline terms (EXPERIMENTS.md §Perf iteration log).
+
+Cells (selection rationale in EXPERIMENTS.md):
+  A. qwen3-moe-235b-a22b x train_4k  — worst memory fit + largest compute
+  B. two-tower x serve_bulk          — most collective-bound
+  C. two-tower x retrieval_cand      — most representative of the paper
+     (RAE two-stage retrieval integrates here)
+
+Usage: PYTHONPATH=src python -m benchmarks.hillclimb --cell A --variant a1
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, get_shapes
+from repro.distributed.partitioning import default_rules
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import MeshCtx
+from repro.launch.train import build_cell_with
+from repro.models.registry import build_cell
+
+
+def measure(lowered, label):
+    t0 = time.time()
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = hlo_analysis.collective_bytes(text)
+    rec = {
+        "label": label,
+        "peak_gib": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30,
+        "temp_gib": ma.temp_size_in_bytes / 2**30,
+        "hlo_flops_dev": ca.get("flops", 0.0),
+        "coll_gib": {k: round(v / 2**30, 4) for k, v in coll.items()},
+        "compile_s": round(time.time() - t0, 1),
+    }
+    print(json.dumps(rec))
+    return rec
+
+
+def cell_a(variant: str):
+    mesh = make_production_mesh(multi_pod=False)
+    ctx = MeshCtx(mesh=mesh, rules=default_rules(multi_pod=False))
+    cfg, family = get_arch("qwen3-moe-235b-a22b")
+    cell = {c.name: c for c in get_shapes("qwen3-moe-235b-a22b")}["train_4k"]
+    if variant in ("a2", "a2a3"):
+        cfg = dataclasses.replace(cfg, grad_accum=2)
+    if variant in ("a3", "a2a3"):
+        cfg = dataclasses.replace(cfg, capacity_factor=1.0)
+    prog = build_cell_with(cfg, family, "qwen3-moe-235b-a22b", cell, ctx)
+    return measure(prog.lower(mesh), f"A.{variant}")
+
+
+def cell_b(variant: str):
+    mesh = make_production_mesh(multi_pod=False)
+    ctx = MeshCtx(mesh=mesh, rules=default_rules(multi_pod=False))
+    prog = build_cell("two-tower-retrieval", "serve_bulk", ctx)
+    return measure(prog.lower(mesh), f"B.{variant}")
+
+
+def cell_c(variant: str):
+    from jax.sharding import NamedSharding
+    from repro.core import rae as rae_lib
+    from repro.configs import RAEConfig
+    from repro.search import distributed_topk, search as dsearch
+
+    mesh = make_production_mesh(multi_pod=False)
+    ctx = MeshCtx(mesh=mesh, rules=default_rules(multi_pod=False))
+    n, d, m, k = 1_000_000, 256, 64, 100
+
+    if variant == "c0":
+        prog = build_cell("two-tower-retrieval", "retrieval_cand", ctx)
+        return measure(prog.lower(mesh), "C.c0")
+
+    if variant == "c1":
+        # precomputed item-corpus scoring (production serving shape)
+        def fn(corpus, q):
+            scores = corpus @ q[0]
+            scores = ctx.constrain(scores, "db_rows")
+            return distributed_topk(scores, k, ctx)
+
+        args = (jax.ShapeDtypeStruct((n, d), jnp.bfloat16),
+                jax.ShapeDtypeStruct((1, d), jnp.float32))
+        shard = (NamedSharding(mesh, ctx.pspec((n, d), "db_rows", None)),
+                 NamedSharding(mesh, ctx.pspec((1, d))))
+        return measure(jax.jit(fn, in_shardings=shard).lower(*args), "C.c1")
+
+    # c2: RAE-reduced scan + full-space rerank (the paper's technique)
+    rcfg = RAEConfig(in_dim=d, out_dim=m)
+
+    def fn(corpus_full, corpus_red, w_e, q):
+        zq = (q.astype(jnp.float32) @ w_e)
+        s_red = corpus_red @ zq[0]
+        s_red = ctx.constrain(s_red, "db_rows")
+        _, cand = distributed_topk(s_red, 4 * k, ctx)  # stage 1 in R^m
+        cvecs = jnp.take(corpus_full, cand, axis=0).astype(jnp.float32)
+        s = cvecs @ q[0]                                # stage 2 rerank
+        v, sel = jax.lax.top_k(s, k)
+        return v, jnp.take(cand, sel)
+
+    args = (jax.ShapeDtypeStruct((n, d), jnp.bfloat16),
+            jax.ShapeDtypeStruct((n, m), jnp.bfloat16),
+            jax.ShapeDtypeStruct((d, m), jnp.float32),
+            jax.ShapeDtypeStruct((1, d), jnp.float32))
+    shard = (NamedSharding(mesh, ctx.pspec((n, d), "db_rows", None)),
+             NamedSharding(mesh, ctx.pspec((n, m), "db_rows", None)),
+             NamedSharding(mesh, ctx.pspec((d, m))),
+             NamedSharding(mesh, ctx.pspec((1, d))))
+    return measure(jax.jit(fn, in_shardings=shard).lower(*args), "C.c2")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=["A", "B", "C"])
+    ap.add_argument("--variant", required=True)
+    args = ap.parse_args()
+    {"A": cell_a, "B": cell_b, "C": cell_c}[args.cell](args.variant)
+
+
+if __name__ == "__main__":
+    main()

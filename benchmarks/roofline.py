@@ -1,0 +1,331 @@
+"""Three-term roofline analysis per (arch x shape x mesh) cell.
+
+Terms (per device, TPU v5e targets):
+    T_comp = FLOPs_dev / 197e12       (bf16 peak per chip)
+    T_mem  = bytes_dev / 819e9        (HBM bandwidth per chip)
+    T_coll = coll_bytes_dev / 50e9    (ICI per link)
+
+FLOPs/bytes: ``compiled.cost_analysis()`` counts ``lax.scan`` bodies ONCE
+(verified empirically — EXPERIMENTS.md §Dry-run), and LMs scan over layers,
+so HLO counts undercount by ~n_layers. This module therefore computes
+*analytic* FLOPs/bytes in closed form from the configs — counting what the
+program actually executes (e.g. full masked-causal attention chunks, MoE
+capacity slots including padding) — and cross-validates against an UNROLLED
+lowering of the smallest LM (scripts in EXPERIMENTS.md §Roofline show
+raw-vs-analytic agreement there). Collective bytes come from the compiled
+HLO with while-loop trip-count multipliers (launch/hlo_analysis.py) — those
+are loop-exact.
+
+MODEL_FLOPS (the "useful work" yardstick): 6·N·D for dense training,
+6·N_active·D for MoE, 2·N_active (+ exact attention term) per decoded token.
+The ratio MODEL_FLOPS / ANALYTIC_FLOPS surfaces causal-mask waste, MoE
+capacity padding and remat recompute.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Optional
+
+PEAK_FLOPS = 197e12   # bf16 / chip
+HBM_BW = 819e9        # bytes/s / chip
+LINK_BW = 50e9        # bytes/s / ICI link
+
+from repro.configs import get_arch, get_shapes  # noqa: E402
+from repro.models.transformer.model import padded_vocab  # noqa: E402
+
+
+def _mesh_devices(mesh: str) -> int:
+    return 512 if mesh == "2x16x16" else 256
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs (global, per step) — counts executed ops, not ideal ops
+# ---------------------------------------------------------------------------
+def lm_flops(cfg, cell, mesh_devices: int) -> dict:
+    v = padded_vocab(cfg)
+    d, L = cfg.d_model, cfg.n_layers
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    qd, kvd = h * dh, kh * dh
+
+    if cell.kind in ("train", "prefill"):
+        b, s = cell.global_batch, cell.seq_len
+        t = b * s
+        proj = 2 * d * (qd + 2 * kvd + qd)                 # per token/layer
+        attn = 4 * s * h * dh                              # full (masked) chunks
+        # input-embedding rows are looked up, not matmul'd: exclude them from
+        # the 6·N·D yardstick (the untied output head does execute)
+        embed_discount = cfg.vocab_size * d * (1 if not cfg.tie_embeddings
+                                               else 0)
+        if cfg.family == "moe":
+            cf = cfg.capacity_factor
+            mlp = 2 * 3 * d * cfg.d_ff * cfg.moe_top_k * cf \
+                + 2 * d * cfg.n_experts
+            active = cfg.n_active_params() - embed_discount
+        else:
+            mlp = 2 * 3 * d * cfg.d_ff
+            active = cfg.n_params() - embed_discount
+        head = 2 * d * v
+        fwd = t * (L * (proj + attn + mlp) + head)
+        mult = 3.0 if cell.kind == "train" else 1.0        # bwd = 2x fwd
+        model = (6.0 if cell.kind == "train" else 2.0) * active * t \
+            + mult * t * L * 2 * s * h * dh                # causal-half attn
+        return {"flops": mult * fwd, "model_flops": model}
+
+    # decode: one token, cache length = cell.seq_len
+    b, s = cell.global_batch, cell.seq_len
+    proj = 2 * d * (qd + 2 * kvd + qd)
+    attn = 4 * s * h * dh
+    embed_discount = cfg.vocab_size * d * (1 if not cfg.tie_embeddings else 0)
+    if cfg.family == "moe":
+        # drop-free capacity C = t_loc: the grouped GEMM runs E x t_loc rows
+        # per data shard -> E/topk x padding over ideal (flagged in §Perf)
+        mlp = 2 * 3 * d * cfg.d_ff * cfg.n_experts + 2 * d * cfg.n_experts
+        active = cfg.n_active_params() - embed_discount
+    else:
+        mlp = 2 * 3 * d * cfg.d_ff
+        active = cfg.n_params() - embed_discount
+    head = 2 * d * v
+    fwd = b * (L * (proj + attn + mlp) + head)
+    model = 2 * active * b + b * L * 4 * s * h * dh
+    return {"flops": fwd, "model_flops": model}
+
+
+def lm_bytes(cfg, cell, mesh_devices: int) -> float:
+    """Per-device HBM traffic per step (closed form, documented terms)."""
+    v = padded_vocab(cfg)
+    p_total = cfg.n_params()
+    p_local = p_total / mesh_devices * (16 / mesh_devices if False else 1)
+    d, L = cfg.d_model, cfg.n_layers
+    if cell.kind == "train":
+        b, s = cell.global_batch, cell.seq_len
+        t_dev = b * s / mesh_devices
+        # weights: bf16 stack r/w once + gathered-read fwd, recompute, bwd (3x)
+        w = p_total / mesh_devices * 2 * (1 + 3)
+        # optimizer: fp32 master r/w + m/v (bf16) r/w + fp32 grads r/w
+        opt = p_total / mesh_devices * (4 * 2 + 2 * 2 + 2 * 2 + 4 * 2)
+        # activations: ~12 residual-width tensors per layer, x3 (fwd/rc/bwd)
+        act = t_dev * d * L * 2 * 12 * 3
+        # logits chunks: fwd+bwd reads of [t, V/shards]
+        logits = t_dev * (v / min(16, mesh_devices)) * 2 * 3
+        return w + opt + act + logits
+    if cell.kind == "prefill":
+        b, s = cell.global_batch, cell.seq_len
+        t_dev = b * s / mesh_devices
+        w = p_total / mesh_devices * 2
+        act = t_dev * d * L * 2 * 12
+        cache = (L * b * s * cfg.kv_dim * 2 * 2) / mesh_devices
+        return w + act + cache
+    # decode
+    b, s = cell.global_batch, cell.seq_len
+    w = p_total / mesh_devices * 2          # every (local) weight read once
+    cache = (L * b * s * cfg.kv_dim * 2 * 2) / mesh_devices  # k+v read
+    act = b * d * L * 2 * 12 / max(mesh_devices / 16, 1)
+    return w + cache + act
+
+
+def gnn_flops(cfg, cell, mesh_devices: int) -> dict:
+    d_h = cfg.d_hidden
+    if cell.kind == "full_graph":
+        n, e, d0 = cell.n_nodes, cell.n_edges, cell.d_feat
+        dims = [d0] + [d_h] * cfg.n_layers
+        f = 0.0
+        for i in range(cfg.n_layers):
+            f += 2 * e * dims[i]                    # segment-sum adds
+            f += 2 * n * 2 * dims[i] * dims[i + 1]  # concat-matmul
+        f += 2 * n * d_h * cfg.n_classes
+        return {"flops": 3 * f, "model_flops": 3 * f}
+    if cell.kind == "minibatch":
+        bsz = cell.batch_nodes
+        f1, f2 = cell.fanout or cfg.sample_sizes
+        d0 = cell.d_feat
+        f = (bsz * f1 * f2 * d0                      # layer-2 means
+             + bsz * (1 + f1) * 2 * 2 * d0 * d_h     # layer-1 matmuls
+             + bsz * f1 * d_h                        # layer-2 mean
+             + bsz * 2 * 2 * d_h * d_h
+             + bsz * 2 * d_h * cfg.n_classes)
+        return {"flops": 3 * f, "model_flops": 3 * f}
+    # batched_graphs
+    g, nn_, ne, d0 = (cell.graphs_per_batch, cell.n_nodes, cell.n_edges,
+                      cell.d_feat)
+    dims = [d0] + [d_h] * cfg.n_layers
+    f = 0.0
+    for i in range(cfg.n_layers):
+        f += 2 * g * ne * dims[i]
+        f += 2 * g * nn_ * 2 * dims[i] * dims[i + 1]
+    f += 2 * g * d_h * cfg.n_classes
+    return {"flops": 3 * f, "model_flops": 3 * f}
+
+
+def gnn_bytes(cfg, cell, mesh_devices: int) -> float:
+    if cell.kind == "full_graph":
+        n, e, d0 = cell.n_nodes, cell.n_edges, cell.d_feat
+        # gathered features per layer (all-gathered h on each device!) + edges
+        per_dev = (n * d0 * 4 + n * cfg.d_hidden * 4 * (cfg.n_layers - 1)
+                   + 2 * e / mesh_devices * (d0 + cfg.d_hidden) * 4
+                   + 2 * e * 4 / mesh_devices)
+        return per_dev * 3
+    if cell.kind == "minibatch":
+        bsz = cell.batch_nodes
+        f1, f2 = cell.fanout or cfg.sample_sizes
+        return bsz * (1 + f1 + f1 * f2) * cell.d_feat * 4 * 3 / mesh_devices
+    g, nn_, ne = cell.graphs_per_batch, cell.n_nodes, cell.n_edges
+    return g * (nn_ * cell.d_feat + ne * 8) * 4 * 3 / mesh_devices
+
+
+def recsys_flops(cfg, cell, mesh_devices: int) -> dict:
+    kind = cfg.kind
+    b = cell.global_batch if cell.kind != "retrieval" else cell.n_candidates
+    d = cfg.embed_dim
+
+    def mlp_flops(dims, d_in):
+        f, cur = 0.0, d_in
+        for dd in dims:
+            f += 2 * cur * dd
+            cur = dd
+        return f
+
+    if kind == "bst":
+        s = cfg.seq_len + 1
+        blk = 2 * s * (4 * d * d) + 4 * s * s * d + 2 * s * (8 * d * d)
+        f = b * (blk + mlp_flops(cfg.mlp_dims + (1,), d * s + 2 * d))
+    elif kind == "two_tower":
+        f = b * (mlp_flops(cfg.mlp_dims, 2 * d) + mlp_flops(cfg.mlp_dims, d))
+        if cell.kind == "train":
+            f += 2 * b * b * cfg.mlp_dims[-1]  # in-batch logits
+        if cell.kind == "retrieval":
+            f = cell.n_candidates * mlp_flops(cfg.mlp_dims, d) \
+                + mlp_flops(cfg.mlp_dims, 2 * d) \
+                + 2 * cell.n_candidates * cfg.mlp_dims[-1]
+    elif kind == "autoint":
+        nf, da = cfg.n_fields, cfg.d_attn
+        per = 0.0
+        d_in = d
+        for _ in range(cfg.n_attn_layers):
+            per += 2 * nf * (3 * d_in * da + d_in * da) + 4 * nf * nf * da
+            d_in = da
+        f = b * (per + 2 * nf * da)
+    else:  # mind
+        L = cfg.hist_len
+        k = cfg.n_interests
+        per = 2 * L * d * d + cfg.capsule_iters * (2 * L * k * d * 2) \
+            + k * mlp_flops(cfg.mlp_dims, d)
+        f = b * per if cell.kind != "retrieval" else (
+            cell.n_candidates * (2 * d * d + mlp_flops(cfg.mlp_dims, d)
+                                 + 2 * k * cfg.mlp_dims[-1]) + per)
+    mult = 3.0 if cell.kind == "train" else 1.0
+    return {"flops": mult * f, "model_flops": mult * f}
+
+
+def recsys_bytes(cfg, cell, mesh_devices: int) -> float:
+    b = cell.global_batch if cell.kind != "retrieval" else cell.n_candidates
+    d = cfg.embed_dim
+    lookups = {"bst": cfg.seq_len + 3, "two_tower": 2 + cfg.hist_len,
+               "autoint": cfg.n_fields, "mind": cfg.hist_len + 1}[cfg.kind]
+    emb = b * lookups * d * 4
+    act = b * d * 16 * 4
+    mult = 3.0 if cell.kind == "train" else 1.0
+    if cell.kind == "train":
+        # optimizer touches every table row (dense Adam on tables)
+        emb += cfg.n_params() * 16 / mult  # counted once, not x3
+    return mult * (emb + act) / mesh_devices
+
+
+# ---------------------------------------------------------------------------
+# Table assembly
+# ---------------------------------------------------------------------------
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    t_comp: float
+    t_mem: float
+    t_coll: float
+    dominant: str
+    model_flops: float
+    analytic_flops: float
+    hlo_flops_dev: float
+    useful_ratio: float
+    peak_gib: float
+    util_vs_dominant: float
+
+    def as_dict(self):
+        return self.__dict__.copy()
+
+
+def analyze_record(rec: dict) -> Optional[RooflineRow]:
+    if not rec.get("ok"):
+        return None
+    cfg, family = get_arch(rec["arch"])
+    cell = {c.name: c for c in get_shapes(rec["arch"])}[rec["shape"]]
+    ndev = _mesh_devices(rec["mesh"])
+    if family == "lm":
+        fl = lm_flops(cfg, cell, ndev)
+        by = lm_bytes(cfg, cell, ndev)
+    elif family == "gnn":
+        fl = gnn_flops(cfg, cell, ndev)
+        by = gnn_bytes(cfg, cell, ndev)
+    else:
+        fl = recsys_flops(cfg, cell, ndev)
+        by = recsys_bytes(cfg, cell, ndev)
+    flops_dev = fl["flops"] / ndev
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = by / HBM_BW
+    coll = rec["collectives_bytes"].get("total", 0.0)
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_dom = terms[dominant]
+    useful = fl["model_flops"] / max(fl["flops"], 1.0)
+    util = (fl["model_flops"] / ndev / PEAK_FLOPS) / max(t_dom, 1e-30)
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        t_comp=t_comp, t_mem=t_mem, t_coll=t_coll, dominant=dominant,
+        model_flops=fl["model_flops"], analytic_flops=fl["flops"],
+        hlo_flops_dev=rec["cost"]["hlo_flops_per_device"],
+        useful_ratio=useful,
+        peak_gib=rec["memory"]["peak_est_bytes"] / 2**30,
+        util_vs_dominant=util)
+
+
+def build_table(dryrun_json: str) -> list[RooflineRow]:
+    rows = []
+    for rec in json.load(open(dryrun_json)):
+        r = analyze_record(rec)
+        if r is not None:
+            rows.append(r)
+    return rows
+
+
+def format_markdown(rows: list[RooflineRow]) -> str:
+    out = ["| arch | shape | mesh | T_comp (ms) | T_mem (ms) | T_coll (ms) | "
+           "bound | useful/executed | roofline util | peak GiB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.t_comp*1e3:.2f} | "
+            f"{r.t_mem*1e3:.2f} | {r.t_coll*1e3:.2f} | {r.dominant} | "
+            f"{r.useful_ratio:.2f} | {r.util_vs_dominant:.2f} | "
+            f"{r.peak_gib:.2f} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--markdown", default="results/roofline.md")
+    args = ap.parse_args(argv)
+    rows = build_table(args.dryrun)
+    json.dump([r.as_dict() for r in rows], open(args.out, "w"), indent=1)
+    md = format_markdown(rows)
+    open(args.markdown, "w").write(md + "\n")
+    print(md)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,53 @@
+"""Table 2 reproduction: average train + inference wall time per method at
+target dim = 50% of the original dim (paper protocol), averaged over the
+four dataset analogues. MDS capped at its max_train (paper capped at 5000)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .table1_knn import GRID, run_method
+
+
+def run(n: int = 4096, rae_steps: int = 3000, methods=("pca", "rae", "umap",
+                                                       "isomap", "mds")):
+    from repro.data import synthetic
+
+    agg = {m: {"train": [], "infer": []} for m in methods}
+    for ds_name, (dim, _) in GRID.items():
+        data = synthetic.paper_dataset(ds_name, n)
+        tr, te = synthetic.train_test_split(data)
+        m_target = dim // 2
+        for method in methods:
+            _, t_train, t_infer = run_method(method, tr, te, m_target,
+                                             rae_steps, 1e-2)
+            agg[method]["train"].append(t_train)
+            agg[method]["infer"].append(t_infer)
+            print(f"  {ds_name} {method:7s} train={t_train:8.2f}s "
+                  f"infer={t_infer:.4f}s")
+    rows = [dict(method=m, train_s=round(float(np.mean(v["train"])), 2),
+                 infer_s=round(float(np.mean(v["infer"])), 4))
+            for m, v in agg.items()]
+    return rows
+
+
+def main():
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--rae-steps", type=int, default=3000)
+    ap.add_argument("--out", default="results/table2.json")
+    args = ap.parse_args()
+    rows = run(n=args.n, rae_steps=args.rae_steps)
+    os.makedirs("results", exist_ok=True)
+    json.dump(rows, open(args.out, "w"), indent=1)
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

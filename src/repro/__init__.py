@@ -1,0 +1,2 @@
+"""repro — RAEX: k-NN-preserving embedding compression + vector search at pod scale."""
+__version__ = "1.0.0"

@@ -1,0 +1,22 @@
+from .base import (
+    EmbeddingTableSpec,
+    GNNConfig,
+    RAEConfig,
+    RecsysConfig,
+    ShapeCell,
+    TransformerConfig,
+)
+from .registry import ARCH_IDS, all_cells, get_arch, get_shapes
+
+__all__ = [
+    "ARCH_IDS",
+    "EmbeddingTableSpec",
+    "GNNConfig",
+    "RAEConfig",
+    "RecsysConfig",
+    "ShapeCell",
+    "TransformerConfig",
+    "all_cells",
+    "get_arch",
+    "get_shapes",
+]

@@ -1,0 +1,22 @@
+"""autoint [arXiv:1810.11921; paper]
+
+n_sparse=39 embed_dim=16 n_attn_layers=3 n_heads=2 d_attn=32,
+interaction=multi-head self-attention over field embeddings (Criteo-style).
+Per-field hashed vocab 200k (39 fields).
+"""
+from .base import EmbeddingTableSpec, RecsysConfig
+
+CONFIG = RecsysConfig(
+    name="autoint",
+    kind="autoint",
+    embed_dim=16,
+    n_fields=39,
+    n_attn_layers=3,
+    n_heads=2,
+    d_attn=32,
+    mlp_dims=(),
+    tables=tuple(
+        EmbeddingTableSpec(f"field_{i}", vocab=200_000, dim=16) for i in range(39)
+    ),
+)
+FAMILY = "recsys"

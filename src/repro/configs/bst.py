@@ -1,0 +1,25 @@
+"""bst — Behavior Sequence Transformer (Alibaba) [arXiv:1905.06874; paper]
+
+embed_dim=32 seq_len=20 n_blocks=1 n_heads=8 mlp=1024-512-256,
+interaction=transformer over the user's behavior sequence + target item.
+
+Table sizes follow the paper's Taobao setting scaled to public-magnitude
+vocabularies (items ~4M, categories 10k, users hashed 1M).
+"""
+from .base import EmbeddingTableSpec, RecsysConfig
+
+CONFIG = RecsysConfig(
+    name="bst",
+    kind="bst",
+    embed_dim=32,
+    seq_len=20,
+    n_blocks=1,
+    n_heads=8,
+    mlp_dims=(1024, 512, 256),
+    tables=(
+        EmbeddingTableSpec("item", vocab=4_000_000, dim=32),
+        EmbeddingTableSpec("category", vocab=10_000, dim=32),
+        EmbeddingTableSpec("user", vocab=1_000_000, dim=32),
+    ),
+)
+FAMILY = "recsys"

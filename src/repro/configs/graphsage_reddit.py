@@ -1,0 +1,15 @@
+"""graphsage-reddit [arXiv:1706.02216; paper]
+
+n_layers=2 d_hidden=128 aggregator=mean sample_sizes=25-10.
+"""
+from .base import GNNConfig
+
+CONFIG = GNNConfig(
+    name="graphsage-reddit",
+    n_layers=2,
+    d_hidden=128,
+    aggregator="mean",
+    sample_sizes=(25, 10),
+    n_classes=41,
+)
+FAMILY = "gnn"

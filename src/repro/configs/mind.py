@@ -1,0 +1,21 @@
+"""mind [arXiv:1904.08030; unverified]
+
+embed_dim=64 n_interests=4 capsule_iters=3 interaction=multi-interest
+(dynamic-routing capsules over the user behavior sequence).
+"""
+from .base import EmbeddingTableSpec, RecsysConfig
+
+CONFIG = RecsysConfig(
+    name="mind",
+    kind="mind",
+    embed_dim=64,
+    n_interests=4,
+    capsule_iters=3,
+    hist_len=50,
+    mlp_dims=(256, 64),
+    tables=(
+        EmbeddingTableSpec("item", vocab=2_000_000, dim=64),
+        EmbeddingTableSpec("category", vocab=5_000, dim=64),
+    ),
+)
+FAMILY = "recsys"

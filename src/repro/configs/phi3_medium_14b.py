@@ -1,0 +1,22 @@
+"""phi3-medium-14b [arXiv:2404.14219; unverified]
+
+40L d_model=5120 40H (GQA kv=10) d_ff=17920 vocab=100352 — RoPE SwiGLU GQA.
+40 heads is not divisible by TP=16 -> attention_scheme resolves to
+context-parallel (DESIGN.md §5); hillclimb pads heads to 48 for head-TP.
+"""
+from .base import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="phi3-medium-14b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=10,
+    d_head=128,
+    d_ff=17920,
+    vocab_size=100352,
+    rope_theta=10_000.0,
+    qkv_bias=False,
+)
+FAMILY = "lm"

@@ -1,0 +1,21 @@
+"""qwen2-7b [arXiv:2407.10671; hf]
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064 — GQA, QKV bias.
+28 heads not divisible by TP=16 -> context-parallel attention by default.
+"""
+from .base import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="qwen2-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_head=128,
+    d_ff=18944,
+    vocab_size=152064,
+    rope_theta=1_000_000.0,
+    qkv_bias=True,
+)
+FAMILY = "lm"

@@ -1,0 +1,23 @@
+"""qwen3-moe-235b-a22b [hf:Qwen/Qwen3-30B-A3B family scaling; hf]
+
+94L d_model=4096 64H (GQA kv=4) per-expert d_ff=1536 vocab=151936, MoE 128e top-8.
+"""
+from .base import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    d_head=128,
+    d_ff=1536,
+    vocab_size=151936,
+    n_experts=128,
+    moe_top_k=8,
+    rope_theta=1_000_000.0,
+    qkv_bias=False,
+    qk_norm=True,
+)
+FAMILY = "lm"

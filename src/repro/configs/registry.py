@@ -1,0 +1,48 @@
+"""Arch registry: ``--arch <id>`` -> (config, family, shape set)."""
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+from .base import ShapeCell
+from .shapes import shapes_for_family
+
+_ARCH_MODULES = {
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "qwen2-7b": "qwen2_7b",
+    "llama3.2-1b": "llama3_2_1b",
+    "graphsage-reddit": "graphsage_reddit",
+    "bst": "bst",
+    "two-tower-retrieval": "two_tower_retrieval",
+    "autoint": "autoint",
+    "mind": "mind",
+    "rae_paper": "rae_paper",
+}
+
+ARCH_IDS = tuple(k for k in _ARCH_MODULES if k != "rae_paper")
+
+
+def get_arch(arch_id: str) -> tuple[Any, str]:
+    """Return (config, family) for an arch id."""
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    return mod.CONFIG, mod.FAMILY
+
+
+def get_shapes(arch_id: str) -> tuple[ShapeCell, ...]:
+    _, family = get_arch(arch_id)
+    if family == "rae":
+        return ()
+    return shapes_for_family(family)
+
+
+def all_cells() -> list[tuple[str, ShapeCell]]:
+    """All 40 (arch, shape) cells."""
+    out = []
+    for arch_id in ARCH_IDS:
+        for cell in get_shapes(arch_id):
+            out.append((arch_id, cell))
+    return out

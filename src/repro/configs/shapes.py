@@ -1,0 +1,43 @@
+"""The assigned input-shape sets, one per architecture family (40 cells total)."""
+from __future__ import annotations
+
+from .base import ShapeCell
+
+# --- LM-family transformers: seq_len x global_batch -------------------------
+LM_SHAPES = (
+    ShapeCell(name="train_4k", kind="train", seq_len=4096, global_batch=256),
+    ShapeCell(name="prefill_32k", kind="prefill", seq_len=32768, global_batch=32),
+    ShapeCell(name="decode_32k", kind="decode", seq_len=32768, global_batch=128),
+    # long_500k is *decode* (one token vs a 524288-token KV cache): O(S)/step
+    # even for full attention -> runnable for all five LM archs (DESIGN.md §9).
+    ShapeCell(name="long_500k", kind="decode", seq_len=524288, global_batch=1),
+)
+
+# --- GNN (graphsage-reddit) --------------------------------------------------
+GNN_SHAPES = (
+    # cora-like full batch
+    ShapeCell(name="full_graph_sm", kind="full_graph", n_nodes=2708, n_edges=10556,
+              d_feat=1433, extras={"n_classes": 7}),
+    # reddit sampled training
+    ShapeCell(name="minibatch_lg", kind="minibatch", n_nodes=232965, n_edges=114_615_892,
+              d_feat=602, batch_nodes=1024, fanout=(15, 10), extras={"n_classes": 41}),
+    # ogbn-products full batch
+    ShapeCell(name="ogb_products", kind="full_graph", n_nodes=2_449_029,
+              n_edges=61_859_140, d_feat=100, extras={"n_classes": 47}),
+    # batched small graphs
+    ShapeCell(name="molecule", kind="batched_graphs", n_nodes=30, n_edges=64,
+              d_feat=64, graphs_per_batch=128, extras={"n_classes": 2}),
+)
+
+# --- RecSys ------------------------------------------------------------------
+RECSYS_SHAPES = (
+    ShapeCell(name="train_batch", kind="train", global_batch=65536),
+    ShapeCell(name="serve_p99", kind="serve", global_batch=512),
+    ShapeCell(name="serve_bulk", kind="serve", global_batch=262144),
+    ShapeCell(name="retrieval_cand", kind="retrieval", global_batch=1,
+              n_candidates=1_000_000),
+)
+
+
+def shapes_for_family(family: str) -> tuple[ShapeCell, ...]:
+    return {"lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": RECSYS_SHAPES}[family]

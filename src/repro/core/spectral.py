@@ -1,0 +1,42 @@
+"""Singular-spectrum analysis of the encoder (paper Section 3.3 / Figure 1)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SpectralStats(NamedTuple):
+    sigma_max: jax.Array
+    sigma_min: jax.Array
+    condition_number: jax.Array  # kappa(W) = sigma_max / sigma_min  (Eq. 16)
+    frobenius: jax.Array         # ||W||_F  (>= sigma_max, Eq. 8)
+    effective_rank: jax.Array    # exp(entropy of normalized spectrum)
+    singular_values: jax.Array
+
+
+def singular_values(w: jax.Array) -> jax.Array:
+    return jnp.linalg.svd(w.astype(jnp.float32), compute_uv=False)
+
+
+def analyze(w: jax.Array) -> SpectralStats:
+    """Spectral stats of a (m x n) or (n x m) transformation matrix."""
+    s = singular_values(w)
+    smax = s[0]
+    smin = s[-1]
+    p = s / (jnp.sum(s) + 1e-30)
+    eff_rank = jnp.exp(-jnp.sum(p * jnp.log(p + 1e-30)))
+    return SpectralStats(
+        sigma_max=smax,
+        sigma_min=smin,
+        condition_number=smax / jnp.maximum(smin, 1e-30),
+        frobenius=jnp.sqrt(jnp.sum(jnp.square(s))),
+        effective_rank=eff_rank,
+        singular_values=s,
+    )
+
+
+def condition_number(w: jax.Array) -> jax.Array:
+    s = singular_values(w)
+    return s[0] / jnp.maximum(s[-1], 1e-30)

@@ -1,0 +1,104 @@
+"""Operational form of the paper's theory (Section 3.3 + Appendix A).
+
+* Rayleigh quotient R(M, x) and its eigenvalue bounds (Eq. 12-13).
+* The singular-value norm bound  sigma_min ||x|| <= ||Wx|| <= sigma_max ||x||
+  (Eq. 15), checked empirically.
+* The k-NN preservation *certificate* from Eq. 16: for an anchor a with
+  neighbor i and non-neighbor j, if  d(a,j) / d(a,i) > kappa(W)  then the
+  order d(Wa,Wi) <= d(Wa,Wj) is provably preserved. ``certified_fraction``
+  reports how many (i, j) relations the bound certifies — the quantitative
+  bridge between kappa(W) and P_overall the paper argues qualitatively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .spectral import singular_values
+
+
+def rayleigh_quotient(m: jax.Array, x: jax.Array) -> jax.Array:
+    """R(M, x) = x^T M x / x^T x for symmetric M (Eq. 12)."""
+    x = x.astype(jnp.float32)
+    num = jnp.einsum("...i,ij,...j->...", x, m.astype(jnp.float32), x)
+    den = jnp.einsum("...i,...i->...", x, x)
+    return num / jnp.maximum(den, 1e-30)
+
+
+def norm_upper_bound_holds(w: jax.Array, xs: jax.Array, rtol: float = 1e-4) -> jax.Array:
+    """||Wx|| <= sigma_max ||x|| (Eq. 15 upper half) — holds for ALL x."""
+    s = singular_values(w)
+    xs = xs.astype(jnp.float32)
+    xn = jnp.linalg.norm(xs, axis=-1)
+    wn = jnp.linalg.norm(xs @ w.astype(jnp.float32).T, axis=-1)
+    return jnp.all(wn <= s[0] * xn * (1 + rtol) + 1e-6)
+
+
+def norm_bounds_hold(w: jax.Array, xs: jax.Array, rtol: float = 1e-3) -> jax.Array:
+    """Verify Eq. 15 on a batch: sigma_min||x|| <= ||Wx|| <= sigma_max||x||.
+
+    Precision note the paper glosses over: for a wide W in R^{m x n} (m < n)
+    the eigenvalues of W^T W are {sigma_i^2} ∪ {0 with multiplicity n-m} —
+    W has a nullspace, so the *lower* bound with sigma_min = smallest
+    NONZERO singular value only holds for x in row(W) = range(W^T). This
+    function therefore checks the lower bound on the row-space projection of
+    each x (the component W actually acts on); the upper bound is global.
+    Empirically embedding corpora concentrate near the learned row space, so
+    the effective distortion stays within [sigma_min, sigma_max] — which is
+    what Figure 1 of the paper measures.
+
+    w maps R^n -> R^m as f(x) = W x, i.e. w has shape [m, n]; xs is [B, n].
+    """
+    w32 = w.astype(jnp.float32)
+    s = singular_values(w)
+    smax, smin = s[0], s[-1]
+    xs = xs.astype(jnp.float32)
+    # project onto row(W): P = W^+ W = V_r V_r^T (via SVD)
+    _, _, vt = jnp.linalg.svd(w32, full_matrices=False)
+    xr = (xs @ vt.T) @ vt
+    xn = jnp.linalg.norm(xr, axis=-1)
+    wn = jnp.linalg.norm(xr @ w32.T, axis=-1)
+    upper_all = norm_upper_bound_holds(w, xs, rtol)
+    lower = jnp.all(wn >= smin * xn * (1 - rtol) - 1e-6)
+    upper = jnp.all(wn <= smax * xn * (1 + rtol) + 1e-6)
+    return upper_all & lower & upper
+
+
+def empirical_distortion(w: jax.Array, xs: jax.Array) -> dict[str, jax.Array]:
+    """Observed ||Wx||/||x|| extremes vs the singular-value bounds."""
+    s = singular_values(w)
+    xs = xs.astype(jnp.float32)
+    ratio = (jnp.linalg.norm(xs @ w.astype(jnp.float32).T, axis=-1)
+             / jnp.maximum(jnp.linalg.norm(xs, axis=-1), 1e-30))
+    return {
+        "ratio_max": ratio.max(),
+        "ratio_min": ratio.min(),
+        "sigma_max": s[0],
+        "sigma_min": s[-1],
+        "kappa": s[0] / jnp.maximum(s[-1], 1e-30),
+    }
+
+
+def certified_fraction(w: jax.Array, x: jax.Array, k: int, n_far: int = 32,
+                       key: jax.Array | None = None) -> jax.Array:
+    """Fraction of (neighbor, non-neighbor) relations certified by Eq. 16.
+
+    For each anchor with k-NN distances d_i and sampled non-neighbor
+    distances d_j: the relation is certified iff d_j / d_i > kappa(W).
+    """
+    x = x.astype(jnp.float32)
+    n = x.shape[0]
+    d2 = (jnp.sum(x * x, 1)[:, None] - 2 * x @ x.T + jnp.sum(x * x, 1)[None, :])
+    d2 = jnp.maximum(d2, 0.0) + jnp.eye(n) * 1e30
+    d = jnp.sqrt(d2)
+    neg_d, idx = jax.lax.top_k(-d, k)  # k nearest
+    d_near = -neg_d  # [n, k], ascending? top_k of -d gives nearest first
+    kth = d_near[:, -1:]
+    s = singular_values(w)
+    kappa = s[0] / jnp.maximum(s[-1], 1e-30)
+    # non-neighbors: every column with d > kth
+    far_mask = d > kth  # [n, n]
+    # certified pairs: d_far / d_near_i > kappa for ALL i -> use the largest
+    # near distance (kth) as the binding constraint per anchor
+    certified = (d / jnp.maximum(kth, 1e-30) > kappa) & far_mask
+    return jnp.sum(certified) / jnp.maximum(jnp.sum(far_mask), 1)

@@ -1,0 +1,158 @@
+"""Synthetic corpora for every substrate (offline container; DESIGN.md §6).
+
+``embedding_corpus`` is the paper-dataset analogue: anisotropic low-rank
+Gaussian mixture with a power-law singular spectrum and per-cluster rotations.
+This is the regime where PCA and RAE genuinely differ — information density
+varies by direction, so non-orthogonal bases can beat variance-optimal ones
+(the paper's §3.2 argument).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+# The paper's four datasets, by embedding dimension.
+PAPER_DATASETS = {
+    "imagenet_like": dict(dim=384, n_clusters=24, intrinsic=96),
+    "celeba_like": dict(dim=512, n_clusters=16, intrinsic=128),
+    "imdb_like": dict(dim=768, n_clusters=8, intrinsic=160),
+    "flickr_like": dict(dim=1024, n_clusters=12, intrinsic=224),
+}
+
+
+def embedding_corpus(
+    n: int,
+    dim: int,
+    n_clusters: int = 8,
+    intrinsic: Optional[int] = None,
+    spectrum_decay: float = 0.7,
+    noise: float = 0.02,
+    normalize: bool = False,
+    seed: int = 0,
+) -> np.ndarray:
+    """[n, dim] float32 embeddings: mixture of rotated low-rank Gaussians."""
+    rng = np.random.default_rng(seed)
+    r = intrinsic or max(dim // 4, 8)
+    # Real transformer/CLIP embeddings share one dominant anisotropic
+    # spectrum across the whole corpus (the regime where variance-aware DR
+    # beats data-oblivious JL projections); clusters are centers within the
+    # dominant subspace plus small per-cluster basis perturbations.
+    spec = (np.arange(1, r + 1, dtype=np.float32) ** (-spectrum_decay))
+    shared, _ = np.linalg.qr(rng.normal(size=(dim, r)).astype(np.float32))
+    out = np.empty((n, dim), np.float32)
+    sizes = rng.multinomial(n, np.ones(n_clusters) / n_clusters)
+    start = 0
+    for c, sz in enumerate(sizes):
+        if sz == 0:
+            continue
+        # mild per-cluster rotation of the shared basis
+        pert = rng.normal(scale=0.15, size=(dim, r)).astype(np.float32)
+        basis, _ = np.linalg.qr(shared + pert)
+        # centers live in the dominant half of the shared subspace
+        cz = np.zeros(r, np.float32)
+        cz[: max(r // 2, 1)] = rng.normal(
+            scale=1.5, size=max(r // 2, 1)) * spec[: max(r // 2, 1)]
+        center = shared @ cz
+        z = rng.normal(size=(sz, r)).astype(np.float32) * spec[None, :]
+        x = z @ basis.T + center[None, :]
+        x += rng.normal(scale=noise, size=x.shape).astype(np.float32)
+        out[start:start + sz] = x
+        start += sz
+    rng.shuffle(out)
+    if normalize:
+        out /= np.maximum(np.linalg.norm(out, axis=1, keepdims=True), 1e-12)
+    return out
+
+
+def paper_dataset(name: str, n: int, seed: int = 0, **overrides) -> np.ndarray:
+    kw = dict(PAPER_DATASETS[name])
+    kw.update(overrides)
+    return embedding_corpus(n=n, seed=seed, **kw)
+
+
+def train_test_split(x: np.ndarray, test_frac: float = 0.1, seed: int = 0
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """The paper's 9:1 split."""
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(x.shape[0])
+    n_test = int(round(x.shape[0] * test_frac))
+    return x[idx[n_test:]], x[idx[:n_test]]
+
+
+# ---------------------------------------------------------------------------
+# LM token streams
+# ---------------------------------------------------------------------------
+def token_batch(batch: int, seq: int, vocab: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    # zipfian token distribution (realistic softmax pressure)
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = 1.0 / ranks
+    p /= p.sum()
+    toks = rng.choice(vocab, size=(batch, seq + 1), p=p).astype(np.int32)
+    return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# Graphs
+# ---------------------------------------------------------------------------
+@dataclass
+class Graph:
+    """CSR graph + features. The CSR arrays power the neighbor sampler."""
+
+    n_nodes: int
+    features: np.ndarray       # [N, d]
+    labels: np.ndarray         # [N]
+    edge_src: np.ndarray       # [E] (COO, sorted by src)
+    edge_dst: np.ndarray       # [E]
+    indptr: np.ndarray         # [N+1] CSR offsets into edge_dst
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.edge_src)
+
+
+def random_graph(n_nodes: int, avg_degree: int, d_feat: int, n_classes: int,
+                 seed: int = 0) -> Graph:
+    """Power-law-ish random graph with community-correlated features."""
+    rng = np.random.default_rng(seed)
+    n_edges = n_nodes * avg_degree
+    # preferential-attachment-flavored degree distribution
+    w = rng.pareto(2.0, n_nodes) + 1.0
+    p = w / w.sum()
+    src = rng.choice(n_nodes, n_edges, p=p).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    # communities drive labels + features
+    comm = rng.integers(0, n_classes, n_nodes).astype(np.int32)
+    centers = rng.normal(size=(n_classes, d_feat)).astype(np.float32)
+    feats = centers[comm] + rng.normal(scale=0.5, size=(n_nodes, d_feat)).astype(np.float32)
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.add.at(indptr, src + 1, 1)
+    indptr = np.cumsum(indptr)
+    return Graph(n_nodes=n_nodes, features=feats, labels=comm,
+                 edge_src=src, edge_dst=dst, indptr=indptr)
+
+
+# ---------------------------------------------------------------------------
+# RecSys click logs
+# ---------------------------------------------------------------------------
+def recsys_batch(batch: int, table_vocabs: dict[str, int], hist_len: int = 0,
+                 n_fields: int = 0, field_vocab: int = 200_000,
+                 seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    out: dict = {}
+    for name, vocab in table_vocabs.items():
+        out[name] = rng.integers(0, vocab, batch).astype(np.int32)
+    if hist_len:
+        vocab = table_vocabs.get("item", table_vocabs.get("hist_item", 1000))
+        out["hist"] = rng.integers(0, vocab, (batch, hist_len)).astype(np.int32)
+        out["hist_len"] = rng.integers(1, hist_len + 1, batch).astype(np.int32)
+    if n_fields:
+        out["fields"] = rng.integers(0, field_vocab,
+                                     (batch, n_fields)).astype(np.int32)
+    out["label"] = (rng.random(batch) < 0.2).astype(np.float32)
+    return out

@@ -1,0 +1,3 @@
+from . import checkpoint, compression, fault_tolerance, partitioning
+from .checkpoint import CheckpointManager
+from .fault_tolerance import StragglerWatchdog, TrainingSupervisor

@@ -1,0 +1,98 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 512+ chips the pod-boundary gradient all-reduce crosses the slower DCN
+links; compressing the payload is the standard mitigation:
+
+* **bf16**: cast grads to bf16 before the all-reduce, accumulate the result
+  into fp32 — halves DP traffic at negligible quality cost (the default for
+  the ``pod`` axis here).
+* **int8 + error feedback**: per-tensor symmetric int8 quantization with a
+  local residual carried to the next step (1-bit/8-bit SGD literature:
+  Seide'14, Karimireddy'19 EF-SGD) — 4x traffic reduction; the residual
+  keeps it convergent.
+
+These helpers are shard_map-level (they wrap an explicit ``psum``); the
+supervisor's explicit-DP path uses them, and tests verify the EF estimator
+is unbiased-in-the-limit (residual norm stays bounded).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def psum_bf16(tree: Any, axis_name) -> Any:
+    """All-reduce in bf16, return fp32."""
+    return jax.tree.map(
+        lambda g: jax.lax.psum(g.astype(jnp.bfloat16), axis_name)
+        .astype(jnp.float32),
+        tree)
+
+
+class Int8Compressed(NamedTuple):
+    q: jax.Array      # int8 payload
+    scale: jax.Array  # per-tensor scale
+
+
+def int8_compress(g: jax.Array) -> Int8Compressed:
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return Int8Compressed(q=q, scale=scale)
+
+
+def int8_decompress(c: Int8Compressed) -> jax.Array:
+    return c.q.astype(jnp.float32) * c.scale
+
+
+def psum_int8(tree: Any, axis_name) -> Any:
+    """Quantize -> sum int32 -> dequantize with the summed scale envelope.
+
+    Per-shard scales differ, so the sum uses the max scale (gathered) —
+    conservative but correct."""
+
+    def reduce_one(g):
+        c = int8_compress(g)
+        smax = jax.lax.pmax(c.scale, axis_name)
+        # requantize against the common scale so integer sums align
+        q = jnp.clip(jnp.round(g / smax), -127, 127).astype(jnp.int32)
+        total = jax.lax.psum(q, axis_name)
+        return total.astype(jnp.float32) * smax
+
+    return jax.tree.map(reduce_one, tree)
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any  # pytree like grads
+
+
+def ef_init(grads_like: Any) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        residual=jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                              grads_like))
+
+
+def ef_compress_psum(grads: Any, state: ErrorFeedbackState, axis_name
+                     ) -> tuple[Any, ErrorFeedbackState]:
+    """EF-int8: add residual, quantize+reduce, keep the quantization error."""
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        c = int8_compress(corrected)
+        sent = int8_decompress(c)
+        new_r = corrected - sent
+        smax = jax.lax.pmax(c.scale, axis_name)
+        q = jnp.clip(jnp.round(corrected / smax), -127, 127).astype(jnp.int32)
+        total = jax.lax.psum(q, axis_name).astype(jnp.float32) * smax
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        return total / n, new_r
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(state.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    reduced = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_state = ErrorFeedbackState(
+        residual=jax.tree.unflatten(tdef, [o[1] for o in outs]))
+    return reduced, new_state

@@ -1,0 +1,246 @@
+"""Logical-axis partitioning: one schema drives both init and sharding.
+
+Every model declares its parameters as a pytree of :class:`ParamDef` (shape,
+dtype, logical axis names, initializer). From that single schema we derive
+  * ``init_from_schema``  — materialized parameter pytree,
+  * ``abstract_from_schema`` — ShapeDtypeStructs (dry-run, no allocation),
+  * ``pspecs_from_schema`` — PartitionSpecs under a rule table,
+so init and sharding can never drift apart.
+
+Rule tables map logical axis names to mesh axes. A logical axis whose size is
+not divisible by the product of its mapped mesh axes silently degrades to
+replication (recorded in ``ShardingReport`` so the dry-run surfaces it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Union[str, tuple[str, ...], None]
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    logical: tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | embed
+    scale: Optional[float] = None  # stddev override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+# Default rules for the production mesh (DESIGN.md §5). "batch"-like logical
+# axes shard over the data(+pod) axes; feature/expert/vocab axes over model.
+def default_rules(multi_pod: bool = False) -> dict[str, MeshAxes]:
+    data: MeshAxes = ("pod", "data") if multi_pod else ("data",)
+    return {
+        # activations
+        "batch": data,
+        "tokens": data + ("model",),   # flattened batch*seq token streams
+        "inbatch_col": "model",        # in-batch softmax negatives dim
+        "seq_sp": "model",       # sequence-parallel residual stream / CP q-chunks
+        "kv_seq": "model",       # decode KV cache sequence dim
+        "kv_seq_all": (data + ("model",)) if isinstance(data, tuple) else ("data", "model"),
+        "heads": "model",
+        "db_rows": data + ("model",) if isinstance(data, tuple) else ("data", "model"),
+        # weights
+        "vocab": "model",
+        "mlp": "model",
+        "experts": "model",
+        "qkv_out": "model",      # q/k/v projection output feature dim
+        "embed_fsdp": "data",    # ZeRO-3 style weight shard along d_model
+        "stack": None,           # scanned layer stack
+        # table rows shard over "model" ONLY: the masked-psum lookup reduces
+        # over the row axes, which must be disjoint from the ids' batch axes
+        # (data); a (data, model) row sharding would psum across batch
+        # shards. Billion-row tables that exceed model-axis HBM would need
+        # the routed (all-to-all) lookup — documented in DESIGN.md.
+        "table_rows": "model",
+    }
+
+
+def _flat_axes(mesh_axes: MeshAxes) -> tuple[str, ...]:
+    if mesh_axes is None:
+        return ()
+    if isinstance(mesh_axes, str):
+        return (mesh_axes,)
+    return tuple(mesh_axes)
+
+
+@dataclass
+class ShardingReport:
+    """Collects divisibility fallbacks so the dry-run can print them."""
+
+    replicated: list[tuple[str, str, int, int]] = field(default_factory=list)
+
+    def note(self, path: str, logical: str, dim: int, divisor: int) -> None:
+        self.replicated.append((path, logical, dim, divisor))
+
+    def __str__(self) -> str:
+        if not self.replicated:
+            return "sharding: all logical axes mapped"
+        lines = ["sharding fallbacks (axis replicated, dim % mesh != 0):"]
+        for path, logical, dim, div in self.replicated:
+            lines.append(f"  {path}: {logical} dim={dim} mesh={div}")
+        return "\n".join(lines)
+
+
+def usable_axes(
+    dim: int,
+    name: Optional[str],
+    rules: dict[str, MeshAxes],
+    mesh: Mesh,
+    used: Optional[set[str]] = None,
+) -> tuple[str, ...]:
+    """Mesh axes a logical name actually shards `dim` over, with progressive
+    fallback: if the full axis product doesn't divide `dim`, trailing axes are
+    dropped one at a time (e.g. batch=128 on ("pod","data","model")=512 ->
+    ("pod","data")=32)."""
+    if name is None or name not in rules or rules[name] is None:
+        return ()
+    axes = _flat_axes(rules[name])
+    axes = tuple(a for a in axes if a in mesh.shape
+                 and (used is None or a not in used))
+    while axes:
+        divisor = math.prod(mesh.shape[a] for a in axes)
+        if divisor > 1 and dim % divisor == 0:
+            return axes
+        axes = axes[:-1]
+    return ()
+
+
+def spec_for(
+    pdef_shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    rules: dict[str, MeshAxes],
+    mesh: Mesh,
+    report: Optional[ShardingReport] = None,
+    path: str = "",
+) -> P:
+    """PartitionSpec for one tensor under a rule table, with divisibility fallback."""
+    used: set[str] = set()
+    entries: list[MeshAxes] = []
+    for dim, name in zip(pdef_shape, logical):
+        axes = usable_axes(dim, name, rules, mesh, used)
+        if not axes:
+            if name is not None and name in rules and rules[name] is not None \
+                    and report is not None:
+                full = _flat_axes(rules[name])
+                div = math.prod(mesh.shape.get(a, 1) for a in full)
+                if div > 1:
+                    report.note(path, name, dim, div)
+            entries.append(None)
+            continue
+        used.update(axes)
+        entries.append(axes if len(axes) > 1 else axes[0])
+    # trim trailing Nones for tidy specs
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# Schema traversal
+# ---------------------------------------------------------------------------
+
+def _is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _tree_map_defs(fn: Callable[[str, ParamDef], Any], schema: Any, prefix: str = "") -> Any:
+    if _is_def(schema):
+        return fn(prefix, schema)
+    if isinstance(schema, dict):
+        return {k: _tree_map_defs(fn, v, f"{prefix}/{k}" if prefix else str(k))
+                for k, v in schema.items()}
+    if isinstance(schema, (list, tuple)):
+        return type(schema)(
+            _tree_map_defs(fn, v, f"{prefix}/{i}") for i, v in enumerate(schema))
+    raise TypeError(f"bad schema node at {prefix}: {type(schema)}")
+
+
+def abstract_from_schema(schema: Any) -> Any:
+    return _tree_map_defs(
+        lambda _, d: jax.ShapeDtypeStruct(d.shape, d.dtype), schema)
+
+
+def init_from_schema(schema: Any, key: jax.Array) -> Any:
+    """Materialize parameters. Keys are derived per-leaf from the path hash so
+    initialization is order-independent (stable across schema refactors)."""
+
+    def make(path: str, d: ParamDef):
+        leaf_key = jax.random.fold_in(key, zlib_crc(path))
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        if d.init == "normal":
+            std = d.scale if d.scale is not None else 0.02
+            return (jax.random.normal(leaf_key, d.shape) * std).astype(d.dtype)
+        if d.init == "embed":
+            std = d.scale if d.scale is not None else 0.02
+            return (jax.random.normal(leaf_key, d.shape) * std).astype(d.dtype)
+        if d.init == "fan_in":
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale if d.scale is not None else 1.0 / math.sqrt(fan_in)
+            return (jax.random.normal(leaf_key, d.shape) * std).astype(d.dtype)
+        raise ValueError(f"unknown init {d.init!r} at {path}")
+
+    return _tree_map_defs(make, schema)
+
+
+def pspecs_from_schema(
+    schema: Any, rules: dict[str, MeshAxes], mesh: Mesh,
+    report: Optional[ShardingReport] = None,
+) -> Any:
+    return _tree_map_defs(
+        lambda path, d: spec_for(d.shape, d.logical, rules, mesh, report, path),
+        schema)
+
+
+def shardings_from_pspecs(pspecs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def zlib_crc(s: str) -> int:
+    import zlib
+
+    return zlib.crc32(s.encode()) & 0x7FFFFFFF
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding helpers
+# ---------------------------------------------------------------------------
+
+def with_logical(x: jax.Array, logical: tuple[Optional[str], ...],
+                 rules: dict[str, MeshAxes], mesh: Mesh) -> jax.Array:
+    """``lax.with_sharding_constraint`` by logical axis names."""
+    spec = spec_for(x.shape, logical, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_spec(mesh: Mesh, rules: dict[str, MeshAxes], *trailing: Optional[str]) -> P:
+    """Spec for an activation whose dim0 is the global batch."""
+    axes = _flat_axes(rules.get("batch"))
+    lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return P(lead, *trailing)

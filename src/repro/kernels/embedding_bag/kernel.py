@@ -1,0 +1,64 @@
+"""EmbeddingBag Pallas kernel via scalar-prefetch row gather.
+
+JAX has no torch.nn.EmbeddingBag / FBGEMM TBE; the framework's jnp fallback
+is take + segment_sum (models.common). On TPU the idiomatic kernel uses
+*scalar prefetch*: the bag indices are prefetched into SMEM and drive the
+BlockSpec index_map, so each grid step DMAs exactly one embedding row
+HBM->VMEM — no [B, L, d] gather ever materializes (the jnp path writes and
+re-reads it, tripling HBM traffic for the dominant op of every recsys cell).
+
+Grid (B, L): bag-position axis innermost; the [d] accumulator lives in VMEM
+scratch; masked positions (l >= lengths[b]) still DMA a (clamped) row but
+contribute zero — branchless, fixed schedule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, len_ref, row_ref, o_ref, acc_ref, *, l: int,
+            mode: str):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = (j < len_ref[b]).astype(jnp.float32)
+    acc_ref[...] += w * row_ref[...].astype(jnp.float32)
+
+    @pl.when(j == l - 1)
+    def _():
+        acc = acc_ref[...]
+        if mode == "mean":
+            acc = acc / jnp.maximum(len_ref[b].astype(jnp.float32), 1.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def embedding_bag_pallas(table: jax.Array, ids: jax.Array, lengths: jax.Array,
+                         *, mode: str = "mean",
+                         interpret: bool = False) -> jax.Array:
+    bsz, l = ids.shape
+    v, d = table.shape
+    kernel = functools.partial(_kernel, l=l, mode=mode)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # ids (flattened) + lengths
+        grid=(bsz, l),
+        in_specs=[
+            # one table row per grid step, selected by the prefetched id
+            pl.BlockSpec((1, d), lambda b, j, ids, lens: (ids[b * l + j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b, j, ids, lens: (b, 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, d), jnp.float32),
+        interpret=interpret,
+    )(ids.reshape(-1), lengths, table)

@@ -1,0 +1,23 @@
+"""Jit'd wrapper with platform dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import embedding_bag_pallas
+from .ref import embedding_bag_ref
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "impl", "interpret"))
+def embedding_bag(table: jax.Array, ids: jax.Array, lengths: jax.Array,
+                  mode: str = "mean", impl: str = "auto",
+                  interpret: bool = False) -> jax.Array:
+    """torch.nn.EmbeddingBag equivalent: [B, L] ids -> [B, d] reduced rows."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return embedding_bag_ref(table, ids, lengths, mode)
+    return embedding_bag_pallas(table, jnp.clip(ids, 0, table.shape[0] - 1),
+                                lengths, mode=mode, interpret=interpret)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for EmbeddingBag (gather + masked segment reduce)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, ids: jax.Array, lengths: jax.Array,
+                      mode: str = "mean") -> jax.Array:
+    """table [V, d]; ids [B, L]; lengths [B] -> [B, d]."""
+    e = jnp.take(table, ids, axis=0).astype(jnp.float32)  # [B, L, d]
+    mask = (jnp.arange(ids.shape[1])[None, :] < lengths[:, None])
+    s = jnp.sum(e * mask[..., None], axis=1)
+    if mode == "sum":
+        return s
+    return s / jnp.maximum(lengths[:, None].astype(jnp.float32), 1.0)

@@ -1,0 +1,95 @@
+"""Flash-decode Pallas kernel: split-KV online softmax for one new token.
+
+The per-chip decode hot loop (the local compute inside
+``attention.decode_attention``): stream the KV cache slab through VMEM in
+``bs``-sized chunks, maintaining (m, l, o) online-softmax stats in scratch.
+Grid (B, S/bs) — the KV axis is innermost, so scratch carries across it.
+``cur_len`` arrives via scalar prefetch and masks dead cache positions.
+
+Decode is HBM-bandwidth-bound (arithmetic intensity ~= 1 flop/byte): the
+win vs the XLA path is a single pass over the cache with no materialized
+[S] score vector in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bs: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]          # [kh, g, dh] (one batch row per grid-i)
+    k = k_ref[...]          # [bs, kh, dh]
+    v = v_ref[...]
+    kh, g, dh = q.shape
+    scale = dh ** -0.5
+    s = jnp.einsum("kgd,skd->kgs", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (kh, g, bs), 2)
+    mask = pos < len_ref[0]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[..., None]) * mask
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum(
+        "kgs,skd->kgd", p, v.astype(jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...][..., None], 1e-30)
+                      ).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                        cur_len: jax.Array, *, bs: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q [B, kh, g, dh]; caches [B, S, kh, dh]; S % bs == 0."""
+    b, kh, g, dh = q.shape
+    _, s, _, _ = k_cache.shape
+    assert s % bs == 0, (s, bs)
+    kernel = functools.partial(_kernel, bs=bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, s // bs),
+        in_specs=[
+            pl.BlockSpec((1, kh, g, dh), lambda i, j, L: (i, 0, 0, 0)),
+            pl.BlockSpec((1, bs, kh, dh), lambda i, j, L: (i, j, 0, 0)),
+            pl.BlockSpec((1, bs, kh, dh), lambda i, j, L: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, kh, g, dh), lambda i, j, L: (i, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kh, g), jnp.float32),
+            pltpu.VMEM((kh, g), jnp.float32),
+            pltpu.VMEM((kh, g, dh), jnp.float32),
+        ],
+    )
+
+    def body(len_ref, q_r, k_r, v_r, o_r, m_s, l_s, a_s):
+        _kernel(len_ref,
+                q_r.at[0], k_r.at[0], v_r.at[0], o_r.at[0],
+                m_s, l_s, a_s, bs=bs)
+
+    return pl.pallas_call(
+        body, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, dh), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(cur_len, jnp.int32).reshape(1), q, k_cache, v_cache)

@@ -1,0 +1,30 @@
+"""Jit'd wrapper with platform dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_decode_pallas
+from .ref import flash_decode_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "bs", "interpret"))
+def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 cur_len, impl: str = "auto", bs: int = 512,
+                 interpret: bool = False) -> jax.Array:
+    """Single-token decode attention. q [B, kh, g, dh] (kh-major grouped);
+    caches [B, S, kh, dh]; attends to cache positions < cur_len."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return flash_decode_ref(q, k_cache, v_cache, cur_len)
+    s = k_cache.shape[1]
+    bs_ = min(bs, s)
+    if s % bs_:
+        pad = bs_ - s % bs_
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return flash_decode_pallas(q, k_cache, v_cache, cur_len, bs=bs_,
+                               interpret=interpret)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cur_len: jax.Array | int) -> jax.Array:
+    """q [B, kh, g, dh]; caches [B, S, kh, dh]; attends to positions < cur_len.
+    Returns [B, kh, g, dh]."""
+    b, kh, g, dh = q.shape
+    s = k_cache.shape[1]
+    scale = dh ** -0.5
+    qs = q.astype(jnp.float32) * scale
+    scores = jnp.einsum("bkgd,bskd->bkgs", qs, k_cache.astype(jnp.float32))
+    mask = jnp.arange(s)[None, None, None, :] < cur_len
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))

@@ -1,0 +1,58 @@
+"""Jit'd public wrapper: platform dispatch + padding + metric handling."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import l2_topk_pallas
+from .ref import l2_topk_ref
+
+
+def _pad_rows(x, mult):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x, pad
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "metric", "impl", "bq", "bn",
+                                    "interpret"))
+def l2_topk(queries: jax.Array, db: jax.Array, k: int,
+            metric: str = "euclidean", impl: str = "auto",
+            bq: int = 128, bn: int = 512, interpret: bool = False
+            ) -> tuple[jax.Array, jax.Array]:
+    """Fused exact top-k scan. Returns (scores [Q, k], indices [Q, k]);
+    scores are similarities (euclidean -> -||q-d||^2, cosine -> cos sim)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    q = queries.astype(jnp.float32)
+    d = db.astype(jnp.float32)
+    if metric == "cosine":
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        d = d / jnp.maximum(jnp.linalg.norm(d, axis=-1, keepdims=True), 1e-12)
+    if impl == "ref":
+        return l2_topk_ref(q, d, k, metric)
+
+    qp, qpad = _pad_rows(q, bq)
+    dp, dpad = _pad_rows(d, bn)
+    if metric == "euclidean":
+        d_sq = jnp.sum(dp * dp, axis=-1)
+    else:  # cosine on normalized vectors = euclidean order; reuse the kernel
+        d_sq = jnp.sum(dp * dp, axis=-1)
+    if dpad:  # padded rows must never win
+        n_real = d.shape[0]
+        d_sq = jnp.where(jnp.arange(dp.shape[0]) < n_real, d_sq, 1e30)
+    vals, idx = l2_topk_pallas(qp, dp, d_sq, k, bq=bq, bn=bn,
+                               interpret=interpret)
+    vals = vals[: q.shape[0]]
+    idx = idx[: q.shape[0]]
+    if metric == "euclidean":
+        vals = vals - jnp.sum(q * q, axis=-1, keepdims=True)
+    else:
+        # kernel computed 2 q·d - ||d||^2 with ||d||=1 -> cos = (v + 1) / 2
+        vals = (vals + 1.0) / 2.0
+    return vals, idx

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused distance+top-k scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l2_topk_ref(queries: jax.Array, db: jax.Array, k: int,
+                metric: str = "euclidean") -> tuple[jax.Array, jax.Array]:
+    """Exact k-NN scores/indices. Scores are similarities (higher = closer):
+    euclidean -> negative squared distance; cosine -> cosine similarity on
+    pre-normalized inputs (the caller normalizes)."""
+    q = queries.astype(jnp.float32)
+    d = db.astype(jnp.float32)
+    if metric == "euclidean":
+        s = 2.0 * q @ d.T - jnp.sum(d * d, -1)[None, :] \
+            - jnp.sum(q * q, -1)[:, None]
+    elif metric == "cosine":
+        s = q @ d.T
+    else:
+        raise ValueError(metric)
+    return jax.lax.top_k(s, k)

@@ -1,0 +1,32 @@
+"""Jit'd public wrapper with padding + platform dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rae_encode_pallas
+from .ref import rae_encode_ref
+
+
+@functools.partial(jax.jit, static_argnames=("normalize", "impl", "br", "bk",
+                                             "interpret"))
+def rae_encode(x: jax.Array, w_e: jax.Array, normalize: bool = True,
+               impl: str = "auto", br: int = 256, bk: int = 512,
+               interpret: bool = False) -> jax.Array:
+    """z = (x @ W_e), optionally L2-normalized per row. x [R, n], w_e [n, m]."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return rae_encode_ref(x, w_e, normalize)
+    rows, n = x.shape
+    br_ = min(br, rows) if rows % br else br
+    rpad = (-rows) % br
+    kpad = (-n) % bk
+    xp = jnp.pad(x, ((0, rpad), (0, kpad)))
+    wp = jnp.pad(w_e, ((0, kpad), (0, 0)))
+    z = rae_encode_pallas(xp.astype(jnp.float32), wp.astype(jnp.float32),
+                          normalize=normalize, br=br, bk=bk,
+                          interpret=interpret)
+    return z[:rows]

@@ -1,0 +1,177 @@
+"""HLO post-compile analysis: collective-traffic accounting with while-loop
+trip-count multipliers.
+
+``compiled.cost_analysis()`` counts a ``lax.scan`` body once (verified in
+EXPERIMENTS.md §Dry-run), and collectives inside the layer scan appear once
+in the HLO text. This module parses the compiled module, recovers each
+while loop's trip count from its condition computation's comparison
+constant, and walks the call graph multiplying collective bytes by the
+enclosing loops' trip counts — giving honest per-step collective traffic.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$")
+# computation headers: "%name (p: type, ...) -> type {" — params may contain
+# nested parens (tuple types), so match greedily up to the "->"
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_CALLED_RE = re.compile(
+    r"(?:body|condition|to_apply|calls|branch_computations)=\{?%?([\w\.\-,% ]+)\}?")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of possibly-tuple HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    # (op_kind, bytes) for each collective instruction
+    collectives: list = field(default_factory=list)
+    # (called_computation_name, kind) pairs; kind 'while_body' carries a trip count
+    whiles: list = field(default_factory=list)  # (body, cond) names
+    calls: list = field(default_factory=list)   # plain calls / fusions
+    # constants found (used when this computation is a while condition)
+    max_constant: int = 1
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    # defs: %name -> rhs text, for the bf16-payload heuristic below
+    defs: dict[str, str] = {}
+    for line in text.splitlines():
+        ls0 = line.strip()
+        md = _INSTR_RE.match(ls0)
+        if md:
+            defs[md.group(2)] = md.group(3)
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            name = mc.group(2)
+            cur = Computation(name=name, is_entry=bool(mc.group(1)))
+            comps[name] = cur
+            continue
+        if cur is None:
+            continue
+        ls = line.strip()
+        m = _INSTR_RE.match(ls)
+        if not m:
+            continue
+        rhs = m.group(3)
+        # constants (for while trip counts)
+        mconst = re.match(r"s32\[\]\s+constant\((\d+)\)", rhs)
+        if mconst:
+            cur.max_constant = max(cur.max_constant, int(mconst.group(1)))
+        # while instructions
+        if re.search(r"\bwhile\(", rhs):
+            body = re.search(r"body=%?([\w\.\-]+)", rhs)
+            cond = re.search(r"condition=%?([\w\.\-]+)", rhs)
+            if body and cond:
+                cur.whiles.append((body.group(1), cond.group(1)))
+            continue
+        # collectives (count -start; skip -done which carries no new traffic)
+        for cop in COLLECTIVES:
+            if re.search(rf"\b{cop}(-start)?\(", rhs) and f"{cop}-done" not in rhs:
+                out_type = rhs.split(cop)[0]
+                b = _shape_bytes(out_type)
+                if cop == "all-reduce":
+                    b *= 2  # ring AR = RS + AG
+                # XLA:CPU promotes bf16 collectives to f32 (a wrapped_convert
+                # feeds every one — verified empirically). The logical wire
+                # payload on TPU is bf16: halve when the operand chain shows
+                # a bf16 -> f32 convert.
+                if "f32[" in out_type:
+                    ops = re.findall(r"\((%[\w\.\-]+)", rhs)
+                    for op in ops[:1]:
+                        d = defs.get(op, "")
+                        if ("convert" in d or "convert" in op) and \
+                                ("bf16[" in d or _first_operand_bf16(d, defs)):
+                            b //= 2
+                            break
+                cur.collectives.append((cop, b))
+                break
+        # calls / fusions / conditionals reference other computations
+        for mcall in _CALLED_RE.finditer(rhs):
+            for nm in mcall.group(1).replace("%", "").split(","):
+                nm = nm.strip()
+                if nm:
+                    cur.calls.append(nm)
+    return comps
+
+
+def _first_operand_bf16(rhs: str, defs: dict[str, str]) -> bool:
+    """One hop deeper: fusion(%x) where %x is bf16."""
+    m = re.search(r"\((%[\w\.\-]+)", rhs)
+    if not m:
+        return False
+    d = defs.get(m.group(1), "")
+    return d.startswith("bf16[") or " bf16[" in d[:40]
+
+
+def collective_bytes(text: str) -> dict[str, float]:
+    """Per-collective-kind bytes per device per step, loop-adjusted."""
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {}
+    memo: dict[str, dict[str, float]] = {}
+
+    def walk(name: str) -> dict[str, float]:
+        if name in memo:
+            return memo[name]
+        memo[name] = {}  # cycle guard
+        c = comps.get(name)
+        if c is None:
+            return {}
+        tot: dict[str, float] = {}
+        for kind, b in c.collectives:
+            tot[kind] = tot.get(kind, 0.0) + b
+        for callee in c.calls:
+            if callee in comps and (callee != name):
+                for k, v in walk(callee).items():
+                    tot[k] = tot.get(k, 0.0) + v
+        for body, cond in c.whiles:
+            trip = comps[cond].max_constant if cond in comps else 1
+            sub = walk(body)
+            for k, v in sub.items():
+                tot[k] = tot.get(k, 0.0) + trip * v
+        memo[name] = tot
+        return tot
+
+    out = walk(entry.name)
+    out["total"] = sum(out.values())
+    return out
+
+
+def count_collectives(text: str) -> dict[str, int]:
+    comps = parse_hlo(text)
+    out: dict[str, int] = {}
+    for c in comps.values():
+        for kind, _ in c.collectives:
+            out[kind] = out.get(kind, 0) + 1
+    return out

@@ -1,0 +1,64 @@
+"""Host-side CSR uniform neighbor sampler (GraphSAGE §3.1, fanout sampling).
+
+Runs on the host data pipeline (numpy), like production GNN systems: the
+device program only ever sees fixed-shape, pre-gathered feature tensors.
+Sampling is uniform WITH replacement (the paper's estimator), so outputs are
+always exactly [B, f1] / [B, f1, f2] — no masks. Zero-degree nodes fall back
+to self-loops. Batches are a pure function of (seed, step): resumable and
+elastic-safe (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ...data.synthetic import Graph
+
+
+class NeighborSampler:
+    def __init__(self, graph: Graph, fanouts: tuple[int, ...], seed: int = 0):
+        self.g = graph
+        self.fanouts = tuple(fanouts)
+        self.seed = seed
+        self._root = np.random.SeedSequence(seed)
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence(entropy=self._root.entropy,
+                                   spawn_key=(step,)))
+
+    def _sample_neighbors(self, nodes: np.ndarray, fanout: int,
+                          rng: np.random.Generator) -> np.ndarray:
+        """Uniform-with-replacement neighbor sample. nodes [M] -> [M, fanout]."""
+        indptr, dst = self.g.indptr, self.g.edge_dst
+        start = indptr[nodes]
+        deg = indptr[nodes + 1] - start
+        r = rng.integers(0, 1 << 31, size=(len(nodes), fanout))
+        safe_deg = np.maximum(deg, 1)
+        idx = start[:, None] + (r % safe_deg[:, None])
+        nbrs = dst[np.minimum(idx, len(dst) - 1 if len(dst) else 0)]
+        # zero-degree -> self loop
+        return np.where(deg[:, None] > 0, nbrs, nodes[:, None]).astype(np.int32)
+
+    def sample_batch(self, step: int, batch_size: int) -> dict[str, np.ndarray]:
+        rng = self._rng(step)
+        g = self.g
+        seeds = rng.integers(0, g.n_nodes, batch_size).astype(np.int32)
+        f1, f2 = self.fanouts[0], (self.fanouts[1] if len(self.fanouts) > 1 else 0)
+        n1 = self._sample_neighbors(seeds, f1, rng)  # [B, f1]
+        out = {
+            "seeds": seeds,
+            "x_seed": g.features[seeds],
+            "x_n1": g.features[n1.reshape(-1)].reshape(batch_size, f1, -1),
+            "labels": g.labels[seeds].astype(np.int32),
+        }
+        if f2:
+            n2 = self._sample_neighbors(n1.reshape(-1), f2, rng)
+            out["x_n2"] = g.features[n2.reshape(-1)].reshape(
+                batch_size, f1, f2, -1)
+        return out
+
+    def neighbors_of(self, node: int) -> np.ndarray:
+        """True neighbor set (for tests: sampled nbrs must be real nbrs)."""
+        return self.g.edge_dst[self.g.indptr[node]: self.g.indptr[node + 1]]

@@ -1,0 +1,1 @@
+from . import autoint, bst, common, mind, two_tower

@@ -1,0 +1,99 @@
+"""BST — Behavior Sequence Transformer (arXiv:1905.06874).
+
+Target item is appended to the behavior sequence; one transformer block
+(8 heads over embed_dim=32) models target-aware interactions; all outputs
+concat with user/context embeddings feed the 1024-512-256 MLP -> CTR logit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...configs.base import RecsysConfig
+from ...distributed.partitioning import ParamDef, init_from_schema
+from ..common import MeshCtx, rms_norm
+from . import common as rc
+
+
+def schema(cfg: RecsysConfig) -> dict:
+    pdt = jnp.dtype(cfg.param_dtype)
+    d = cfg.embed_dim
+    s = dict(rc.table_schema(cfg))
+    s["pos_embed"] = ParamDef((cfg.seq_len + 1, d), (None, None), pdt,
+                              init="embed", scale=0.01)
+    for blk in range(cfg.n_blocks):
+        for nm in ("wq", "wk", "wv", "wo"):
+            s[f"blk{blk}_{nm}"] = ParamDef((d, d), (None, None), pdt)
+        s[f"blk{blk}_ln1"] = ParamDef((d,), (None,), pdt, init="ones")
+        s[f"blk{blk}_ln2"] = ParamDef((d,), (None,), pdt, init="ones")
+        s[f"blk{blk}_ffn_w1"] = ParamDef((d, 4 * d), (None, None), pdt)
+        s[f"blk{blk}_ffn_w2"] = ParamDef((4 * d, d), (None, None), pdt)
+    mlp_in = d * (cfg.seq_len + 1) + 2 * d  # seq outputs + user + category
+    dims = (mlp_in,) + cfg.mlp_dims + (1,)
+    s.update(rc.mlp_schema("mlp", dims, pdt))
+    return s
+
+
+def init(cfg: RecsysConfig, key: jax.Array):
+    return init_from_schema(schema(cfg), key)
+
+
+def _block(params, blk: int, x, n_heads: int):
+    b, s, d = x.shape
+    dh = d // n_heads
+    h = rms_norm(x, params[f"blk{blk}_ln1"])
+    q = (h @ params[f"blk{blk}_wq"].astype(x.dtype)).reshape(b, s, n_heads, dh)
+    k = (h @ params[f"blk{blk}_wk"].astype(x.dtype)).reshape(b, s, n_heads, dh)
+    v = (h @ params[f"blk{blk}_wv"].astype(x.dtype)).reshape(b, s, n_heads, dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * dh ** -0.5
+    p = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, s, d)
+    x = x + o @ params[f"blk{blk}_wo"].astype(x.dtype)
+    h2 = rms_norm(x, params[f"blk{blk}_ln2"])
+    y = jax.nn.relu(h2 @ params[f"blk{blk}_ffn_w1"].astype(x.dtype))
+    return x + y @ params[f"blk{blk}_ffn_w2"].astype(x.dtype)
+
+
+def forward(params, batch, cfg: RecsysConfig, ctx: MeshCtx) -> jax.Array:
+    """batch: hist [B,S], item [B], user [B], category [B] -> logit [B]."""
+    cdt = jnp.bfloat16
+    hist, item = batch["hist"], batch["item"]
+    b = item.shape[0]
+    if hist.shape[0] == 1 and b > 1:  # retrieval: shared history, many items
+        hist = jnp.broadcast_to(hist, (b,) + hist.shape[1:])
+    seq_ids = jnp.concatenate([hist, item[:, None]], axis=1)  # [B, S+1]
+    x = rc.lookup(params, "item", seq_ids, ctx, cdt)
+    x = x + params["pos_embed"].astype(cdt)[None]
+    x = ctx.constrain(x, "batch", None, None)
+    for blk in range(cfg.n_blocks):
+        x = _block(params, blk, x, cfg.n_heads)
+    user = rc.lookup(params, "user", batch["user"], ctx, cdt)
+    if user.shape[0] == 1 and b > 1:
+        user = jnp.broadcast_to(user, (b, user.shape[1]))
+    cat = rc.lookup(params, "category", batch["category"], ctx, cdt)
+    if cat.shape[0] == 1 and b > 1:
+        cat = jnp.broadcast_to(cat, (b, cat.shape[1]))
+    feat = jnp.concatenate([x.reshape(b, -1), user, cat], axis=-1)
+    logit = rc.apply_mlp(params, "mlp", feat, len(cfg.mlp_dims) + 1)
+    return logit[:, 0]
+
+
+def loss_fn(params, batch, cfg: RecsysConfig, ctx: MeshCtx):
+    logit = forward(params, batch, cfg, ctx)
+    return rc.bce_loss(logit, batch["label"]), {}
+
+
+def serve(params, batch, cfg: RecsysConfig, ctx: MeshCtx) -> jax.Array:
+    return jax.nn.sigmoid(forward(params, batch, cfg, ctx).astype(jnp.float32))
+
+
+def retrieval_scores(params, batch, cfg: RecsysConfig, ctx: MeshCtx
+                     ) -> jax.Array:
+    """Target-aware retrieval: the candidate item is appended to the (shared)
+    behavior sequence, so all 1M candidates run the full transformer —
+    batched over the mesh, not looped."""
+    cands = ctx.constrain(batch["candidates"], "db_rows")
+    b = {"hist": batch["hist"], "user": batch["user"],
+         "category": batch["category"], "item": cands}
+    return forward(params, b, cfg, ctx)

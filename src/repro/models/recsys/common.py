@@ -1,0 +1,89 @@
+"""Shared recsys building blocks: sharded tables, MLP towers.
+
+Embedding tables are the hot path (kernel_taxonomy §RecSys): rows are
+sharded over the whole mesh ("table_rows" -> (pod, data, model)-resolved
+axes) and looked up with the masked-psum engine in ``models.common`` —
+JAX's replacement for torch.nn.EmbeddingBag / FBGEMM TBE.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...configs.base import EmbeddingTableSpec, RecsysConfig
+from ...distributed.partitioning import ParamDef
+from ..common import (MeshCtx, embedding_bag, pad_to_multiple,
+                      sharded_embedding_lookup)
+
+ROW_PAD = 512  # table rows padded so every mesh (256/512 chips) divides them
+
+
+def table_schema(cfg: RecsysConfig) -> dict[str, ParamDef]:
+    pdt = jnp.dtype(cfg.param_dtype)
+    out = {}
+    for t in cfg.tables:
+        out[f"table_{t.name}"] = ParamDef(
+            (pad_to_multiple(t.vocab, ROW_PAD), t.dim), ("table_rows", None),
+            pdt, init="embed", scale=0.01)
+    return out
+
+
+def mlp_schema(prefix: str, dims: tuple[int, ...], pdt) -> dict[str, ParamDef]:
+    out = {}
+    for i in range(len(dims) - 1):
+        out[f"{prefix}_w{i}"] = ParamDef((dims[i], dims[i + 1]), (None, None), pdt)
+        out[f"{prefix}_b{i}"] = ParamDef((dims[i + 1],), (None,), pdt, init="zeros")
+    return out
+
+
+def apply_mlp(params, prefix: str, x: jax.Array, n_layers: int,
+              final_act: bool = False) -> jax.Array:
+    for i in range(n_layers):
+        x = x @ params[f"{prefix}_w{i}"].astype(x.dtype) + \
+            params[f"{prefix}_b{i}"].astype(x.dtype)
+        if i < n_layers - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def lookup(params, name: str, ids: jax.Array, ctx: MeshCtx,
+           compute_dtype=jnp.bfloat16) -> jax.Array:
+    ids_logical = ("batch",) + (None,) * (ids.ndim - 1)
+    return sharded_embedding_lookup(
+        params[f"table_{name}"], ids, ctx, row_logical="table_rows",
+        ids_logical=ids_logical, compute_dtype=compute_dtype)
+
+
+def bag_lookup(params, name: str, ids: jax.Array, lengths: jax.Array,
+               ctx: MeshCtx, mode: str = "mean",
+               compute_dtype=jnp.bfloat16) -> jax.Array:
+    return embedding_bag(params[f"table_{name}"], ids, lengths, ctx,
+                         mode=mode, row_logical="table_rows",
+                         compute_dtype=compute_dtype)
+
+
+def bce_loss(logit: jax.Array, label: jax.Array) -> jax.Array:
+    logit = logit.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logit, 0) - logit * label
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+def l2norm(x: jax.Array) -> jax.Array:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+
+
+def in_batch_softmax_loss(u: jax.Array, v: jax.Array, ctx: MeshCtx,
+                          temp: float = 0.05) -> jax.Array:
+    """Sampled-softmax with in-batch negatives: diag(U V^T) are positives.
+
+    Logits [B, B] are sharded (rows over data axes, cols over model) so the
+    65536-batch training cell keeps ~70MB/device.
+    """
+    logits = (u @ v.T).astype(jnp.float32) / temp
+    logits = ctx.constrain(logits, "batch", "inbatch_col")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    pos = jnp.einsum("bd,bd->b", u.astype(jnp.float32),
+                     v.astype(jnp.float32)) / temp
+    return jnp.mean(lse - pos)

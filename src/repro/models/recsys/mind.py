@@ -1,0 +1,92 @@
+"""MIND (arXiv:1904.08030): multi-interest extraction via dynamic-routing
+capsules over the user behavior sequence.
+
+Behavior-to-Interest routing (3 iterations, squash nonlinearity, shared
+bilinear map), label-aware attention for training (pow-2 softmax over
+interests), in-batch sampled softmax loss. Serving scores max over the K=4
+interest vectors — ``retrieval_cand`` maxes interests against 1M items.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...configs.base import RecsysConfig
+from ...distributed.partitioning import ParamDef, init_from_schema
+from ..common import MeshCtx
+from . import common as rc
+
+
+def schema(cfg: RecsysConfig) -> dict:
+    pdt = jnp.dtype(cfg.param_dtype)
+    d = cfg.embed_dim
+    s = dict(rc.table_schema(cfg))
+    s["bilinear"] = ParamDef((d, d), (None, None), pdt)
+    # fixed (non-trainable in the paper; trainable-initialized here) routing priors
+    s["routing_init"] = ParamDef((cfg.hist_len, cfg.n_interests), (None, None),
+                                 pdt, init="normal", scale=1.0)
+    dims = (d,) + cfg.mlp_dims
+    s.update(rc.mlp_schema("interest_mlp", dims, pdt))
+    return s
+
+
+def init(cfg: RecsysConfig, key: jax.Array):
+    return init_from_schema(schema(cfg), key)
+
+
+def _squash(x):
+    n2 = jnp.sum(jnp.square(x), -1, keepdims=True)
+    return (n2 / (1 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def interests(params, batch, cfg: RecsysConfig, ctx: MeshCtx) -> jax.Array:
+    """hist [B, L], hist_len [B] -> [B, K, d] interest capsules."""
+    cdt = jnp.bfloat16
+    hist = batch["hist"]
+    b, L = hist.shape
+    e = rc.lookup(params, "item", hist, ctx, cdt).astype(jnp.float32)
+    mask = (jnp.arange(L)[None, :] < batch["hist_len"][:, None])
+    u_hat = e @ params["bilinear"].astype(jnp.float32)  # [B, L, d]
+    logits = jnp.broadcast_to(params["routing_init"].astype(jnp.float32)[None],
+                              (b, L, cfg.n_interests))
+    caps = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(logits, axis=-1)
+        w = w * mask[..., None]
+        z = jnp.einsum("blk,bld->bkd", w, u_hat)
+        caps = _squash(z)
+        logits = logits + jnp.einsum("bld,bkd->blk", u_hat, caps)
+    caps = rc.apply_mlp(params, "interest_mlp", caps, len(cfg.mlp_dims))
+    return rc.l2norm(caps)  # [B, K, d_out]
+
+
+def loss_fn(params, batch, cfg: RecsysConfig, ctx: MeshCtx):
+    caps = interests(params, batch, cfg, ctx)  # [B, K, d]
+    tgt = rc.lookup(params, "item", batch["item"], ctx).astype(jnp.float32)
+    tgt = rc.l2norm(rc.apply_mlp(params, "interest_mlp", tgt,
+                                 len(cfg.mlp_dims)))
+    # label-aware attention, pow p=2 (paper Eq. 6)
+    att = jax.nn.softmax(jnp.square(jnp.einsum("bkd,bd->bk", caps, tgt)) * 16.0,
+                         axis=-1)
+    u = jnp.einsum("bk,bkd->bd", att, caps)
+    loss = rc.in_batch_softmax_loss(rc.l2norm(u), tgt, ctx)
+    return loss, {}
+
+
+def serve(params, batch, cfg: RecsysConfig, ctx: MeshCtx) -> jax.Array:
+    """Pairwise max-over-interests scores for a (user, item) batch."""
+    caps = interests(params, batch, cfg, ctx)
+    tgt = rc.lookup(params, "item", batch["item"], ctx).astype(jnp.float32)
+    tgt = rc.l2norm(rc.apply_mlp(params, "interest_mlp", tgt,
+                                 len(cfg.mlp_dims)))
+    return jnp.max(jnp.einsum("bkd,bd->bk", caps, tgt), axis=-1)
+
+
+def retrieval_scores(params, batch, cfg: RecsysConfig, ctx: MeshCtx
+                     ) -> jax.Array:
+    caps = interests(params, batch, cfg, ctx)[0]  # [K, d] one user
+    items = rc.lookup(params, "item", batch["candidates"], ctx).astype(jnp.float32)
+    items = rc.l2norm(rc.apply_mlp(params, "interest_mlp", items,
+                                   len(cfg.mlp_dims)))
+    items = ctx.constrain(items, "db_rows", None)
+    return jnp.max(items @ caps.T, axis=-1)  # [N]

@@ -1,0 +1,72 @@
+"""Two-tower retrieval (Yi et al., RecSys'19) with in-batch sampled softmax.
+
+User tower: user embedding + history EmbeddingBag -> MLP -> L2-norm.
+Item tower: item embedding -> MLP -> L2-norm. Training uses in-batch
+negatives; serving scores dot products; ``retrieval_cand`` pushes one user
+against 1M candidate ids through the sharded scan + top-k engine — the
+paper's RAE slots in right there (encode both sides, scan in R^m).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...configs.base import RecsysConfig
+from ...distributed.partitioning import ParamDef, init_from_schema
+from ..common import MeshCtx
+from . import common as rc
+
+
+def schema(cfg: RecsysConfig) -> dict:
+    pdt = jnp.dtype(cfg.param_dtype)
+    d = cfg.embed_dim
+    s = dict(rc.table_schema(cfg))
+    u_dims = (2 * d,) + cfg.mlp_dims  # user id emb + hist bag
+    i_dims = (d,) + cfg.mlp_dims
+    s.update(rc.mlp_schema("user_mlp", u_dims, pdt))
+    s.update(rc.mlp_schema("item_mlp", i_dims, pdt))
+    return s
+
+
+def init(cfg: RecsysConfig, key: jax.Array):
+    return init_from_schema(schema(cfg), key)
+
+
+def user_tower(params, batch, cfg: RecsysConfig, ctx: MeshCtx) -> jax.Array:
+    cdt = jnp.bfloat16
+    ue = rc.lookup(params, "user", batch["user"], ctx, cdt)
+    hb = rc.bag_lookup(params, "hist_item", batch["hist"], batch["hist_len"],
+                       ctx, mode="mean", compute_dtype=cdt)
+    x = jnp.concatenate([ue, hb], axis=-1)
+    x = rc.apply_mlp(params, "user_mlp", x, len(cfg.mlp_dims))
+    return rc.l2norm(x.astype(jnp.float32))
+
+
+def item_tower(params, item_ids, cfg: RecsysConfig, ctx: MeshCtx) -> jax.Array:
+    cdt = jnp.bfloat16
+    ie = rc.lookup(params, "item", item_ids, ctx, cdt)
+    x = rc.apply_mlp(params, "item_mlp", ie, len(cfg.mlp_dims))
+    return rc.l2norm(x.astype(jnp.float32))
+
+
+def loss_fn(params, batch, cfg: RecsysConfig, ctx: MeshCtx):
+    u = user_tower(params, batch, cfg, ctx)
+    v = item_tower(params, batch["item"], cfg, ctx)
+    loss = rc.in_batch_softmax_loss(u, v, ctx)
+    return loss, {}
+
+
+def serve(params, batch, cfg: RecsysConfig, ctx: MeshCtx) -> jax.Array:
+    """Pairwise scores for a (user, item) batch."""
+    u = user_tower(params, batch, cfg, ctx)
+    v = item_tower(params, batch["item"], cfg, ctx)
+    return jnp.einsum("bd,bd->b", u, v)
+
+
+def retrieval_scores(params, batch, cfg: RecsysConfig, ctx: MeshCtx
+                     ) -> jax.Array:
+    """One user vs n_candidates item ids -> [n_candidates] scores."""
+    u = user_tower(params, batch, cfg, ctx)  # [1, d]
+    cands = item_tower(params, batch["candidates"], cfg, ctx)  # [N, d]
+    cands = ctx.constrain(cands, "db_rows", None)
+    return cands @ u[0]

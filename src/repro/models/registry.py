@@ -1,0 +1,313 @@
+"""Model registry: builds the lowerable program for every (arch x shape) cell.
+
+``build_cell`` returns a :class:`CellProgram` — the step function, abstract
+arguments (ShapeDtypeStructs: weak-type-correct, shardable, no allocation)
+and their PartitionSpecs — which launch/dryrun.py feeds straight into
+``jax.jit(...).lower(...).compile()``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs import ShapeCell, get_arch, get_shapes
+from ..distributed.partitioning import pspecs_from_schema
+from ..optim import AdamW, AdamWState, cosine_annealing
+from .common import MeshCtx, pad_to_multiple
+from .gnn import graphsage
+from .recsys import autoint as autoint_m
+from .recsys import bst as bst_m
+from .recsys import mind as mind_m
+from .recsys import two_tower as tt_m
+from .transformer import model as tm
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+@dataclass
+class CellProgram:
+    arch_id: str
+    cell: ShapeCell
+    family: str
+    fn: Callable
+    abstract_args: tuple
+    arg_pspecs: tuple
+    donate: tuple[int, ...] = ()
+    meta: dict = field(default_factory=dict)
+
+    def lower(self, mesh):
+        from jax.sharding import NamedSharding
+
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), self.arg_pspecs,
+            is_leaf=lambda x: isinstance(x, P))
+        with mesh:
+            jitted = jax.jit(self.fn, in_shardings=shardings,
+                             donate_argnums=self.donate)
+            return jitted.lower(*self.abstract_args)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _pspec_like(ctx: MeshCtx, abstract, *logical):
+    return ctx.pspec(abstract.shape, *logical)
+
+
+def _opt_abstract(params_abs, moment_dtype: Optional[str] = None):
+    def md(p):
+        dt = jnp.dtype(moment_dtype) if moment_dtype else p.dtype
+        return jax.ShapeDtypeStruct(p.shape, dt)
+
+    mo = jax.tree.map(md, params_abs)
+    return AdamWState(step=_sds((), I32), m=mo, v=mo)
+
+
+def _opt_pspecs(params_pspecs):
+    return AdamWState(step=P(), m=params_pspecs, v=params_pspecs)
+
+
+def _lm_opt(cfg):
+    return AdamW(lr=cosine_annealing(3e-4, 3e-5, 50_000, warmup_steps=500),
+                 weight_decay=0.1, clip_norm=1.0,
+                 moment_dtype=cfg.moment_dtype)
+
+
+def _small_opt():
+    return AdamW(lr=cosine_annealing(1e-3, 1e-5, 50_000), weight_decay=1e-4,
+                 clip_norm=1.0)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+def _lm_cell(arch_id: str, cfg, cell: ShapeCell, ctx: MeshCtx) -> CellProgram:
+    import dataclasses
+
+    s, b = cell.seq_len, cell.global_batch
+    if cell.kind != "train":
+        # serving keeps bf16 weights (production practice; halves decode HBM)
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    params_abs = tm.abstract_params(cfg, ctx)
+    pps = pspecs_from_schema(tm.schema(cfg, ctx), ctx.rules, ctx.mesh) \
+        if ctx.mesh is not None else jax.tree.map(lambda _: P(), params_abs)
+    meta = {"kind": cell.kind, "seq": s, "batch": b}
+
+    if cell.kind == "train":
+        opt = _lm_opt(cfg)
+        fn = tm.make_train_step(cfg, ctx, opt)
+        batch_abs = {"tokens": _sds((b, s), I32), "targets": _sds((b, s), I32)}
+        bspec = {k: ctx.pspec((b, s), "batch", None) for k in batch_abs}
+        return CellProgram(arch_id, cell, "lm", fn,
+                           (params_abs,
+                            _opt_abstract(params_abs, cfg.moment_dtype),
+                            batch_abs),
+                           (pps, _opt_pspecs(pps), bspec),
+                           donate=(0, 1), meta=meta)
+
+    if cell.kind == "prefill":
+        def fn(params, tokens):
+            return tm.prefill(params, tokens, cfg, ctx)
+
+        return CellProgram(arch_id, cell, "lm", fn,
+                           (params_abs, _sds((b, s), I32)),
+                           (pps, ctx.pspec((b, s), "batch", None)), meta=meta)
+
+    # decode (decode_32k / long_500k): one new token vs a seq_len KV cache.
+    # long-context decode (batch 1) spreads the cache over data AND model
+    # axes (256/512-way); batched decode shards batch over data, cache seq
+    # over model.
+    seq_logical = "kv_seq_all" if b < ctx.axis_size("batch") else "kv_seq"
+    state_abs = tm.abstract_decode_state(cfg, b, s, ctx)
+    cache_spec = ctx.pspec(state_abs.k.shape, None, "batch", seq_logical,
+                           None, None)
+    state_pspecs = tm.DecodeState(k=cache_spec, v=cache_spec, length=P())
+
+    def fn(params, state, tokens):
+        return tm.decode_step(params, state, tokens, cfg, ctx,
+                              seq_logical=seq_logical)
+
+    return CellProgram(arch_id, cell, "lm", fn,
+                       (params_abs, state_abs, _sds((b,), I32)),
+                       (pps, state_pspecs, ctx.pspec((b,), "batch")),
+                       donate=(1,), meta={**meta, "seq_logical": seq_logical})
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+def _gnn_cell(arch_id: str, cfg, cell: ShapeCell, ctx: MeshCtx) -> CellProgram:
+    n_cls = cell.extras.get("n_classes", cfg.n_classes)
+    sch = graphsage.schema(cfg, cell.d_feat, n_cls)
+    from ..distributed.partitioning import abstract_from_schema
+
+    params_abs = abstract_from_schema(sch)
+    pps = pspecs_from_schema(sch, ctx.rules, ctx.mesh) \
+        if ctx.mesh is not None else jax.tree.map(lambda _: P(), params_abs)
+    opt = _small_opt()
+    meta = {"kind": cell.kind}
+
+    if cell.kind == "full_graph":
+        n = pad_to_multiple(cell.n_nodes, 512)
+        e = pad_to_multiple(cell.n_edges, 512)
+        batch_abs = {
+            "features": _sds((n, cell.d_feat), F32),
+            "src": _sds((e,), I32), "dst": _sds((e,), I32),
+            "labels": _sds((n,), I32), "node_mask": _sds((n,), F32),
+        }
+        bspec = {
+            "features": ctx.pspec((n, cell.d_feat), "db_rows", None),
+            "src": ctx.pspec((e,), "db_rows"),
+            "dst": ctx.pspec((e,), "db_rows"),
+            "labels": ctx.pspec((n,), "db_rows"),
+            "node_mask": ctx.pspec((n,), "db_rows"),
+        }
+        fn = graphsage.make_train_step(cfg, ctx, opt, "full_graph")
+        meta.update(n_padded=n, e_padded=e)
+    elif cell.kind == "minibatch":
+        bsz = cell.batch_nodes
+        f1, f2 = cell.fanout or cfg.sample_sizes
+        d = cell.d_feat
+        batch_abs = {
+            "x_seed": _sds((bsz, d), F32),
+            "x_n1": _sds((bsz, f1, d), F32),
+            "x_n2": _sds((bsz, f1, f2, d), F32),
+            "labels": _sds((bsz,), I32),
+        }
+        bspec = {k: ctx.pspec(v.shape, "batch",
+                              *([None] * (len(v.shape) - 1)))
+                 for k, v in batch_abs.items()}
+        fn = graphsage.make_train_step(cfg, ctx, opt, "minibatch")
+    else:  # batched_graphs
+        g, nn, ne = cell.graphs_per_batch, cell.n_nodes, cell.n_edges
+        batch_abs = {
+            "features": _sds((g, nn, cell.d_feat), F32),
+            "edges": _sds((g, ne, 2), I32),
+            "edge_mask": _sds((g, ne), F32),
+            "labels": _sds((g,), I32),
+        }
+        bspec = {k: ctx.pspec(v.shape, "batch",
+                              *([None] * (len(v.shape) - 1)))
+                 for k, v in batch_abs.items()}
+        fn = graphsage.make_train_step(cfg, ctx, opt, "batched_graphs")
+
+    return CellProgram(arch_id, cell, "gnn", fn,
+                       (params_abs, _opt_abstract(params_abs), batch_abs),
+                       (pps, _opt_pspecs(pps), bspec), donate=(0, 1),
+                       meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+_RECSYS_MODULES = {"bst": bst_m, "two_tower": tt_m, "autoint": autoint_m,
+                   "mind": mind_m}
+
+
+def _recsys_batch(cfg, b: int, with_label: bool) -> dict:
+    kind = cfg.kind
+    out: dict[str, Any] = {}
+    if kind == "bst":
+        out = {"hist": _sds((b, cfg.seq_len), I32), "item": _sds((b,), I32),
+               "user": _sds((b,), I32), "category": _sds((b,), I32)}
+    elif kind == "two_tower":
+        out = {"user": _sds((b,), I32), "hist": _sds((b, cfg.hist_len), I32),
+               "hist_len": _sds((b,), I32), "item": _sds((b,), I32)}
+    elif kind == "autoint":
+        out = {"fields": _sds((b, cfg.n_fields), I32)}
+    elif kind == "mind":
+        out = {"hist": _sds((b, cfg.hist_len), I32),
+               "hist_len": _sds((b,), I32), "item": _sds((b,), I32)}
+    if with_label:
+        out["label"] = _sds((b,), F32)
+    return out
+
+
+def _recsys_cell(arch_id: str, cfg, cell: ShapeCell, ctx: MeshCtx
+                 ) -> CellProgram:
+    mod = _RECSYS_MODULES[cfg.kind]
+    sch = mod.schema(cfg)
+    from ..distributed.partitioning import abstract_from_schema
+
+    params_abs = abstract_from_schema(sch)
+    pps = pspecs_from_schema(sch, ctx.rules, ctx.mesh) \
+        if ctx.mesh is not None else jax.tree.map(lambda _: P(), params_abs)
+    meta = {"kind": cell.kind}
+
+    def bspecs(batch_abs):
+        return {k: ctx.pspec(v.shape, "batch",
+                             *([None] * (len(v.shape) - 1)))
+                for k, v in batch_abs.items()}
+
+    if cell.kind == "train":
+        b = cell.global_batch
+        opt = _small_opt()
+
+        def fn(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                mod.loss_fn, has_aux=True)(params, batch, cfg, ctx)
+            params, opt_state, om = opt.update(grads, opt_state, params)
+            return params, opt_state, {"loss": loss, **metrics, **om}
+
+        batch_abs = _recsys_batch(cfg, b, with_label=True)
+        return CellProgram(arch_id, cell, "recsys", fn,
+                           (params_abs, _opt_abstract(params_abs), batch_abs),
+                           (pps, _opt_pspecs(pps), bspecs(batch_abs)),
+                           donate=(0, 1), meta=meta)
+
+    if cell.kind == "serve":
+        b = cell.global_batch
+
+        def fn(params, batch):
+            return mod.serve(params, batch, cfg, ctx)
+
+        batch_abs = _recsys_batch(cfg, b, with_label=False)
+        return CellProgram(arch_id, cell, "recsys", fn,
+                           (params_abs, batch_abs),
+                           (pps, bspecs(batch_abs)), meta=meta)
+
+    # retrieval_cand: one query vs n_candidates, fused with distributed top-k
+    nc = cell.n_candidates
+    from ..search import distributed_topk
+
+    def fn(params, batch):
+        scores = mod.retrieval_scores(params, batch, cfg, ctx)
+        return distributed_topk(scores, 100, ctx)
+
+    batch_abs = _recsys_batch(cfg, 1, with_label=False)
+    batch_abs["candidates"] = _sds((nc,), I32)
+    bsp = bspecs({k: v for k, v in batch_abs.items() if k != "candidates"})
+    bsp["candidates"] = ctx.pspec((nc,), "db_rows")
+    return CellProgram(arch_id, cell, "recsys", fn,
+                       (params_abs, batch_abs), (pps, bsp),
+                       meta={**meta, "top_k": 100})
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+def build_cell(arch_id: str, cell: ShapeCell | str, ctx: MeshCtx
+               ) -> CellProgram:
+    cfg, family = get_arch(arch_id)
+    if isinstance(cell, str):
+        cells = {c.name: c for c in get_shapes(arch_id)}
+        cell = cells[cell]
+    if family == "lm":
+        return _lm_cell(arch_id, cfg, cell, ctx)
+    if family == "gnn":
+        return _gnn_cell(arch_id, cfg, cell, ctx)
+    if family == "recsys":
+        return _recsys_cell(arch_id, cfg, cell, ctx)
+    raise ValueError(family)
+
+
+def input_specs(arch_id: str, cell: ShapeCell | str, ctx: MeshCtx) -> tuple:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    return build_cell(arch_id, cell, ctx).abstract_args

@@ -1,0 +1,29 @@
+"""LR schedules. The paper uses cosine annealing 1e-3 -> 1e-5 over 3000 steps."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_annealing(lr_max: float, lr_min: float, total_steps: int,
+                     warmup_steps: int = 0):
+    """Cosine decay from lr_max to lr_min with optional linear warmup."""
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        if warmup_steps > 0:
+            warm = lr_max * step / warmup_steps
+        else:
+            warm = jnp.asarray(lr_max, jnp.float32)
+        denom = max(total_steps - warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / denom, 0.0, 1.0)
+        cos = lr_min + 0.5 * (lr_max - lr_min) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn
+
+
+def constant(lr: float):
+    def fn(step):
+        return jnp.full((), lr, jnp.float32)
+
+    return fn

@@ -1,0 +1,66 @@
+"""Two-stage retrieval with RAE (beyond-paper integration, DESIGN.md §2).
+
+Stage 1 scans the *reduced* corpus (R^m, m << n) with the fused
+distance+top-k engine for k * rerank_factor candidates — this is where the
+paper's compression pays: scan FLOPs and bytes both shrink by n/m.
+Stage 2 reranks only the candidates in the original space, recovering the
+exact-metric ordering on the shortlist. The paper's k-NN preservation bound
+(kappa(W), Eq. 16) governs stage-1 recall, which ``recall_vs_exact``
+measures directly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import rae as rae_lib
+from ..models.common import MeshCtx
+from . import distributed as ds
+
+
+def encode_corpus(rae_params, db: jax.Array, ctx: MeshCtx,
+                  chunk: int = 65536) -> jax.Array:
+    """Encode a (possibly huge) corpus through W_e, preserving row sharding."""
+    db = ctx.constrain(db, "db_rows", None)
+    z = rae_lib.encode(rae_params, db.astype(jnp.float32))
+    return ctx.constrain(z, "db_rows", None)
+
+
+def two_stage_search(
+    queries: jax.Array,       # [Q, n]
+    db_full: jax.Array,       # [N, n] row-sharded
+    db_reduced: jax.Array,    # [N, m] row-sharded (encode_corpus output)
+    rae_params,
+    k: int,
+    ctx: MeshCtx,
+    rerank_factor: int = 4,
+    metric: str = "euclidean",
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (scores [Q, k], indices [Q, k]) in the ORIGINAL space."""
+    zq = rae_lib.encode(rae_params, queries.astype(jnp.float32))
+    k1 = min(k * rerank_factor, db_reduced.shape[0])
+    _, cand = ds.search(zq, db_reduced, k1, ctx, metric=metric)  # [Q, k1]
+    # rerank in full space: gather candidates (k1 rows/query) then exact
+    cand_vecs = jnp.take(db_full, cand, axis=0)  # [Q, k1, n]
+    q32 = queries.astype(jnp.float32)
+    c32 = cand_vecs.astype(jnp.float32)
+    if metric == "cosine":
+        qn = q32 / jnp.maximum(jnp.linalg.norm(q32, -1, keepdims=True), 1e-12)
+        cn = c32 / jnp.maximum(jnp.linalg.norm(c32, -1, keepdims=True), 1e-12)
+        s = jnp.einsum("qd,qcd->qc", qn, cn)
+    else:
+        s = -jnp.sum(jnp.square(c32 - q32[:, None, :]), -1)
+    v, sel = jax.lax.top_k(s, k)
+    return v, jnp.take_along_axis(cand, sel, axis=1)
+
+
+def recall_vs_exact(queries, db_full, db_reduced, rae_params, k, ctx,
+                    rerank_factor: int = 4, metric: str = "euclidean") -> float:
+    """Recall@k of two-stage search against the exact full-space scan."""
+    _, exact_idx = ds.search(queries, db_full, k, ctx, metric=metric)
+    _, ts_idx = two_stage_search(queries, db_full, db_reduced, rae_params, k,
+                                 ctx, rerank_factor, metric)
+    inter = (exact_idx[:, :, None] == ts_idx[:, None, :]).any(-1)
+    return float(jnp.mean(inter.astype(jnp.float32)))

@@ -1,0 +1,80 @@
+"""Baseline DR implementations (PCA / MDS / Isomap / UMAP-lite / RP)."""
+import numpy as np
+import pytest
+
+from repro.core import baselines, metrics
+from repro.data import synthetic
+
+
+@pytest.fixture(scope="module")
+def data():
+    x = synthetic.embedding_corpus(600, 40, n_clusters=5, intrinsic=10, seed=1)
+    return synthetic.train_test_split(x)
+
+
+def test_pca_orthonormal_components(data):
+    tr, _ = data
+    p = baselines.PCA(8).fit(tr)
+    gram = p.components_.T @ p.components_
+    np.testing.assert_allclose(gram, np.eye(8), atol=1e-4)
+
+
+def test_pca_matches_svd_variance(data):
+    tr, _ = data
+    p = baselines.PCA(8).fit(tr)
+    z = p.transform(tr)
+    var = z.var(axis=0)
+    assert np.all(np.diff(var) <= 1e-3)  # decreasing variance order
+
+
+def test_mds_recovers_euclidean_config():
+    """Classical MDS on exact euclidean distances reproduces the config up
+    to rotation: pairwise distances must match."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(100, 6)).astype(np.float32)
+    sq = np.sum(x * x, 1)
+    d2 = sq[:, None] - 2 * x @ x.T + sq[None, :]
+    y = baselines._classical_mds_from_d2(d2, 6)
+    dy2 = (np.sum(y * y, 1)[:, None] - 2 * y @ y.T + np.sum(y * y, 1)[None, :])
+    np.testing.assert_allclose(d2, dy2, atol=1e-2 * d2.max())
+
+
+def test_mds_linear_out_of_sample(data):
+    tr, te = data
+    m = baselines.MDSLinear(8, max_train=400).fit(tr)
+    z = m.transform(te)
+    assert z.shape == (te.shape[0], 8)
+    assert np.isfinite(z).all()
+
+
+def test_isomap_runs_and_beats_nothing(data):
+    tr, te = data
+    iso = baselines.Isomap(8, n_neighbors=8, max_train=300).fit(tr)
+    z = iso.transform(te)
+    assert z.shape == (te.shape[0], 8)
+    assert np.isfinite(z).all()
+
+
+def test_umap_lite_runs(data):
+    tr, te = data
+    u = baselines.UMAPLite(4, n_neighbors=10, n_epochs=20,
+                           max_train=300).fit(tr)
+    z = u.transform(te)
+    assert z.shape == (te.shape[0], 4)
+    assert np.isfinite(z).all()
+
+
+def test_pca_beats_rp_on_anisotropic(data):
+    """Ordering sanity used by Table 1: PCA > random projection here."""
+    tr, te = data
+    p = baselines.PCA(8).fit(tr)
+    r = baselines.GaussianRP(8).fit(tr)
+    acc_p = metrics.preservation_accuracy(te, p.transform(te), k=5)
+    acc_r = metrics.preservation_accuracy(te, r.transform(te), k=5)
+    assert acc_p > acc_r
+
+
+def test_make_baseline_factory():
+    for name in ("pca", "rp", "mds", "isomap", "umap"):
+        b = baselines.make_baseline(name, 4)
+        assert b.out_dim == 4

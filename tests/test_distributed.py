@@ -1,0 +1,231 @@
+"""Distributed runtime: checkpoint roundtrip/resharding, fault tolerance,
+compression, partitioning rules, search engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.compression import (ErrorFeedbackState, ef_init,
+                                           int8_compress, int8_decompress)
+from repro.distributed.fault_tolerance import (SimulatedFailure,
+                                               StragglerWatchdog,
+                                               TrainingSupervisor)
+from repro.distributed.partitioning import (ParamDef, default_rules,
+                                            spec_for, usable_axes)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32),
+                  "d": jnp.asarray(3.5)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_save=False)
+    t = _tree()
+    cm.save(10, t)
+    r = cm.restore_into(10, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+    for s in (1, 2, 3, 4):
+        cm.save(s, _tree())
+    cm.wait()
+    assert cm.all_steps() == [3, 4]
+
+
+def test_checkpoint_skips_corrupt(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_save=False)
+    cm.save(1, _tree())
+    cm.save(2, _tree())
+    # corrupt step 2
+    d = os.path.join(str(tmp_path), "step_00000002")
+    victim = [f for f in os.listdir(d) if f.endswith(".npy")][0]
+    with open(os.path.join(d, victim), "wb") as f:
+        f.write(b"garbage")
+    r = cm.restore_latest()
+    assert r is not None and r["step"] == 1
+
+
+def test_checkpoint_restore_latest_empty(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    assert cm.restore_latest() is None
+
+
+def test_checkpoint_atomicity_tmp_never_visible(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_save=False)
+    cm.save(5, _tree())
+    assert not any(n.startswith(".tmp") for n in os.listdir(str(tmp_path)))
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: crash + resume replays the same stream
+# ---------------------------------------------------------------------------
+def _quadratic_problem():
+    """Minimize ||w - target||^2 with per-step deterministic 'batches'."""
+    target = jnp.asarray(np.arange(8.0, dtype=np.float32))
+
+    @jax.jit
+    def step(w, n_done, batch):
+        g = 2 * (w - target) + 0.01 * batch
+        w = w - 0.05 * g
+        return w, n_done + 1, {"loss": jnp.sum((w - target) ** 2)}
+
+    def batch_fn(s):
+        return jnp.asarray(np.random.default_rng(s).normal(size=8),
+                           jnp.float32)
+
+    return step, (jnp.zeros(8), jnp.asarray(0)), batch_fn
+
+
+def test_supervisor_crash_resume_bitwise(tmp_path):
+    step, init, batch_fn = _quadratic_problem()
+    # uninterrupted run
+    sup_ref = TrainingSupervisor(step, init, batch_fn)
+    ref = sup_ref.run(60)
+    w_ref = sup_ref.state[0]
+
+    # crashed + resumed run
+    ckdir = str(tmp_path / "ck")
+    sup1 = TrainingSupervisor(step, init, batch_fn, checkpoint_dir=ckdir,
+                              save_every=20)
+    with pytest.raises(SimulatedFailure):
+        sup1.run(60, fail_at_step=45)
+    sup1.ckpt.wait()
+    sup2 = TrainingSupervisor(step, init, batch_fn, checkpoint_dir=ckdir,
+                              save_every=20)
+    assert sup2.start_step == 40
+    sup2.run(60)
+    np.testing.assert_allclose(np.asarray(sup2.state[0]), np.asarray(w_ref),
+                               rtol=1e-6)
+
+
+def test_straggler_watchdog():
+    wd = StragglerWatchdog(threshold=3.0, warmup=5)
+    for s in range(20):
+        wd.observe(s, 0.01)
+    assert wd.observe(20, 0.2)  # 20x slower -> flagged
+    assert len(wd.report.slow_steps) == 1
+    # the straggler didn't poison the EWMA
+    assert wd.report.ewma_s < 0.02
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+def test_int8_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    c = int8_compress(g)
+    back = int8_decompress(c)
+    # max quantization error is scale/2
+    assert float(jnp.abs(back - g).max()) <= float(c.scale) * 0.51
+
+
+def test_error_feedback_residual_bounded():
+    """EF residual stays bounded over repeated compression (convergence
+    prerequisite, Karimireddy'19)."""
+    rng = np.random.default_rng(1)
+    state = ef_init({"g": jnp.zeros(128)})
+    res_norms = []
+    from repro.distributed.compression import int8_compress, int8_decompress
+    r = state.residual["g"]
+    for step in range(50):
+        g = jnp.asarray(rng.normal(size=128), jnp.float32)
+        corrected = g + r
+        c = int8_compress(corrected)
+        r = corrected - int8_decompress(c)
+        res_norms.append(float(jnp.linalg.norm(r)))
+    assert max(res_norms[10:]) < 1.0  # quantization error scale, not growing
+
+
+# ---------------------------------------------------------------------------
+# partitioning rules
+# ---------------------------------------------------------------------------
+def test_spec_progressive_fallback():
+    import os
+    # fake mesh via jax.make_mesh on 1 device won't have 16-way axes; use
+    # pure logic through usable_axes with a stub mesh-like object
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    rules = default_rules(multi_pod=True)
+    assert usable_axes(128, "batch", rules, FakeMesh()) == ("pod", "data")
+    assert usable_axes(1, "batch", rules, FakeMesh()) == ()
+    assert usable_axes(1_048_576, "tokens", rules, FakeMesh()) == \
+        ("pod", "data", "model")
+    assert usable_axes(128, "tokens", rules, FakeMesh()) == ("pod", "data")
+
+
+def test_spec_for_no_duplicate_axes():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    rules = default_rules()
+    spec = spec_for((128, 4096, 4096), ("experts", "tokens", None), rules,
+                    FakeMesh())
+    # experts takes model; tokens then can only use data
+    assert spec[0] == "model"
+    flat = spec[1]
+    assert flat == "data" or flat == ("data",)
+
+
+def test_schema_init_deterministic_and_order_independent():
+    from repro.distributed.partitioning import init_from_schema
+
+    schema_a = {"x": ParamDef((4, 4), (None, None)),
+                "y": ParamDef((4,), (None,), init="zeros")}
+    schema_b = {"y": ParamDef((4,), (None,), init="zeros"),
+                "x": ParamDef((4, 4), (None, None))}
+    k = jax.random.PRNGKey(0)
+    a = init_from_schema(schema_a, k)
+    b = init_from_schema(schema_b, k)
+    np.testing.assert_array_equal(np.asarray(a["x"]), np.asarray(b["x"]))
+
+
+# ---------------------------------------------------------------------------
+# search engine (local path; mesh path covered by dry-run)
+# ---------------------------------------------------------------------------
+def test_search_exact(rng=np.random.default_rng(0)):
+    from repro.models.common import NULL_CTX
+    from repro.search import search
+
+    q = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    db = jnp.asarray(rng.normal(size=(200, 16)), jnp.float32)
+    _, idx = search(q, db, 5, NULL_CTX)
+    d = np.linalg.norm(np.asarray(q)[:, None] - np.asarray(db)[None], axis=-1)
+    ref = np.argsort(d, 1)[:, :5]
+    np.testing.assert_array_equal(np.sort(np.asarray(idx), 1), np.sort(ref, 1))
+
+
+def test_two_stage_recall_better_with_rerank():
+    from repro.configs import RAEConfig
+    from repro.core import rae as rae_lib, trainer
+    from repro.data import synthetic
+    from repro.models.common import NULL_CTX
+    from repro.search import encode_corpus, recall_vs_exact
+
+    data = synthetic.embedding_corpus(1200, 32, n_clusters=4, intrinsic=10,
+                                      seed=0)
+    cfg = RAEConfig(in_dim=32, out_dim=8, steps=200, batch_size=64)
+    res = trainer.train(cfg, data, log_every=999)
+    db = jnp.asarray(data)
+    db_red = encode_corpus(res.params, db, NULL_CTX)
+    q = db[:64] + 0.01
+    r1 = recall_vs_exact(q, db, db_red, res.params, 10, NULL_CTX,
+                         rerank_factor=1)
+    r4 = recall_vs_exact(q, db, db_red, res.params, 10, NULL_CTX,
+                         rerank_factor=4)
+    assert r4 >= r1
+    assert r4 > 0.6

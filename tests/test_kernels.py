@@ -1,0 +1,164 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import embedding_bag, flash_decode, l2_topk, rae_encode
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.flash_decode.ref import flash_decode_ref
+from repro.kernels.l2_topk.ref import l2_topk_ref
+from repro.kernels.rae_encode.ref import rae_encode_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _arr(seed, shape, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# l2_topk
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("q,n,d,k", [
+    (32, 256, 32, 5), (100, 1000, 64, 10), (17, 513, 48, 7),
+    (128, 2048, 128, 32),
+])
+@pytest.mark.parametrize("metric", ["euclidean", "cosine"])
+def test_l2_topk_sweep(q, n, d, k, metric):
+    qs = _arr(q + n, (q, d))
+    db = _arr(n, (n, d))
+    v, i = l2_topk(qs, db, k, metric=metric, impl="pallas", bq=32, bn=128,
+                   interpret=True)
+    if metric == "cosine":
+        qn = qs / jnp.linalg.norm(qs, axis=-1, keepdims=True)
+        dn = db / jnp.linalg.norm(db, axis=-1, keepdims=True)
+        vr, ir = l2_topk_ref(qn, dn, k, metric)
+    else:
+        vr, ir = l2_topk_ref(qs, db, k, metric)
+    assert float((i == ir).mean()) > 0.999  # ties may swap, values must match
+    np.testing.assert_allclose(np.sort(v, 1), np.sort(vr, 1),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l2_topk_dtypes(dtype):
+    qs = _arr(1, (32, 64), dtype)
+    db = _arr(2, (512, 64), dtype)
+    v, i = l2_topk(qs, db, 8, impl="pallas", bq=32, bn=128, interpret=True)
+    vr, ir = l2_topk_ref(qs, db, 8)
+    assert float((i == ir).mean()) > 0.97  # bf16 rounding can reorder ties
+
+
+def test_l2_topk_matches_search_engine():
+    from repro.models.common import NULL_CTX
+    from repro.search import search
+
+    qs = _arr(5, (16, 32))
+    db = _arr(6, (300, 32))
+    v, i = l2_topk(qs, db, 5, impl="ref")
+    sv, si = search(qs, db, 5, NULL_CTX)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(si))
+
+
+# ---------------------------------------------------------------------------
+# rae_encode
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rows,n,m", [(256, 512, 128), (300, 768, 96),
+                                      (64, 384, 192), (1000, 1024, 256)])
+@pytest.mark.parametrize("normalize", [True, False])
+def test_rae_encode_sweep(rows, n, m, normalize):
+    x = _arr(rows, (rows, n))
+    w = _arr(n, (n, m)) * 0.05
+    z = rae_encode(x, w, normalize=normalize, impl="pallas", br=64, bk=128,
+                   interpret=True)
+    zr = rae_encode_ref(x, w, normalize)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_rae_encode_matches_model_encode():
+    from repro.configs import RAEConfig
+    from repro.core import rae as rae_lib
+
+    cfg = RAEConfig(in_dim=64, out_dim=16)
+    params = rae_lib.init(cfg, jax.random.PRNGKey(0))
+    x = _arr(9, (128, 64))
+    z_kernel = rae_encode(x, params["w_e"], normalize=False, impl="pallas",
+                          br=64, bk=64, interpret=True)
+    z_model = rae_lib.encode(params, x)
+    np.testing.assert_allclose(np.asarray(z_kernel), np.asarray(z_model),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_decode
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,kh,g,dh,s,cur", [
+    (2, 2, 4, 16, 64, 37), (4, 4, 1, 32, 128, 128), (1, 1, 8, 64, 256, 1),
+    (3, 8, 2, 16, 96, 50),
+])
+def test_flash_decode_sweep(b, kh, g, dh, s, cur):
+    q = _arr(b, (b, kh, g, dh))
+    kc = _arr(b + 1, (b, s, kh, dh))
+    vc = _arr(b + 2, (b, s, kh, dh))
+    o = flash_decode(q, kc, vc, cur, impl="pallas", bs=32, interpret=True)
+    orf = flash_decode_ref(q, kc, vc, cur)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_flash_decode_matches_model_decode_attention():
+    """Kernel == the shard-local math of attention.decode_attention."""
+    from repro.models.common import NULL_CTX
+    from repro.models.transformer import attention as attn
+
+    b, kh, g, dh, s = 2, 2, 3, 16, 32
+    h = kh * g
+    q = _arr(0, (b, h, dh))
+    kc = _arr(1, (b, s, kh, dh))
+    vc = _arr(2, (b, s, kh, dh))
+    kn = _arr(3, (b, kh, dh))
+    vn = _arr(4, (b, kh, dh))
+    cur = jnp.asarray(20, jnp.int32)
+    out, k2, v2 = attn.decode_attention(q, kc, vc, kn, vn, cur, NULL_CTX)
+    # reference: write new kv at position cur, then kernel over cur+1
+    kc2 = kc.at[:, 20].set(kn)
+    vc2 = vc.at[:, 20].set(vn)
+    o_k = flash_decode(q.reshape(b, kh, g, dh), kc2, vc2, 21, impl="pallas",
+                       bs=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out).reshape(b, kh, g, dh),
+                               np.asarray(o_k), rtol=3e-3, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(k2), np.asarray(kc2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("v,d,b,l", [(50, 32, 8, 6), (1000, 16, 32, 20),
+                                     (128, 64, 4, 3)])
+@pytest.mark.parametrize("mode", ["mean", "sum"])
+def test_embedding_bag_sweep(v, d, b, l, mode):
+    tbl = _arr(v, (v, d))
+    rng = np.random.default_rng(v + b)
+    ids = jnp.asarray(rng.integers(0, v, (b, l)), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, l + 1, (b,)), jnp.int32)
+    eb = embedding_bag(tbl, ids, lens, mode=mode, impl="pallas",
+                       interpret=True)
+    ebr = embedding_bag_ref(tbl, ids, lens, mode)
+    np.testing.assert_allclose(np.asarray(eb), np.asarray(ebr), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_embedding_bag_matches_model_path():
+    from repro.models.common import NULL_CTX, embedding_bag as model_bag
+
+    tbl = _arr(7, (64, 8))
+    rng = np.random.default_rng(3)
+    ids = jnp.asarray(rng.integers(0, 64, (16, 5)), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, 6, (16,)), jnp.int32)
+    a = embedding_bag(tbl, ids, lens, impl="pallas", interpret=True)
+    bq = model_bag(tbl, ids, lens, NULL_CTX, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bq), rtol=1e-5,
+                               atol=1e-5)

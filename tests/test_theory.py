@@ -1,0 +1,112 @@
+"""Property tests for the paper's theory (Section 3.3 + Appendix A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spectral, theory
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_w(seed, m, n, scale):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, (m, n)).astype(np.float32))
+
+
+def _rand_x(seed, b, n):
+    rng = np.random.default_rng(seed + 1)
+    return jnp.asarray(rng.normal(0, 1, (b, n)).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       m=st.integers(2, 24), extra=st.integers(1, 40),
+       scale=st.floats(0.01, 3.0))
+def test_rayleigh_quotient_bounds(seed, m, extra, scale):
+    """lambda_min <= R(M, x) <= lambda_max (Eq. 13, Appendix A)."""
+    n = m + extra
+    w = _rand_w(seed, m, n, scale)
+    mtm = w.T @ w  # symmetric PSD [n, n]
+    x = _rand_x(seed, 16, n)
+    r = theory.rayleigh_quotient(mtm, x)
+    evals = jnp.linalg.eigvalsh(mtm)
+    assert jnp.all(r >= evals[0] - 1e-3 * jnp.abs(evals[-1]) - 1e-5)
+    assert jnp.all(r <= evals[-1] * (1 + 1e-4) + 1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       m=st.integers(2, 24), extra=st.integers(1, 40),
+       scale=st.floats(0.01, 3.0))
+def test_norm_upper_bound_always_holds(seed, m, extra, scale):
+    """||Wx|| <= sigma_max ||x|| for all x (Eq. 15 upper half)."""
+    n = m + extra
+    w = _rand_w(seed, m, n, scale)
+    x = _rand_x(seed, 64, n)
+    assert bool(theory.norm_upper_bound_holds(w, x))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       m=st.integers(2, 24), extra=st.integers(1, 40),
+       scale=st.floats(0.05, 3.0))
+def test_norm_bounds_on_row_space(seed, m, extra, scale):
+    """Both Eq. 15 bounds hold for x in row(W) (see theory.py docstring:
+    the lower bound needs the row-space restriction when m < n)."""
+    n = m + extra
+    w = _rand_w(seed, m, n, scale)
+    x = _rand_x(seed, 64, n)
+    assert bool(theory.norm_bounds_hold(w, x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), m=st.integers(2, 16),
+       extra=st.integers(1, 30))
+def test_nullspace_violates_naive_lower_bound(seed, m, extra):
+    """Counterexample documenting the paper's implicit restriction: a
+    nullspace vector has ||Wx|| = 0 < sigma_min ||x||."""
+    n = m + extra
+    w = _rand_w(seed, m, n, 1.0)
+    _, _, vt = jnp.linalg.svd(w, full_matrices=True)
+    null = vt[m:]  # [n-m, n] basis of the nullspace
+    x = null[0:1]
+    s = spectral.singular_values(w)
+    wx = jnp.linalg.norm(x @ w.T)
+    assert float(wx) < float(s[-1] * jnp.linalg.norm(x)) + 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), scale=st.floats(0.1, 2.0))
+def test_frobenius_dominates_spectral(seed, scale):
+    """sigma_max = ||W||_2 <= ||W||_F (Eq. 8) — the paper's control lever."""
+    w = _rand_w(seed, 12, 48, scale)
+    st_ = spectral.analyze(w)
+    assert float(st_.sigma_max) <= float(st_.frobenius) + 1e-5
+
+
+def test_certified_fraction_monotone_in_kappa():
+    """Better-conditioned W certifies at least as many kNN relations
+    (Eq. 16: relation certified iff d_far/d_near > kappa)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(128, 32)).astype(np.float32))
+    w_good = jnp.eye(8, 32)  # kappa = 1
+    w_bad = jnp.diag(jnp.array([4.0, 1, 1, 1, 1, 1, 1, 0.25])) @ w_good
+    f_good = float(theory.certified_fraction(w_good, x, k=5))
+    f_bad = float(theory.certified_fraction(w_bad, x, k=5))
+    assert f_good >= f_bad
+    assert f_good > 0.5
+
+
+def test_isometry_preserves_knn_exactly():
+    """kappa(W) = 1 (orthogonal rows) => P_overall = 1 within the row space."""
+    from repro.core import metrics
+
+    rng = np.random.default_rng(1)
+    basis, _ = np.linalg.qr(rng.normal(size=(32, 8)).astype(np.float32))
+    z = rng.normal(size=(200, 8)).astype(np.float32)
+    x = z @ basis.T  # data lies in an 8-dim subspace of R^32
+    w = basis.T      # the exact isometry onto that subspace
+    acc = metrics.preservation_accuracy(x, x @ w.T, k=5)
+    assert acc == pytest.approx(1.0)
