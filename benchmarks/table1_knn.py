@@ -13,9 +13,8 @@ import time
 
 import numpy as np
 
-from repro.configs import RAEConfig
-from repro.core import baselines, metrics, trainer
-from repro.core import rae as rae_lib
+from repro import api
+from repro.core import metrics
 from repro.data import synthetic
 
 # paper's (dataset, dims) grid
@@ -26,47 +25,48 @@ GRID = {
     "flickr_like": (1024, (256, 512, 768)),
 }
 
+# registry names from repro.api; the paper's Table 1 omits "rp"
 METHODS = ("mds", "isomap", "umap", "pca", "rae")
+assert set(METHODS) <= set(api.list_reducers()), api.list_reducers()
 
 
 RAE_LAMBDA_GRID = (0.1, 0.3, 1.0)
 
 
+def make_tuned_reducer(name: str, tr: np.ndarray, m: int, rae_steps: int,
+                       wd: float, seed: int = 0) -> "api.Reducer":
+    """Construct (and for RAE, lambda-tune) a registry reducer, unfitted.
+
+    RAE's wd is tuned on a held-out validation split via the paper's
+    Figure-1 protocol (lambda is its stated hyperparameter); every method
+    comes out of ``api.make_reducer`` so the sweep loop below never
+    special-cases."""
+    if name != "rae":
+        return api.make_reducer(name, m)
+    n_val = max(len(tr) // 10, 64)
+    tr2, val = tr[n_val:], tr[:n_val]
+    best, best_acc = wd, -1.0
+    for lam in RAE_LAMBDA_GRID:
+        red = api.make_reducer("rae", m, steps=max(rae_steps // 3, 300),
+                               weight_decay=lam, seed=seed)
+        red.fit(tr2)
+        acc = metrics.preservation_accuracy(val, red.transform(val), k=5)
+        if acc > best_acc:
+            best, best_acc = lam, acc
+    return api.make_reducer("rae", m, steps=rae_steps, weight_decay=best,
+                            seed=seed)
+
+
 def run_method(name: str, tr: np.ndarray, te: np.ndarray, m: int,
                rae_steps: int, wd: float, seed: int = 0):
-    """Returns (reduced test vectors, train time, infer time). For RAE, wd
-    is tuned on a held-out validation split via the paper's Figure-1
-    protocol (lambda is its stated hyperparameter); tuning time is counted
-    into train time."""
-    import jax.numpy as jnp
-
+    """Returns (reduced test vectors, train time, infer time). Tuning time
+    is counted into train time."""
     t0 = time.perf_counter()
-    if name == "rae":
-        n_val = max(len(tr) // 10, 64)
-        tr2, val = tr[n_val:], tr[:n_val]
-        best, best_acc = wd, -1.0
-        for lam in RAE_LAMBDA_GRID:
-            cfg = RAEConfig(in_dim=tr.shape[1], out_dim=m,
-                            steps=max(rae_steps // 3, 300),
-                            weight_decay=lam, seed=seed)
-            res = trainer.train(cfg, tr2, log_every=10**9)
-            zv = np.asarray(rae_lib.encode(res.params, jnp.asarray(val)))
-            acc = metrics.preservation_accuracy(val, zv, k=5)
-            if acc > best_acc:
-                best, best_acc = lam, acc
-        cfg = RAEConfig(in_dim=tr.shape[1], out_dim=m, steps=rae_steps,
-                        weight_decay=best, seed=seed)
-        res = trainer.train(cfg, tr, log_every=10**9)
-        train_t = time.perf_counter() - t0
-        t1 = time.perf_counter()
-        z = np.asarray(rae_lib.encode(res.params, jnp.asarray(te)))
-        infer_t = time.perf_counter() - t1
-        return z, train_t, infer_t
-    b = baselines.make_baseline(name, m)
-    b.fit(tr)
+    red = make_tuned_reducer(name, tr, m, rae_steps, wd, seed)
+    red.fit(tr)
     train_t = time.perf_counter() - t0
     t1 = time.perf_counter()
-    z = b.transform(te)
+    z = red.transform(te)
     infer_t = time.perf_counter() - t1
     return z, train_t, infer_t
 

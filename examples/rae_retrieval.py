@@ -1,11 +1,13 @@
-"""End-to-end serving driver: a vector-search service with batched requests.
+"""End-to-end serving driver on the unified retrieval API.
 
     PYTHONPATH=src python examples/rae_retrieval.py
 
-The paper's deployment story: ingest a corpus, train RAE, encode the corpus
-into R^m, then serve batched k-NN queries with TWO-STAGE search (scan the
-reduced corpus with the fused distance+top-k engine, rerank the shortlist in
-the original space). Reports recall@k vs the exact scan and latency.
+The paper's deployment story through ``repro.api``: synthesize a corpus,
+``index_factory("RAE96,IVF128,Rerank4")`` builds the full stack (train RAE,
+encode the corpus into R^m, coarse-quantize the reduced space), then serve
+batched k-NN queries with full-space rerank. Reports recall@k vs the exact
+scan and latency. Swap the spec for "RAE96,Flat,Rerank4" (exact reduced
+scan) or "PCA96,Flat,Rerank4" (baseline reducer) — same serving path.
 """
 import sys
 
@@ -16,7 +18,8 @@ from repro.launch import serve  # noqa: E402
 
 def main():
     return serve.main([
-        "--n", "30000", "--dim", "512", "--m", "96", "--k", "10",
+        "--n", "30000", "--dim", "512", "--k", "10",
+        "--index-spec", "RAE96,IVF128,Rerank4",
         "--queries", "128", "--batches", "6", "--steps", "800",
     ])
 

@@ -1,0 +1,58 @@
+"""Unified retrieval API: ``Reducer`` + ``VectorIndex`` (FAISS-style).
+
+One stable surface over the paper's pipeline ("train an RAE, then search
+the reduced space") and every baseline/search tier the repo grew around it:
+
+* :class:`Reducer` — ``fit / transform / save / load`` with a string
+  registry (``pca``, ``rp``, ``mds``, ``isomap``, ``umap``, ``rae``). RAE is
+  a drop-in peer of the baselines for the first time.
+* :class:`VectorIndex` — ``build / search / save / load`` returning a
+  uniform :class:`SearchResult`; ``FlatIndex`` (exact distributed scan),
+  ``IVFFlatIndex`` (coarse-quantized), and the composable
+  ``TwoStageIndex(reducer, base_index)`` that unlocks RAE -> IVF -> rerank.
+* :func:`index_factory` — ``index_factory("RAE64,IVF256,Rerank4")`` builds
+  the whole stack from a spec string; ``parse_index_spec`` exposes the
+  parsed form.
+
+Everything persists to plain npz + json directories, so serving never
+retrains on start (``load_reducer`` / ``load_index``).
+"""
+from .reducer import (
+    RAEReducer,
+    Reducer,
+    get_reducer,
+    list_reducers,
+    load_reducer,
+    make_reducer,
+    register_reducer,
+)
+from .index import (
+    FlatIndex,
+    IVFFlatIndex,
+    SearchResult,
+    TwoStageIndex,
+    VectorIndex,
+    load_index,
+    register_index,
+)
+from .factory import IndexSpec, index_factory, parse_index_spec
+
+__all__ = [
+    "FlatIndex",
+    "IVFFlatIndex",
+    "IndexSpec",
+    "RAEReducer",
+    "Reducer",
+    "SearchResult",
+    "TwoStageIndex",
+    "VectorIndex",
+    "get_reducer",
+    "index_factory",
+    "list_reducers",
+    "load_index",
+    "load_reducer",
+    "make_reducer",
+    "parse_index_spec",
+    "register_index",
+    "register_reducer",
+]

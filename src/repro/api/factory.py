@@ -1,0 +1,131 @@
+"""FAISS-style ``index_factory``: build an index stack from a spec string.
+
+Grammar (comma-separated stages, case-insensitive)::
+
+    spec     := [reducer ","] base ["," rerank]
+    reducer  := ("RAE" | "PCA" | "RP" | "MDS" | "ISOMAP" | "UMAP") out_dim
+    base     := "Flat" | "IVF" n_cells
+    rerank   := "Rerank" factor          # requires a reducer stage
+
+Examples::
+
+    index_factory("Flat")                      # exact scan
+    index_factory("IVF256")                    # coarse-quantized, raw space
+    index_factory("PCA32,Flat")                # reduce, scan, rerank@1
+    index_factory("RAE64,IVF256,Rerank4")      # the full paper stack
+
+Any reducer name registered via :func:`repro.api.register_reducer` is
+accepted, so third-party reducers compose for free. ``parse_index_spec``
+exposes the parsed form for callers that need to inspect a spec (serving
+flags, benchmarks) without building anything.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Optional
+
+from ..models.common import NULL_CTX, MeshCtx
+from .index import FlatIndex, IVFFlatIndex, TwoStageIndex, VectorIndex
+from .reducer import list_reducers, make_reducer
+
+_TOKEN = re.compile(r"^([A-Za-z_]+?)(\d+)?$")
+
+
+@dataclass(frozen=True)
+class IndexSpec:
+    """Parsed form of a factory spec string."""
+
+    reducer: Optional[str] = None     # registry name, e.g. "rae"
+    out_dim: int = 0                  # reducer target dim
+    base: str = "flat"                # "flat" | "ivf"
+    n_cells: int = 0                  # ivf only
+    rerank_factor: int = 1
+
+
+def _fail(spec: str, why: str):
+    raise ValueError(f"bad index spec {spec!r}: {why}")
+
+
+def parse_index_spec(spec: str) -> IndexSpec:
+    tokens = [t.strip() for t in spec.split(",")]
+    if not spec.strip() or any(not t for t in tokens):
+        _fail(spec, "empty stage")
+    reducer: Optional[str] = None
+    out_dim = 0
+    base: Optional[str] = None
+    n_cells = 0
+    rerank = 0
+    for tok in tokens:
+        m = _TOKEN.match(tok)
+        if not m:
+            _fail(spec, f"unparseable stage {tok!r}")
+        name, num = m.group(1).lower(), m.group(2)
+        if name == "flat":
+            if num is not None:
+                _fail(spec, "Flat takes no parameter")
+            if base is not None:
+                _fail(spec, "multiple base stages")
+            if rerank:
+                _fail(spec, "Rerank must come last")
+            base = "flat"
+        elif name == "ivf":
+            if num is None:
+                _fail(spec, "IVF needs a cell count, e.g. IVF256")
+            if base is not None:
+                _fail(spec, "multiple base stages")
+            if rerank:
+                _fail(spec, "Rerank must come last")
+            base, n_cells = "ivf", int(num)
+        elif name == "rerank":
+            if num is None:
+                _fail(spec, "Rerank needs a factor, e.g. Rerank4")
+            if rerank:
+                _fail(spec, "multiple Rerank stages")
+            rerank = int(num)
+        elif name in list_reducers():
+            if num is None:
+                _fail(spec, f"reducer {name!r} needs a target dim, "
+                            f"e.g. {name.upper()}64")
+            if reducer is not None:
+                _fail(spec, "multiple reducer stages")
+            if base is not None:
+                _fail(spec, "reducer must come before the base stage")
+            reducer, out_dim = name, int(num)
+        else:
+            _fail(spec, f"unknown stage {tok!r} "
+                        f"(reducers: {list_reducers()}; bases: flat, ivf)")
+    if base is None:
+        _fail(spec, "no base stage (Flat or IVF<n>)")
+    if rerank and reducer is None:
+        _fail(spec, "Rerank requires a reducer stage to rerank against")
+    if out_dim <= 0 and reducer is not None:
+        _fail(spec, "reducer target dim must be positive")
+    return IndexSpec(reducer=reducer, out_dim=out_dim, base=base,
+                     n_cells=n_cells, rerank_factor=rerank or 1)
+
+
+def index_factory(spec: str, *, metric: str = "euclidean",
+                  ctx: MeshCtx = NULL_CTX,
+                  reducer_kw: Optional[dict[str, Any]] = None,
+                  index_kw: Optional[dict[str, Any]] = None) -> VectorIndex:
+    """Build an (unbuilt) index stack from ``spec``.
+
+    ``reducer_kw`` is forwarded to the reducer constructor (e.g. RAE's
+    ``steps`` / ``weight_decay`` / ``mesh``); ``index_kw`` to the base index
+    (e.g. IVF's ``nprobe``). Call ``.build(corpus)`` on the result.
+    """
+    parsed = parse_index_spec(spec)
+    index_kw = dict(index_kw or {})
+    if parsed.base == "ivf":
+        if metric != "euclidean":
+            raise ValueError("IVF base supports euclidean only")
+        base: VectorIndex = IVFFlatIndex(n_cells=parsed.n_cells, **index_kw)
+    else:
+        base = FlatIndex(metric=metric, ctx=ctx, **index_kw)
+    if parsed.reducer is None:
+        return base
+    reducer = make_reducer(parsed.reducer, parsed.out_dim,
+                           **dict(reducer_kw or {}))
+    return TwoStageIndex(reducer, base, rerank_factor=parsed.rerank_factor,
+                         metric=metric)

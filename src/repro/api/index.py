@@ -1,0 +1,360 @@
+"""``VectorIndex``: one build/search/save/load interface for every search tier.
+
+``FlatIndex`` wraps the exact distributed scan (``search.distributed``),
+``IVFFlatIndex`` the coarse-quantized probe scan (``search.ivf``), and
+``TwoStageIndex`` composes ANY :class:`~repro.api.reducer.Reducer` with ANY
+base index — reduced-space candidate generation, full-space rerank (the
+paper's deployment story, previously hardwired to RAE + flat scan in
+``search.twostage``).
+
+``search`` returns a uniform :class:`SearchResult` with device-synchronized
+wall latency. Scores follow the engine convention: higher = closer
+(negative squared euclidean / cosine similarity).
+
+Persistence layout mirrors the reducers: ``meta.json`` + ``arrays.npz``
+per directory; ``TwoStageIndex`` nests ``reducer/`` and ``base/``
+subdirectories. ``load_index(dir)`` dispatches on ``meta.json["kind"]``.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.common import NULL_CTX, MeshCtx
+from ..search import distributed as ds
+from ..search import ivf as ivf_lib
+from .reducer import Reducer, load_reducer
+
+_META = "meta.json"
+_ARRAYS = "arrays.npz"
+
+
+@dataclass
+class SearchResult:
+    """Uniform k-NN result: ``scores``/``indices`` are [Q, k]; higher score
+    = closer; ``latency_s`` is device-synchronized wall time of the query."""
+
+    scores: np.ndarray
+    indices: np.ndarray
+    latency_s: float
+
+    @property
+    def k(self) -> int:
+        return self.indices.shape[1]
+
+
+# ---------------------------------------------------------------------------
+# Registry / persistence plumbing
+# ---------------------------------------------------------------------------
+_INDEXES: dict[str, type] = {}
+
+
+def register_index(name: str):
+    def deco(cls):
+        _INDEXES[name.lower()] = cls
+        cls.kind = name.lower()
+        return cls
+
+    return deco
+
+
+def load_index(directory: str) -> "VectorIndex":
+    with open(os.path.join(directory, _META)) as f:
+        meta = json.load(f)
+    try:
+        cls = _INDEXES[meta["kind"]]
+    except KeyError:
+        raise KeyError(f"unknown index kind {meta['kind']!r}; "
+                       f"known: {sorted(_INDEXES)}") from None
+    return cls._load(directory, meta)
+
+
+def _save_dir(directory: str, meta: dict[str, Any],
+              arrays: dict[str, np.ndarray]) -> None:
+    os.makedirs(directory, exist_ok=True)
+    with open(os.path.join(directory, _META), "w") as f:
+        json.dump(meta, f, indent=1)
+    np.savez(os.path.join(directory, _ARRAYS), **arrays)
+
+
+def _load_arrays(directory: str) -> dict[str, np.ndarray]:
+    with np.load(os.path.join(directory, _ARRAYS)) as z:
+        return {k: z[k] for k in z.files}
+
+
+class VectorIndex:
+    """Base class: ``build(corpus)`` then ``search(queries, k)``."""
+
+    kind: str = "abstract"
+
+    @property
+    def ntotal(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def built(self) -> bool:
+        raise NotImplementedError
+
+    def build(self, corpus: np.ndarray) -> "VectorIndex":
+        raise NotImplementedError
+
+    def search(self, queries: np.ndarray, k: int) -> SearchResult:
+        raise NotImplementedError
+
+    def save(self, directory: str) -> None:
+        raise NotImplementedError
+
+    def _require_built(self):
+        if not self.built:
+            raise RuntimeError(f"{self.kind}: search before build")
+
+
+def _timed(fn: Callable[[], tuple[jax.Array, jax.Array]]) -> SearchResult:
+    t0 = time.perf_counter()
+    scores, idx = fn()
+    jax.block_until_ready(idx)
+    dt = time.perf_counter() - t0
+    return SearchResult(scores=np.asarray(scores), indices=np.asarray(idx),
+                        latency_s=dt)
+
+
+# ---------------------------------------------------------------------------
+# Flat (exact scan)
+# ---------------------------------------------------------------------------
+@register_index("flat")
+class FlatIndex(VectorIndex):
+    """Exact k-NN over the raw corpus via the sharded scan + global top-k
+    merge. With a mesh in ``ctx`` the corpus row-shards over ``db_rows``."""
+
+    def __init__(self, metric: str = "euclidean", ctx: MeshCtx = NULL_CTX):
+        self.metric = metric
+        self.ctx = ctx
+        self._db: Optional[jax.Array] = None
+
+    @property
+    def ntotal(self) -> int:
+        return 0 if self._db is None else int(self._db.shape[0])
+
+    @property
+    def built(self) -> bool:
+        return self._db is not None
+
+    def build(self, corpus: np.ndarray) -> "FlatIndex":
+        self._db = jnp.asarray(corpus, jnp.float32)
+        return self
+
+    @functools.cached_property
+    def _scan(self):
+        return jax.jit(
+            lambda q, db, k: ds.search(q, db, k, self.ctx, metric=self.metric),
+            static_argnames=("k",))
+
+    def search(self, queries: np.ndarray, k: int) -> SearchResult:
+        self._require_built()
+        q = jnp.asarray(queries, jnp.float32)
+        return _timed(lambda: self._scan(q, self._db, k=min(k, self.ntotal)))
+
+    def save(self, directory: str) -> None:
+        self._require_built()
+        _save_dir(directory, {"kind": self.kind, "metric": self.metric},
+                  {"db": np.asarray(self._db)})
+
+    @classmethod
+    def _load(cls, directory: str, meta: dict[str, Any]) -> "FlatIndex":
+        self = cls(metric=meta["metric"])
+        self._db = jnp.asarray(_load_arrays(directory)["db"])
+        return self
+
+
+# ---------------------------------------------------------------------------
+# IVF-Flat (coarse quantization)
+# ---------------------------------------------------------------------------
+@register_index("ivf_flat")
+class IVFFlatIndex(VectorIndex):
+    """k-means cells + padded-dense probe scan (``search.ivf``). Euclidean
+    only (scores = negative squared distance). ``nprobe`` defaults to
+    n_cells/16 (min 8): recall-friendly without scanning everything."""
+
+    def __init__(self, n_cells: int = 256, nprobe: int = 0,
+                 cell_cap: Optional[int] = None, kmeans_iters: int = 10,
+                 seed: int = 0):
+        self.n_cells = n_cells
+        self.nprobe = nprobe or max(8, n_cells // 16)
+        self.cell_cap = cell_cap
+        self.kmeans_iters = kmeans_iters
+        self.seed = seed
+        self._ivf: Optional[ivf_lib.IVFIndex] = None
+        self._ntotal = 0
+
+    @property
+    def ntotal(self) -> int:
+        return self._ntotal
+
+    @property
+    def built(self) -> bool:
+        return self._ivf is not None
+
+    def build(self, corpus: np.ndarray) -> "IVFFlatIndex":
+        corpus = jnp.asarray(corpus, jnp.float32)
+        n_cells = min(self.n_cells, corpus.shape[0])
+        self._ivf = ivf_lib.build(corpus, n_cells, cell_cap=self.cell_cap,
+                                  kmeans_iters=self.kmeans_iters,
+                                  seed=self.seed)
+        self._ntotal = int(corpus.shape[0])
+        return self
+
+    def search(self, queries: np.ndarray, k: int) -> SearchResult:
+        """Like FAISS, a query whose probed cells hold fewer than k members
+        pads the tail with index -1 / score -inf."""
+        self._require_built()
+        q = jnp.asarray(queries, jnp.float32)
+        nprobe = min(self.nprobe, int(self._ivf.centroids.shape[0]))
+        k_req = min(k, self.ntotal)
+        # the probe scan can surface at most nprobe * cell_cap rows
+        k_eff = min(k_req, nprobe * int(self._ivf.lists.shape[1]))
+
+        def run():
+            v, i = ivf_lib.search(self._ivf, q, k_eff, nprobe=nprobe)
+            if k_eff < k_req:
+                pad = k_req - k_eff
+                v = jnp.concatenate(
+                    [v, jnp.full((v.shape[0], pad), -jnp.inf, v.dtype)], 1)
+                i = jnp.concatenate(
+                    [i, jnp.full((i.shape[0], pad), -1, i.dtype)], 1)
+            return v, i
+
+        return _timed(run)
+
+    def save(self, directory: str) -> None:
+        self._require_built()
+        meta = {"kind": self.kind, "n_cells": self.n_cells,
+                "nprobe": self.nprobe, "kmeans_iters": self.kmeans_iters,
+                "seed": self.seed, "ntotal": self._ntotal,
+                "spill": int(self._ivf.spill)}
+        _save_dir(directory, meta, {
+            "centroids": np.asarray(self._ivf.centroids),
+            "lists": np.asarray(self._ivf.lists),
+            "list_vecs": np.asarray(self._ivf.list_vecs),
+            "list_mask": np.asarray(self._ivf.list_mask),
+        })
+
+    @classmethod
+    def _load(cls, directory: str, meta: dict[str, Any]) -> "IVFFlatIndex":
+        self = cls(n_cells=meta["n_cells"], nprobe=meta["nprobe"],
+                   kmeans_iters=meta["kmeans_iters"], seed=meta["seed"])
+        a = _load_arrays(directory)
+        self._ivf = ivf_lib.IVFIndex(
+            centroids=jnp.asarray(a["centroids"]),
+            lists=jnp.asarray(a["lists"]),
+            list_vecs=jnp.asarray(a["list_vecs"]),
+            list_mask=jnp.asarray(a["list_mask"]),
+            spill=int(meta.get("spill", 0)))
+        self._ntotal = int(meta["ntotal"])
+        return self
+
+
+# ---------------------------------------------------------------------------
+# TwoStage: reducer -> base index -> full-space rerank
+# ---------------------------------------------------------------------------
+@register_index("two_stage")
+class TwoStageIndex(VectorIndex):
+    """Compose any reducer with any base index.
+
+    ``build`` fits the reducer on the corpus (skipped if already fitted —
+    pre-trained reducers plug straight in), encodes the corpus into R^m,
+    and builds the base index over the REDUCED vectors. ``search`` encodes
+    queries, fetches ``k * rerank_factor`` candidates from the base index,
+    and reranks them with exact distances in the ORIGINAL space — so scores
+    are full-space even when stage 1 is approximate twice over (reduced +
+    IVF)."""
+
+    def __init__(self, reducer: Reducer, base_index: VectorIndex,
+                 rerank_factor: int = 4, metric: str = "euclidean"):
+        self.reducer = reducer
+        self.base = base_index
+        self.rerank_factor = rerank_factor
+        self.metric = metric
+        self._db_full: Optional[jax.Array] = None
+
+    @property
+    def ntotal(self) -> int:
+        return 0 if self._db_full is None else int(self._db_full.shape[0])
+
+    @property
+    def built(self) -> bool:
+        return self._db_full is not None and self.base.built
+
+    def build(self, corpus: np.ndarray) -> "TwoStageIndex":
+        corpus = np.asarray(corpus, np.float32)
+        # absent `fitted` means unknown -> fit (skipping would hand an
+        # unfitted reducer to transform on the next line)
+        if not getattr(self.reducer, "fitted", False):
+            self.reducer.fit(corpus)
+        reduced = self.reducer.transform(corpus)
+        self.base.build(reduced)
+        self._db_full = jnp.asarray(corpus)
+        return self
+
+    @functools.cached_property
+    def _rerank(self):
+        def fn(q, cand_vecs, cand, k):
+            q32 = q.astype(jnp.float32)
+            c32 = cand_vecs.astype(jnp.float32)
+            if self.metric == "cosine":
+                qn = q32 / jnp.maximum(
+                    jnp.linalg.norm(q32, axis=-1, keepdims=True), 1e-12)
+                cn = c32 / jnp.maximum(
+                    jnp.linalg.norm(c32, axis=-1, keepdims=True), 1e-12)
+                s = jnp.einsum("qd,qcd->qc", qn, cn)
+            else:
+                s = -jnp.sum(jnp.square(c32 - q32[:, None, :]), -1)
+            # an IVF base pads short results with id -1 (jnp.take wrapped it
+            # to the LAST corpus row above): keep the -1 id but pin its score
+            # to -inf so a pad can never outrank a real candidate
+            s = jnp.where(cand >= 0, s, -jnp.inf)
+            v, sel = jax.lax.top_k(s, k)
+            return v, jnp.take_along_axis(cand, sel, axis=1)
+
+        return jax.jit(fn, static_argnames=("k",))
+
+    def search(self, queries: np.ndarray, k: int) -> SearchResult:
+        self._require_built()
+        t0 = time.perf_counter()
+        zq = self.reducer.transform(np.asarray(queries, np.float32))
+        k_eff = min(k, self.ntotal)
+        k1 = min(k_eff * self.rerank_factor, self.ntotal)
+        stage1 = self.base.search(zq, k1)
+        cand = jnp.asarray(stage1.indices)
+        q = jnp.asarray(queries, jnp.float32)
+        cand_vecs = jnp.take(self._db_full, cand, axis=0)  # [Q, k1, n]
+        scores, idx = self._rerank(q, cand_vecs, cand, k=k_eff)
+        jax.block_until_ready(idx)
+        dt = time.perf_counter() - t0
+        return SearchResult(scores=np.asarray(scores),
+                            indices=np.asarray(idx), latency_s=dt)
+
+    def save(self, directory: str) -> None:
+        self._require_built()
+        _save_dir(directory, {"kind": self.kind,
+                              "rerank_factor": self.rerank_factor,
+                              "metric": self.metric},
+                  {"db_full": np.asarray(self._db_full)})
+        self.reducer.save(os.path.join(directory, "reducer"))
+        self.base.save(os.path.join(directory, "base"))
+
+    @classmethod
+    def _load(cls, directory: str, meta: dict[str, Any]) -> "TwoStageIndex":
+        reducer = load_reducer(os.path.join(directory, "reducer"))
+        base = load_index(os.path.join(directory, "base"))
+        self = cls(reducer, base, rerank_factor=meta["rerank_factor"],
+                   metric=meta["metric"])
+        self._db_full = jnp.asarray(_load_arrays(directory)["db_full"])
+        return self

@@ -1,11 +1,16 @@
-"""Vector-search serving launcher: the paper's technique as a service.
+"""Vector-search serving launcher on the unified ``repro.api`` surface.
 
-Pipeline (matches examples/rae_retrieval.py, batch-request form):
-  1. load/synthesize an embedding corpus, shard it over the mesh,
-  2. train (or restore) an RAE encoder,
-  3. encode the corpus into R^m (rae_encode kernel path on TPU),
-  4. serve batched k-NN queries: two-stage (reduced scan -> full rerank),
-  5. report recall@k vs the exact full-space scan and latency percentiles.
+The index stack is a FAISS-style spec string (``--index-spec``), built by
+``api.index_factory`` — any registered reducer composed with any base
+index::
+
+    RAE64,Flat,Rerank4      # the paper stack: RAE -> exact reduced scan -> rerank
+    RAE64,IVF256,Rerank4    # + coarse quantization in the reduced space
+    PCA64,Flat,Rerank4      # baseline reducer, same serving path
+    Flat                    # exact full-space scan (the recall reference)
+
+Built indexes persist (``--save-index DIR``) and reload without retraining
+(``--load-index DIR``) — cold starts no longer pay the RAE training bill.
 
 Smoke-scale by default so it runs anywhere:
   PYTHONPATH=src python -m repro.launch.serve --n 20000 --dim 256 --m 64
@@ -16,23 +21,54 @@ import argparse
 import time
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..configs import RAEConfig
-from ..core import trainer
+from .. import api
 from ..data import synthetic
-from ..models.common import MeshCtx, NULL_CTX
-from ..search import two_stage_search, search as exact_search, encode_corpus
-from .mesh import make_host_mesh
+
+
+def build_or_load_index(args) -> tuple[api.VectorIndex, np.ndarray]:
+    """Returns (ready index, corpus). The corpus is synthesized either way:
+    a loaded index serves it from its own persisted state, but the recall
+    reference scan still needs the raw vectors."""
+    corpus = synthetic.embedding_corpus(args.n, args.dim, n_clusters=16,
+                                        intrinsic=args.dim // 4,
+                                        seed=args.seed)
+    if args.load_index:
+        print(f"[2/5] loading index from {args.load_index}")
+        index = api.load_index(args.load_index)
+        if index.ntotal != args.n:
+            raise SystemExit(
+                f"loaded index holds {index.ntotal} vectors but "
+                f"--n={args.n}: the recall reference would compare ids "
+                f"across different corpora. Re-serve with --n "
+                f"{index.ntotal} (and the --dim/--seed the index was "
+                f"built with).")
+        return index, corpus
+
+    spec = args.index_spec or f"RAE{args.m},Flat,Rerank{args.rerank_factor}"
+    parsed = api.parse_index_spec(spec)
+    reducer_kw = {}
+    if parsed.reducer == "rae":
+        reducer_kw = dict(steps=args.steps, weight_decay=args.weight_decay,
+                          seed=args.seed)
+    print(f"[2/5] building {spec!r}"
+          + (f" (rae: {args.steps} steps, lambda={args.weight_decay})"
+             if reducer_kw else ""))
+    index = api.index_factory(spec, reducer_kw=reducer_kw)
+    t0 = time.perf_counter()
+    index.build(corpus)
+    print(f"      built in {time.perf_counter() - t0:.2f}s "
+          f"(ntotal={index.ntotal})")
+    return index, corpus
 
 
 def main(argv: Optional[list[str]] = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=20000)
     ap.add_argument("--dim", type=int, default=256)
-    ap.add_argument("--m", type=int, default=64)
+    ap.add_argument("--m", type=int, default=64,
+                    help="reducer target dim for the default spec")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--queries", type=int, default=256)
     ap.add_argument("--batches", type=int, default=8)
@@ -40,50 +76,42 @@ def main(argv: Optional[list[str]] = None) -> int:
     ap.add_argument("--steps", type=int, default=600)
     ap.add_argument("--weight-decay", type=float, default=1e-2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--index-spec", default=None,
+                    help='factory spec, e.g. "RAE64,IVF256,Rerank4" '
+                         "(default: RAE<m>,Flat,Rerank<rerank-factor>)")
+    ap.add_argument("--save-index", default=None, metavar="DIR",
+                    help="persist the built index (reducer + base + corpus)")
+    ap.add_argument("--load-index", default=None, metavar="DIR",
+                    help="serve a previously saved index (skips training)")
     args = ap.parse_args(argv)
 
-    ctx = NULL_CTX  # host-scale; production uses make_production_mesh
-
     print(f"[1/5] corpus: {args.n} x {args.dim}")
-    corpus = synthetic.embedding_corpus(args.n, args.dim, n_clusters=16,
-                                        intrinsic=args.dim // 4,
-                                        seed=args.seed)
-    db = jnp.asarray(corpus)
+    index, corpus = build_or_load_index(args)
 
-    print(f"[2/5] training RAE {args.dim} -> {args.m} "
-          f"(lambda={args.weight_decay}, {args.steps} steps)")
-    cfg = RAEConfig(in_dim=args.dim, out_dim=args.m, steps=args.steps,
-                    weight_decay=args.weight_decay, seed=args.seed)
-    res = trainer.train(cfg, corpus, log_every=200)
-    print(f"      train {res.wall_time_s:.2f}s, "
-          f"final loss {res.history[-1]['loss']:.4f}")
+    if args.save_index:
+        index.save(args.save_index)
+        print(f"      saved -> {args.save_index}")
 
-    print("[3/5] encoding corpus")
-    db_red = encode_corpus(res.params, db, ctx)
+    print("[3/5] exact reference index (recall baseline)")
+    exact = api.FlatIndex().build(corpus)
 
     print(f"[4/5] serving {args.batches} batches x {args.queries} queries")
     rng = np.random.default_rng(args.seed + 1)
     lat, recalls = [], []
-    ts = jax.jit(lambda q: two_stage_search(
-        q, db, db_red, res.params, args.k, ctx,
-        rerank_factor=args.rerank_factor))
-    ex = jax.jit(lambda q: exact_search(q, db, args.k, ctx))
-    for b in range(args.batches):
-        q = db[rng.integers(0, args.n, args.queries)] + \
-            0.01 * rng.standard_normal((args.queries, args.dim)).astype(np.float32)
-        t0 = time.perf_counter()
-        _, idx = ts(q)
-        jax.block_until_ready(idx)
-        lat.append(time.perf_counter() - t0)
-        _, exact_idx = ex(q)
-        inter = (jnp.asarray(exact_idx)[:, :, None] ==
-                 jnp.asarray(idx)[:, None, :]).any(-1).mean()
+    for _ in range(args.batches):
+        q = corpus[rng.integers(0, args.n, args.queries)] + \
+            0.01 * rng.standard_normal(
+                (args.queries, args.dim)).astype(np.float32)
+        res = index.search(q, args.k)
+        lat.append(res.latency_s)
+        ref = exact.search(q, args.k)
+        inter = (ref.indices[:, :, None] ==
+                 res.indices[:, None, :]).any(-1).mean()
         recalls.append(float(inter))
-    lat_ms = np.array(lat[1:]) * 1e3  # drop compile batch
+    lat_ms = np.array(lat[1:] or lat) * 1e3  # drop compile batch
     print(f"[5/5] recall@{args.k}: {np.mean(recalls):.4f} | "
           f"latency p50 {np.percentile(lat_ms, 50):.2f} ms "
-          f"p99 {np.percentile(lat_ms, 99):.2f} ms "
-          f"(compression {args.dim}/{args.m} = {args.dim/args.m:.1f}x)")
+          f"p99 {np.percentile(lat_ms, 99):.2f} ms")
     return 0
 
 

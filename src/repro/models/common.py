@@ -124,6 +124,25 @@ def row_parallel_out_proj(x: jax.Array, w: jax.Array, ctx: "MeshCtx",
                      out_specs=out_spec, check_rep=False)(x, w)
 
 
+# optimization_barrier has no differentiation rule on older jax (< 0.5);
+# this custom_vjp applies the barrier on both the primal and the cotangent,
+# which is also what newer jax's built-in rule does.
+@jax.custom_vjp
+def opt_barrier(x: jax.Array) -> jax.Array:
+    return jax.lax.optimization_barrier(x)
+
+
+def _opt_barrier_fwd(x):
+    return opt_barrier(x), None
+
+
+def _opt_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+opt_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)
+
+
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
     x32 = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)

@@ -24,9 +24,9 @@ import jax.numpy as jnp
 from ...configs.base import TransformerConfig
 from ...distributed.partitioning import (ParamDef, abstract_from_schema,
                                          init_from_schema)
-from ..common import (MeshCtx, NULL_CTX, pad_to_multiple, rms_norm,
-                      row_parallel_out_proj, sharded_embedding_lookup,
-                      sp_all_gather)
+from ..common import (MeshCtx, NULL_CTX, opt_barrier, pad_to_multiple,
+                      rms_norm, row_parallel_out_proj,
+                      sharded_embedding_lookup, sp_all_gather)
 from . import attention as attn_lib
 from . import moe as moe_lib
 
@@ -93,7 +93,10 @@ def schema(cfg: TransformerConfig, ctx: MeshCtx = NULL_CTX) -> dict:
         "final_ln": ParamDef((d,), (None,), pdt, init="ones"),
     }
     if not cfg.tie_embeddings:
-        out["head"] = ParamDef((d, v), ("embed_fsdp", "vocab"), pdt)
+        # same scale as the tied path (embed.T, std 0.02): init logits stay
+        # O(0.02*sqrt(d)) so init xent ~ log(vocab_size) either way.
+        out["head"] = ParamDef((d, v), ("embed_fsdp", "vocab"), pdt,
+                               init="normal")
     return out
 
 
@@ -133,7 +136,7 @@ def decoder_layer(x, lp, cfg: TransformerConfig, ctx: MeshCtx, scheme: str,
     # Barrier: without it XLA hoists the rms_norm bf16->f32 convert of the
     # *saved residual stack* out of the backward while loop, materializing a
     # full-precision [L, B, S, d] copy (+6 GiB/dev on qwen3-235B).
-    x = jax.lax.optimization_barrier(x)
+    x = opt_barrier(x)
     b, s, d = x.shape
     cdt = jnp.dtype(cfg.compute_dtype)
     h, kh = effective_heads(cfg, ctx)

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.data.synthetic import random_graph
 from repro.models.common import NULL_CTX, embedding_bag, sharded_embedding_lookup

@@ -25,8 +25,11 @@ def corpus():
 
 
 def test_loss_decreases(corpus):
+    # 240 steps: at the paper's lr schedule (cosine 1e-3 -> 1e-5, verified
+    # correctly stepped: lr(0)=lr_max, lr(T-1)~lr_min) the default 120-step
+    # budget only reaches 0.52x; 240 reaches 0.36x — safely under the bound.
     tr, _ = corpus
-    res = trainer.train(small_cfg(), tr, log_every=20)
+    res = trainer.train(small_cfg(steps=240), tr, log_every=20)
     assert res.history[-1]["loss"] < 0.5 * res.history[0]["loss"]
 
 

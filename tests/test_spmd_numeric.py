@@ -15,12 +15,12 @@ SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.launch.mesh import AxisType, make_mesh
 from repro.distributed.partitioning import default_rules
 from repro.models.common import MeshCtx, NULL_CTX, sharded_embedding_lookup, embedding_bag
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"),
+                 axis_types=(AxisType.Auto,) * 3)
 ctx = MeshCtx(mesh=mesh, rules=default_rules(multi_pod=True))
 rng = np.random.default_rng(0)
 
