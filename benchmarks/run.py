@@ -2,8 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. Full-scale variants of the
 paper tables live in table1_knn.py / table2_time.py / fig1_weight_decay.py
-(separate CLIs); this harness runs CPU-budget versions of each so
-``python -m benchmarks.run`` finishes in minutes and covers every artifact.
+/ table3_quant.py (separate CLIs); this harness runs CPU-budget versions of
+each so ``python -m benchmarks.run`` finishes in minutes and covers every
+artifact.
+
+Machine-readable output: every run also writes ``results/BENCH_run.json``
+(and each table CLI writes its own ``results/BENCH_<name>.json`` via
+:func:`write_bench`) with a stable schema — ``{bench, created_unix,
+config, rows}`` — so the perf trajectory (recall, QPS, bytes/vector,
+wall-clock) is diffable across PRs.
 """
 from __future__ import annotations
 
@@ -13,11 +20,32 @@ import time
 
 import numpy as np
 
-ROWS: list[tuple[str, float, str]] = []
+ROWS: list[dict] = []
 
 
-def emit(name: str, us: float, derived: str = ""):
-    ROWS.append((name, us, derived))
+def write_bench(name: str, rows: list[dict], config: dict | None = None,
+                results_dir: str = "results") -> str:
+    """Write ``results/BENCH_<name>.json``: the one machine-readable schema
+    every benchmark emits. ``rows`` are flat dicts (recall/qps/bytes
+    keys where applicable); ``config`` records the knobs that produced
+    them."""
+    os.makedirs(results_dir, exist_ok=True)
+    path = os.path.join(results_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": name, "created_unix": time.time(),
+                   "config": config or {}, "rows": rows}, f, indent=1)
+    print(f"# wrote {path} ({len(rows)} rows)")
+    return path
+
+
+def emit(name: str, us: float, derived: str = "", **extra):
+    """One benchmark data point. ``extra`` keys (recall, qps,
+    bytes_per_vector, ...) land verbatim in BENCH_run.json."""
+    row = {"name": name, "us_per_call": us, "derived": derived}
+    if us > 0:
+        row["qps"] = 1e6 / us
+    row.update(extra)
+    ROWS.append(row)
     print(f"{name},{us:.2f},{derived}", flush=True)
 
 
@@ -128,6 +156,22 @@ def bench_ivf():
          f"recall@10={rec:.3f};build={build_s:.1f}s;scan_frac={8/64:.2f}")
 
 
+def bench_quant_quick():
+    """CPU-budget slice of table3_quant: the quantized tier's
+    memory-vs-recall-vs-QPS rows (also writes BENCH_quant.json)."""
+    from .table3_quant import run
+
+    rows = run(quick=True)
+    for r in rows:
+        emit(f"table3.{r['space']}.{r['spec']}",
+             r["latency_ms_p50"] * 1e3,
+             f"recall@{r['k']}={r['recall_at_k']};"
+             f"bytes={r['bytes_per_vector']:.0f}",
+             recall=r["recall_at_k"], qps=r["qps"],
+             bytes_per_vector=r["bytes_per_vector"],
+             build_s=r["build_s"])
+
+
 def bench_table1_quick():
     from .table1_knn import run
 
@@ -182,13 +226,15 @@ def main() -> None:
     bench_rae_train()
     bench_two_stage_search()
     bench_ivf()
+    bench_quant_quick()
     bench_fig1_quick()
     bench_table1_quick()
     bench_roofline_summary()
+    wall = time.time() - t0
     os.makedirs("results", exist_ok=True)
-    json.dump([{"name": n, "us_per_call": u, "derived": d}
-               for n, u, d in ROWS], open("results/bench.json", "w"), indent=1)
-    print(f"# total {time.time()-t0:.1f}s -> results/bench.json")
+    json.dump(ROWS, open("results/bench.json", "w"), indent=1)  # legacy path
+    write_bench("run", ROWS, config={"wall_clock_s": round(wall, 1)})
+    print(f"# total {wall:.1f}s -> results/bench.json")
 
 
 if __name__ == "__main__":

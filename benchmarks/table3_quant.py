@@ -1,0 +1,119 @@
+"""Table 3 (beyond paper): memory vs recall vs QPS for the quantized tier.
+
+Sweeps {Flat, SQ8, PQ8x8, IVF<c>,PQ8x8} x {raw, RAE<m>} and reports
+recall@k against the exact full-space scan, bytes-per-vector of the stage-1
+structure, and queries-per-second — the three axes the quantized tier
+trades against each other. The RAE space runs every base behind a
+``TwoStageIndex`` with full-space rerank (the paper's deployment), reusing
+ONE fitted reducer across all bases so differences are purely storage-tier.
+
+Writes ``results/BENCH_quant.json`` (schema: ``benchmarks.run.write_bench``)
+so the memory/recall/QPS trajectory is tracked across PRs.
+
+CPU-budget default: ``python -m benchmarks.table3_quant --quick`` finishes
+in a few minutes at n=4096; the full 20k x 256 run mirrors the acceptance
+test in tests/test_quantized.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core.metrics import recall_at_k
+from repro.data import synthetic
+
+from .run import write_bench
+
+
+def _qps(index: "api.VectorIndex", q: np.ndarray, k: int,
+         repeats: int = 3) -> tuple[float, float]:
+    """(queries/s, p50 latency ms); first call warms the jit cache."""
+    index.search(q, k)
+    lat = [index.search(q, k).latency_s for _ in range(repeats)]
+    p50 = float(np.percentile(lat, 50))
+    return q.shape[0] / p50, p50 * 1e3
+
+
+def run(n: int = 20000, dim: int = 256, m_reduce: int = 64, pq_m: int = 8,
+        n_cells: int = 256, n_queries: int = 256, k: int = 10,
+        rae_steps: int = 1000, rerank_factor: int = 4, seed: int = 0,
+        quick: bool = False) -> list[dict]:
+    if quick:
+        n, rae_steps, n_cells, n_queries = 4096, 300, 64, 64
+    corpus = synthetic.embedding_corpus(n, dim, n_clusters=16,
+                                        intrinsic=dim // 4, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    q = corpus[rng.integers(0, n, n_queries)] + \
+        0.01 * rng.standard_normal((n_queries, dim)).astype(np.float32)
+
+    exact = api.FlatIndex().build(corpus)
+    exact_res = exact.search(q, k)
+
+    print(f"fitting RAE {dim}->{m_reduce} ({rae_steps} steps) once, "
+          f"shared across the RAE-space bases")
+    reducer = api.make_reducer("rae", m_reduce, steps=rae_steps, seed=seed)
+    reducer.fit(corpus)
+
+    bases = ["Flat", "SQ8", f"PQ{pq_m}x8", f"IVF{n_cells},PQ{pq_m}x8"]
+    rows = []
+    for space in ("raw", f"rae{m_reduce}"):
+        for base in bases:
+            if space == "raw":
+                spec = base
+                index = api.index_factory(base)
+            else:
+                spec = f"RAE{m_reduce},{base},Rerank{rerank_factor}"
+                index = api.TwoStageIndex(reducer,
+                                          api.index_factory(base),
+                                          rerank_factor=rerank_factor)
+            t0 = time.perf_counter()
+            index.build(corpus)
+            build_s = time.perf_counter() - t0
+            qps, p50_ms = _qps(index, q, k)
+            rec = recall_at_k(index.search(q, k).indices, exact_res.indices)
+            row = {"space": space, "spec": spec,
+                   "recall_at_k": round(rec, 4), "k": k,
+                   "bytes_per_vector": index.bytes_per_vector,
+                   "qps": round(qps, 1), "latency_ms_p50": round(p50_ms, 3),
+                   "build_s": round(build_s, 2)}
+            rows.append(row)
+            print(f"{space:8s} {spec:28s} recall@{k}={rec:.4f} "
+                  f"bytes/vec={row['bytes_per_vector']:6.1f} "
+                  f"qps={qps:8.1f} build={build_s:.1f}s")
+    write_bench("quant", rows,
+                config={"n": n, "dim": dim, "m_reduce": m_reduce,
+                        "pq_m": pq_m, "n_cells": n_cells,
+                        "n_queries": n_queries, "k": k,
+                        "rae_steps": rae_steps,
+                        "rerank_factor": rerank_factor, "seed": seed,
+                        "quick": quick})
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--m-reduce", type=int, default=64)
+    ap.add_argument("--pq-m", type=int, default=8)
+    ap.add_argument("--n-cells", type=int, default=256)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--rae-steps", type=int, default=1000)
+    ap.add_argument("--rerank-factor", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU-budget run: n=4096, 300 RAE steps")
+    a = ap.parse_args(argv)
+    run(n=a.n, dim=a.dim, m_reduce=a.m_reduce, pq_m=a.pq_m,
+        n_cells=a.n_cells, n_queries=a.queries, k=a.k,
+        rae_steps=a.rae_steps, rerank_factor=a.rerank_factor, seed=a.seed,
+        quick=a.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,11 +8,13 @@ the reduced space") and every baseline/search tier the repo grew around it:
   a drop-in peer of the baselines for the first time.
 * :class:`VectorIndex` — ``build / search / save / load`` returning a
   uniform :class:`SearchResult`; ``FlatIndex`` (exact distributed scan),
-  ``IVFFlatIndex`` (coarse-quantized), and the composable
+  ``IVFFlatIndex`` (coarse-quantized), the quantized storage tiers
+  (``SQ8Index`` / ``PQIndex`` / ``IVFSQ8Index`` / ``IVFPQIndex`` — int8 and
+  product codes searched with ADC), and the composable
   ``TwoStageIndex(reducer, base_index)`` that unlocks RAE -> IVF -> rerank.
-* :func:`index_factory` — ``index_factory("RAE64,IVF256,Rerank4")`` builds
-  the whole stack from a spec string; ``parse_index_spec`` exposes the
-  parsed form.
+* :func:`index_factory` — ``index_factory("RAE64,IVF256,PQ8x8,Rerank4")``
+  builds the whole stack from a spec string; ``parse_index_spec`` exposes
+  the parsed form.
 
 Everything persists to plain npz + json directories, so serving never
 retrains on start (``load_reducer`` / ``load_index``).
@@ -35,12 +37,17 @@ from .index import (
     load_index,
     register_index,
 )
+from .quantized import IVFPQIndex, IVFSQ8Index, PQIndex, SQ8Index
 from .factory import IndexSpec, index_factory, parse_index_spec
 
 __all__ = [
     "FlatIndex",
     "IVFFlatIndex",
+    "IVFPQIndex",
+    "IVFSQ8Index",
     "IndexSpec",
+    "PQIndex",
+    "SQ8Index",
     "RAEReducer",
     "Reducer",
     "SearchResult",

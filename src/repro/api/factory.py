@@ -2,22 +2,41 @@
 
 Grammar (comma-separated stages, case-insensitive)::
 
-    spec     := [reducer ","] base ["," rerank]
+    spec     := [reducer ","] stack ["," rerank]
+    stack    := base | quant | base "," quant
     reducer  := ("RAE" | "PCA" | "RP" | "MDS" | "ISOMAP" | "UMAP") out_dim
     base     := "Flat" | "IVF" n_cells
-    rerank   := "Rerank" factor          # requires a reducer stage
+    quant    := "SQ8" | "PQ" m "x" bits     # bits in 1..8
+    rerank   := "Rerank" factor             # requires a reducer stage
+
+Stage semantics:
+
+* ``reducer`` — any name registered via :func:`repro.api.register_reducer`
+  (third-party reducers compose for free); maps the corpus to
+  R^``out_dim`` before the base index sees it.
+* ``base`` — how candidates are *found*: exact scan (``Flat``) or k-means
+  coarse cells probed ``nprobe`` at a time (``IVF``).
+* ``quant`` — how vectors are *stored*: f32 (absent), per-dim int8
+  scalar codes (``SQ8``), or m-subspace product codes searched with ADC
+  (``PQ8x8`` = 8 subspaces x 8 bits = 8 bytes/vector). A quant stage with
+  no explicit base implies ``Flat`` storage, so ``"SQ8"`` alone is a flat
+  SQ8 scan. Quantized tiers are euclidean-only.
+* ``rerank`` — re-scores ``factor * k`` stage-1 candidates with exact
+  full-space distances; needs a reducer (that is what defines the "full
+  space" to return to).
 
 Examples::
 
-    index_factory("Flat")                      # exact scan
-    index_factory("IVF256")                    # coarse-quantized, raw space
-    index_factory("PCA32,Flat")                # reduce, scan, rerank@1
-    index_factory("RAE64,IVF256,Rerank4")      # the full paper stack
+    index_factory("Flat")                       # exact scan
+    index_factory("IVF256")                     # coarse-quantized, raw space
+    index_factory("SQ8")                        # flat scan over int8 codes
+    index_factory("RAE32,SQ8")                  # reduce, then SQ8 codes
+    index_factory("IVF256,PQ8x8")               # FAISS-style IVF-PQ (ADC)
+    index_factory("RAE64,IVF256,Rerank4")       # the full paper stack
+    index_factory("RAE64,IVF256,PQ8x8,Rerank4") # + PQ list payloads
 
-Any reducer name registered via :func:`repro.api.register_reducer` is
-accepted, so third-party reducers compose for free. ``parse_index_spec``
-exposes the parsed form for callers that need to inspect a spec (serving
-flags, benchmarks) without building anything.
+``parse_index_spec`` exposes the parsed form for callers that need to
+inspect a spec (serving flags, benchmarks) without building anything.
 """
 from __future__ import annotations
 
@@ -27,9 +46,11 @@ from typing import Any, Optional
 
 from ..models.common import NULL_CTX, MeshCtx
 from .index import FlatIndex, IVFFlatIndex, TwoStageIndex, VectorIndex
+from .quantized import IVFPQIndex, IVFSQ8Index, PQIndex, SQ8Index
 from .reducer import list_reducers, make_reducer
 
 _TOKEN = re.compile(r"^([A-Za-z_]+?)(\d+)?$")
+_PQ = re.compile(r"^pq(\d+)x(\d+)$", re.IGNORECASE)
 
 
 @dataclass(frozen=True)
@@ -40,6 +61,9 @@ class IndexSpec:
     out_dim: int = 0                  # reducer target dim
     base: str = "flat"                # "flat" | "ivf"
     n_cells: int = 0                  # ivf only
+    quant: Optional[str] = None       # None | "sq8" | "pq"
+    pq_m: int = 0                     # pq only: subspace count
+    pq_bits: int = 0                  # pq only: bits per code
     rerank_factor: int = 1
 
 
@@ -55,27 +79,49 @@ def parse_index_spec(spec: str) -> IndexSpec:
     out_dim = 0
     base: Optional[str] = None
     n_cells = 0
+    quant: Optional[str] = None
+    pq_m = pq_bits = 0
     rerank = 0
+
+    def check_order(stage):
+        if rerank:
+            _fail(spec, "Rerank must come last")
+        if quant is not None and stage in ("base", "quant"):
+            _fail(spec, "quantizer must be the last storage stage")
+
     for tok in tokens:
+        pq = _PQ.match(tok)
+        if pq:
+            check_order("quant")
+            m_, bits_ = int(pq.group(1)), int(pq.group(2))
+            if m_ <= 0:
+                _fail(spec, "PQ needs at least one subspace, e.g. PQ8x8")
+            if not 1 <= bits_ <= 8:
+                _fail(spec, f"PQ bits must be in 1..8, got {bits_}")
+            quant, pq_m, pq_bits = "pq", m_, bits_
+            continue
         m = _TOKEN.match(tok)
         if not m:
             _fail(spec, f"unparseable stage {tok!r}")
         name, num = m.group(1).lower(), m.group(2)
-        if name == "flat":
+        if name == "sq":
+            if num != "8":
+                _fail(spec, f"only SQ8 is supported, got {tok!r}")
+            check_order("quant")
+            quant = "sq8"
+        elif name == "flat":
             if num is not None:
                 _fail(spec, "Flat takes no parameter")
             if base is not None:
                 _fail(spec, "multiple base stages")
-            if rerank:
-                _fail(spec, "Rerank must come last")
+            check_order("base")
             base = "flat"
         elif name == "ivf":
             if num is None:
                 _fail(spec, "IVF needs a cell count, e.g. IVF256")
             if base is not None:
                 _fail(spec, "multiple base stages")
-            if rerank:
-                _fail(spec, "Rerank must come last")
+            check_order("base")
             base, n_cells = "ivf", int(num)
         elif name == "rerank":
             if num is None:
@@ -89,20 +135,43 @@ def parse_index_spec(spec: str) -> IndexSpec:
                             f"e.g. {name.upper()}64")
             if reducer is not None:
                 _fail(spec, "multiple reducer stages")
-            if base is not None:
+            if base is not None or quant is not None:
                 _fail(spec, "reducer must come before the base stage")
             reducer, out_dim = name, int(num)
         else:
             _fail(spec, f"unknown stage {tok!r} "
-                        f"(reducers: {list_reducers()}; bases: flat, ivf)")
-    if base is None:
-        _fail(spec, "no base stage (Flat or IVF<n>)")
+                        f"(reducers: {list_reducers()}; bases: flat, ivf; "
+                        f"quantizers: sq8, pq<m>x<bits>)")
+    if base is None and quant is None:
+        _fail(spec, "no base stage (Flat, IVF<n>, SQ8 or PQ<m>x<bits>)")
     if rerank and reducer is None:
         _fail(spec, "Rerank requires a reducer stage to rerank against")
     if out_dim <= 0 and reducer is not None:
         _fail(spec, "reducer target dim must be positive")
-    return IndexSpec(reducer=reducer, out_dim=out_dim, base=base,
-                     n_cells=n_cells, rerank_factor=rerank or 1)
+    return IndexSpec(reducer=reducer, out_dim=out_dim, base=base or "flat",
+                     n_cells=n_cells, quant=quant, pq_m=pq_m,
+                     pq_bits=pq_bits, rerank_factor=rerank or 1)
+
+
+def _make_base(parsed: IndexSpec, metric: str, ctx: MeshCtx,
+               index_kw: dict[str, Any]) -> VectorIndex:
+    """Map (base, quant) to the index class; see the module grammar."""
+    if parsed.quant is not None and metric != "euclidean":
+        raise ValueError("quantized tiers support euclidean only")
+    if parsed.base == "ivf":
+        if metric != "euclidean":
+            raise ValueError("IVF base supports euclidean only")
+        if parsed.quant == "sq8":
+            return IVFSQ8Index(n_cells=parsed.n_cells, **index_kw)
+        if parsed.quant == "pq":
+            return IVFPQIndex(n_cells=parsed.n_cells, m=parsed.pq_m,
+                              bits=parsed.pq_bits, **index_kw)
+        return IVFFlatIndex(n_cells=parsed.n_cells, **index_kw)
+    if parsed.quant == "sq8":
+        return SQ8Index(**index_kw)
+    if parsed.quant == "pq":
+        return PQIndex(m=parsed.pq_m, bits=parsed.pq_bits, **index_kw)
+    return FlatIndex(metric=metric, ctx=ctx, **index_kw)
 
 
 def index_factory(spec: str, *, metric: str = "euclidean",
@@ -113,16 +182,11 @@ def index_factory(spec: str, *, metric: str = "euclidean",
 
     ``reducer_kw`` is forwarded to the reducer constructor (e.g. RAE's
     ``steps`` / ``weight_decay`` / ``mesh``); ``index_kw`` to the base index
-    (e.g. IVF's ``nprobe``). Call ``.build(corpus)`` on the result.
+    (e.g. IVF's ``nprobe``, PQ's ``kmeans_iters``). Call ``.build(corpus)``
+    on the result.
     """
     parsed = parse_index_spec(spec)
-    index_kw = dict(index_kw or {})
-    if parsed.base == "ivf":
-        if metric != "euclidean":
-            raise ValueError("IVF base supports euclidean only")
-        base: VectorIndex = IVFFlatIndex(n_cells=parsed.n_cells, **index_kw)
-    else:
-        base = FlatIndex(metric=metric, ctx=ctx, **index_kw)
+    base = _make_base(parsed, metric, ctx, dict(index_kw or {}))
     if parsed.reducer is None:
         return base
     reducer = make_reducer(parsed.reducer, parsed.out_dim,

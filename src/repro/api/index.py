@@ -95,12 +95,25 @@ class VectorIndex:
 
     kind: str = "abstract"
 
+    #: When this index serves as stage 1 under a rerank (``TwoStageIndex``),
+    #: fetch this multiple of the rerank budget as candidates. Lossy-ranking
+    #: tiers (PQ/ADC: candidate lists are cheap, ordering is noisy) override
+    #: with > 1 so the exact rerank sees past the quantization noise.
+    stage1_oversample: int = 1
+
     @property
     def ntotal(self) -> int:
         raise NotImplementedError
 
     @property
     def built(self) -> bool:
+        raise NotImplementedError
+
+    @property
+    def bytes_per_vector(self) -> float:
+        """Per-vector payload of the stored search structure (codes +
+        per-vector auxiliaries), the memory axis benchmarks report next to
+        recall/QPS. Composite indexes report their stage-1 payload."""
         raise NotImplementedError
 
     def build(self, corpus: np.ndarray) -> "VectorIndex":
@@ -117,10 +130,25 @@ class VectorIndex:
             raise RuntimeError(f"{self.kind}: search before build")
 
 
+def _pad_result(v: jax.Array, i: jax.Array, k_req: int
+                ) -> tuple[jax.Array, jax.Array]:
+    """FAISS pad convention when fewer than k candidates exist: tail rows
+    get score -inf / index -1. Shared by every tier that can come up
+    short (IVF probes, quantized lists)."""
+    pad = k_req - v.shape[1]
+    if pad <= 0:
+        return v, i
+    v = jnp.concatenate([v, jnp.full((v.shape[0], pad), -jnp.inf, v.dtype)], 1)
+    i = jnp.concatenate([i, jnp.full((i.shape[0], pad), -1, i.dtype)], 1)
+    return v, i
+
+
 def _timed(fn: Callable[[], tuple[jax.Array, jax.Array]]) -> SearchResult:
+    """Monotonic wall time of the query, blocking on EVERY device output —
+    otherwise the clock measures dispatch, not the scan (jax is async)."""
     t0 = time.perf_counter()
     scores, idx = fn()
-    jax.block_until_ready(idx)
+    jax.block_until_ready((scores, idx))
     dt = time.perf_counter() - t0
     return SearchResult(scores=np.asarray(scores), indices=np.asarray(idx),
                         latency_s=dt)
@@ -146,6 +174,11 @@ class FlatIndex(VectorIndex):
     @property
     def built(self) -> bool:
         return self._db is not None
+
+    @property
+    def bytes_per_vector(self) -> float:
+        self._require_built()
+        return float(self._db.shape[1] * self._db.dtype.itemsize)
 
     def build(self, corpus: np.ndarray) -> "FlatIndex":
         self._db = jnp.asarray(corpus, jnp.float32)
@@ -202,6 +235,12 @@ class IVFFlatIndex(VectorIndex):
     def built(self) -> bool:
         return self._ivf is not None
 
+    @property
+    def bytes_per_vector(self) -> float:
+        """f32 list vector + int32 row id."""
+        self._require_built()
+        return float(self._ivf.list_vecs.shape[2] * 4 + 4)
+
     def build(self, corpus: np.ndarray) -> "IVFFlatIndex":
         corpus = jnp.asarray(corpus, jnp.float32)
         n_cells = min(self.n_cells, corpus.shape[0])
@@ -223,13 +262,7 @@ class IVFFlatIndex(VectorIndex):
 
         def run():
             v, i = ivf_lib.search(self._ivf, q, k_eff, nprobe=nprobe)
-            if k_eff < k_req:
-                pad = k_req - k_eff
-                v = jnp.concatenate(
-                    [v, jnp.full((v.shape[0], pad), -jnp.inf, v.dtype)], 1)
-                i = jnp.concatenate(
-                    [i, jnp.full((i.shape[0], pad), -1, i.dtype)], 1)
-            return v, i
+            return _pad_result(v, i, k_req)
 
         return _timed(run)
 
@@ -271,10 +304,12 @@ class TwoStageIndex(VectorIndex):
     ``build`` fits the reducer on the corpus (skipped if already fitted —
     pre-trained reducers plug straight in), encodes the corpus into R^m,
     and builds the base index over the REDUCED vectors. ``search`` encodes
-    queries, fetches ``k * rerank_factor`` candidates from the base index,
-    and reranks them with exact distances in the ORIGINAL space — so scores
-    are full-space even when stage 1 is approximate twice over (reduced +
-    IVF)."""
+    queries, fetches ``k * rerank_factor * base.stage1_oversample``
+    candidates from the base index (quantized bases oversample: their
+    candidate lists are cheap but their ordering is noisy), and reranks
+    them with exact distances in the ORIGINAL space — so scores are
+    full-space even when stage 1 is approximate twice over (reduced +
+    IVF/PQ)."""
 
     def __init__(self, reducer: Reducer, base_index: VectorIndex,
                  rerank_factor: int = 4, metric: str = "euclidean"):
@@ -291,6 +326,13 @@ class TwoStageIndex(VectorIndex):
     @property
     def built(self) -> bool:
         return self._db_full is not None and self.base.built
+
+    @property
+    def bytes_per_vector(self) -> float:
+        """Stage-1 payload only: the reduced/quantized structure is what
+        lives on the accelerator; the full-space rerank store can stay in
+        host RAM (the paper's deployment split)."""
+        return self.base.bytes_per_vector
 
     def build(self, corpus: np.ndarray) -> "TwoStageIndex":
         corpus = np.asarray(corpus, np.float32)
@@ -330,13 +372,14 @@ class TwoStageIndex(VectorIndex):
         t0 = time.perf_counter()
         zq = self.reducer.transform(np.asarray(queries, np.float32))
         k_eff = min(k, self.ntotal)
-        k1 = min(k_eff * self.rerank_factor, self.ntotal)
+        over = getattr(self.base, "stage1_oversample", 1)
+        k1 = min(k_eff * self.rerank_factor * over, self.ntotal)
         stage1 = self.base.search(zq, k1)
         cand = jnp.asarray(stage1.indices)
         q = jnp.asarray(queries, jnp.float32)
         cand_vecs = jnp.take(self._db_full, cand, axis=0)  # [Q, k1, n]
         scores, idx = self._rerank(q, cand_vecs, cand, k=k_eff)
-        jax.block_until_ready(idx)
+        jax.block_until_ready((scores, idx))
         dt = time.perf_counter() - t0
         return SearchResult(scores=np.asarray(scores),
                             indices=np.asarray(idx), latency_s=dt)

@@ -4,10 +4,13 @@ l2_topk       — fused distance + online top-k scan (the retrieval hot path)
 rae_encode    — RAE encoder GEMM + fused L2-normalize epilogue
 flash_decode  — split-KV online-softmax decode attention
 embedding_bag — scalar-prefetch gather-reduce (torch EmbeddingBag on TPU)
+pq_adc        — fused PQ ADC scan: LUT build + one-hot code gather + top-k
 """
 from .embedding_bag.ops import embedding_bag
 from .flash_decode.ops import flash_decode
 from .l2_topk.ops import l2_topk
+from .pq_adc.ops import pq_adc
 from .rae_encode.ops import rae_encode
 
-__all__ = ["embedding_bag", "flash_decode", "l2_topk", "rae_encode"]
+__all__ = ["embedding_bag", "flash_decode", "l2_topk", "pq_adc",
+           "rae_encode"]

@@ -1,0 +1,62 @@
+"""Jit'd public wrapper: platform dispatch + padding + k-overflow handling."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import pq_adc_pallas
+from .ref import pq_adc_ref
+
+
+def _pad_rows(x, mult):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x, pad
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "impl", "bq", "bn", "interpret"))
+def pq_adc(queries: jax.Array, codebooks: jax.Array, codes: jax.Array,
+           k: int, impl: str = "auto", bq: int = 128, bn: int = 512,
+           interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Fused PQ ADC top-k scan.
+
+    queries [Q, d] (d = m * dsub), codebooks [m, ksub, dsub], codes [N, m]
+    integer. Returns (scores [Q, k], indices [Q, k]); scores are negative
+    squared asymmetric distances (higher = closer). ``k > N`` is legal: the
+    tail pads with score -inf / index -1 (FAISS convention, matching the
+    IVF tiers).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    q = queries.astype(jnp.float32)
+    cb = codebooks.astype(jnp.float32)
+    m, ksub, dsub = cb.shape
+    if q.shape[1] != m * dsub:
+        raise ValueError(f"pq_adc: query dim {q.shape[1]} != m*dsub "
+                         f"({m}*{dsub})")
+    n = codes.shape[0]
+    k_eff = min(k, n)
+    if impl == "ref":
+        vals, idx = pq_adc_ref(q, cb, codes, k_eff)
+    else:
+        qp, _ = _pad_rows(q, bq)
+        cp, npad = _pad_rows(codes.astype(jnp.int32), bn)
+        penalty = jnp.where(jnp.arange(cp.shape[0]) < n, 0.0, 1e30)
+        vals, idx = pq_adc_pallas(qp, cb.reshape(m * ksub, dsub), cp,
+                                  penalty.astype(jnp.float32), k_eff,
+                                  m=m, ksub=ksub, dsub=dsub, bq=bq, bn=bn,
+                                  interpret=interpret)
+        vals = vals[: q.shape[0]]
+        idx = idx[: q.shape[0]]
+    if k_eff < k:
+        pad = k - k_eff
+        vals = jnp.concatenate(
+            [vals, jnp.full((vals.shape[0], pad), -jnp.inf, vals.dtype)], 1)
+        idx = jnp.concatenate(
+            [idx, jnp.full((idx.shape[0], pad), -1, idx.dtype)], 1)
+    return vals, idx

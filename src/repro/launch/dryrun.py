@@ -37,15 +37,15 @@ from .mesh import make_production_mesh
 
 def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
              verbose: bool = True) -> dict:
-    t0 = time.time()
+    t0 = time.perf_counter()
     mesh = make_production_mesh(multi_pod=multi_pod)
     ctx = MeshCtx(mesh=mesh, rules=default_rules(multi_pod=multi_pod))
     prog = build_cell(arch_id, shape_name, ctx)
 
     lowered = prog.lower(mesh)
-    t_lower = time.time() - t0
+    t_lower = time.perf_counter() - t0
     compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    t_compile = time.perf_counter() - t0 - t_lower
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}

@@ -4,10 +4,12 @@ The index stack is a FAISS-style spec string (``--index-spec``), built by
 ``api.index_factory`` — any registered reducer composed with any base
 index::
 
-    RAE64,Flat,Rerank4      # the paper stack: RAE -> exact reduced scan -> rerank
-    RAE64,IVF256,Rerank4    # + coarse quantization in the reduced space
-    PCA64,Flat,Rerank4      # baseline reducer, same serving path
-    Flat                    # exact full-space scan (the recall reference)
+    RAE64,Flat,Rerank4         # the paper stack: RAE -> reduced scan -> rerank
+    RAE64,IVF256,Rerank4       # + coarse quantization in the reduced space
+    RAE64,IVF256,PQ8x8,Rerank4 # + PQ list payloads (8 bytes/vector, ADC)
+    RAE32,SQ8                  # reduce, then int8 scalar codes
+    PCA64,Flat,Rerank4         # baseline reducer, same serving path
+    Flat                       # exact full-space scan (the recall reference)
 
 Built indexes persist (``--save-index DIR``) and reload without retraining
 (``--load-index DIR``) — cold starts no longer pay the RAE training bill.
@@ -59,7 +61,8 @@ def build_or_load_index(args) -> tuple[api.VectorIndex, np.ndarray]:
     t0 = time.perf_counter()
     index.build(corpus)
     print(f"      built in {time.perf_counter() - t0:.2f}s "
-          f"(ntotal={index.ntotal})")
+          f"(ntotal={index.ntotal}, "
+          f"{index.bytes_per_vector:.0f} bytes/vector stage-1)")
     return index, corpus
 
 
@@ -77,7 +80,8 @@ def main(argv: Optional[list[str]] = None) -> int:
     ap.add_argument("--weight-decay", type=float, default=1e-2)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--index-spec", default=None,
-                    help='factory spec, e.g. "RAE64,IVF256,Rerank4" '
+                    help='factory spec, e.g. "RAE64,IVF256,PQ8x8,Rerank4" '
+                         'or "RAE32,SQ8" '
                          "(default: RAE<m>,Flat,Rerank<rerank-factor>)")
     ap.add_argument("--save-index", default=None, metavar="DIR",
                     help="persist the built index (reducer + base + corpus)")

@@ -169,9 +169,9 @@ def main(argv: Optional[list[str]] = None) -> int:
         step_fn=step_fn, init_state=(params, opt_state), batch_fn=batch_fn,
         checkpoint_dir=args.checkpoint_dir, save_every=args.save_every,
         watchdog=StragglerWatchdog())
-    t0 = time.time()
+    t0 = time.perf_counter()
     report = sup.run(args.steps, log_every=10)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     for m in report["metrics"][-5:]:
         print("  ", {k: round(v, 4) for k, v in m.items()})
     print(f"trained {args.arch}/{cell.name} ({args.scale}) "

@@ -217,6 +217,7 @@ def test_rae_reducer_encode_matches_core(small_corpus, queries):
 # ---------------------------------------------------------------------------
 # Acceptance: 20k x 256, both factory stacks, recall@10 >= 0.9, save+reload
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 @pytest.mark.timeout(900)
 @pytest.mark.parametrize("spec", ["RAE64,Flat,Rerank4", "RAE64,IVF256,Rerank4"])
 def test_acceptance_20k_recall(spec, tmp_path):

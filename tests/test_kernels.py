@@ -1,13 +1,24 @@
-"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode).
+
+Two layers of coverage:
+* per-kernel happy-path sweeps + equivalence with the model/engine code
+  that the kernel replaces (the original suite);
+* a shared PARITY HARNESS (bottom of file) that drives EVERY kernel triple
+  through its ragged/odd shapes — row counts not divisible by the block
+  size, k larger than the candidate pool, degenerate d=1 — in both f32 and
+  bf16. Kernels historically break exactly at those pad/edge paths.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import embedding_bag, flash_decode, l2_topk, rae_encode
+from repro.kernels import (embedding_bag, flash_decode, l2_topk, pq_adc,
+                           rae_encode)
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.flash_decode.ref import flash_decode_ref
 from repro.kernels.l2_topk.ref import l2_topk_ref
+from repro.kernels.pq_adc.ref import pq_adc_ref
 from repro.kernels.rae_encode.ref import rae_encode_ref
 
 jax.config.update("jax_platform_name", "cpu")
@@ -162,3 +173,155 @@ def test_embedding_bag_matches_model_path():
     bq = model_bag(tbl, ids, lens, NULL_CTX, compute_dtype=jnp.float32)
     np.testing.assert_allclose(np.asarray(a), np.asarray(bq), rtol=1e-5,
                                atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# pq_adc
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("q,n,m,ksub,dsub,k", [
+    (32, 512, 8, 256, 4, 10), (16, 200, 4, 16, 8, 5), (8, 1024, 2, 64, 16, 32),
+])
+def test_pq_adc_sweep(q, n, m, ksub, dsub, k):
+    rng = np.random.default_rng(q + n)
+    qs = jnp.asarray(rng.normal(size=(q, m * dsub)), jnp.float32)
+    cb = jnp.asarray(rng.normal(size=(m, ksub, dsub)), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, ksub, (n, m)), jnp.int32)
+    v, i = pq_adc(qs, cb, codes, k, impl="pallas", bq=32, bn=128,
+                  interpret=True)
+    vr, ir = pq_adc_ref(qs, cb, codes, k)
+    assert float((i == ir).mean()) > 0.999  # ties may swap
+    np.testing.assert_allclose(np.sort(v, 1), np.sort(vr, 1), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_pq_adc_matches_engine_ivfpq_on_one_cell():
+    """Kernel == the engine's LUT-gather math (search.quantize) when the
+    'IVF' is a single cell holding the whole corpus."""
+    from repro.search import quantize as qz
+
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(300, 16)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(9, 16)), jnp.float32)
+    pq = qz.pq_train(x, m=4, bits=6, iters=6, seed=0)
+    codes = qz.pq_encode(pq, x)
+    v, i = pq_adc(q, pq.codebooks, codes, 7, impl="pallas", bq=16, bn=64,
+                  interpret=True)
+    dist = qz.pq_adc_gather(qz.pq_adc_lut(pq, q), codes)
+    ve, ie = jax.lax.top_k(-dist, 7)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(ve), rtol=1e-4,
+                               atol=1e-4)
+    assert float((i == ie).mean()) > 0.999
+
+
+# ---------------------------------------------------------------------------
+# Shared ragged/odd-shape parity harness: every kernel triple, both dtypes
+# ---------------------------------------------------------------------------
+def _tol(dtype):
+    """(rtol, atol, min index agreement). All refs compute in f32 after
+    casting, so bf16 slack only covers input rounding + reassociation."""
+    return (2e-4, 2e-4, 0.999) if dtype == jnp.float32 else (3e-2, 3e-2, 0.9)
+
+
+def _topk_parity(got, want, dtype, k_valid=None):
+    """Compare (scores, indices) pairs; ties may swap, values must match."""
+    rtol, atol, imatch = _tol(dtype)
+    v, i = np.asarray(got[0]), np.asarray(got[1])
+    vr, ir = np.asarray(want[0]), np.asarray(want[1])
+    if k_valid is not None:  # the k > n tail must be -inf / -1 padding
+        assert np.all(np.isneginf(v[:, k_valid:]))
+        assert np.all(i[:, k_valid:] == -1)
+        v, i, vr, ir = v[:, :k_valid], i[:, :k_valid], vr[:, :k_valid], \
+            ir[:, :k_valid]
+    assert float((i == ir).mean()) >= imatch
+    np.testing.assert_allclose(np.sort(v, 1), np.sort(vr, 1), rtol=rtol,
+                               atol=atol)
+
+
+def _parity_l2_topk(case, dtype):
+    q_n, n, d, k, bq, bn = case
+    qs = _arr(q_n + n, (q_n, d), dtype)
+    db = _arr(n, (n, d), dtype)
+    got = l2_topk(qs, db, k, impl="pallas", bq=bq, bn=bn, interpret=True)
+    _topk_parity(got, l2_topk_ref(qs, db, k), dtype)
+
+
+def _parity_rae_encode(case, dtype):
+    rows, n, m, br, bk = case
+    x = _arr(rows, (rows, n), dtype)
+    w = _arr(n, (n, m), dtype) * 0.05
+    z = rae_encode(x, w, normalize=True, impl="pallas", br=br, bk=bk,
+                   interpret=True)
+    rtol, atol, _ = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(z),
+                               np.asarray(rae_encode_ref(x, w, True)),
+                               rtol=rtol, atol=atol)
+
+
+def _parity_flash_decode(case, dtype):
+    b, kh, g, dh, s, cur, bs = case
+    q = _arr(b, (b, kh, g, dh), dtype)
+    kc = _arr(b + 1, (b, s, kh, dh), dtype)
+    vc = _arr(b + 2, (b, s, kh, dh), dtype)
+    o = flash_decode(q, kc, vc, cur, impl="pallas", bs=bs, interpret=True)
+    rtol, atol, _ = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(flash_decode_ref(q, kc, vc, cur),
+                                          np.float32),
+                               rtol=max(rtol, 3e-3), atol=max(atol, 3e-4))
+
+
+def _parity_embedding_bag(case, dtype):
+    v_n, d, b, l = case
+    tbl = _arr(v_n, (v_n, d), dtype)
+    rng = np.random.default_rng(v_n + b)
+    ids = jnp.asarray(rng.integers(0, v_n, (b, l)), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, l + 1, (b,)), jnp.int32)
+    eb = embedding_bag(tbl, ids, lens, mode="mean", impl="pallas",
+                       interpret=True)
+    rtol, atol, _ = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(eb, np.float32),
+                               np.asarray(embedding_bag_ref(tbl, ids, lens,
+                                                            "mean"),
+                                          np.float32),
+                               rtol=rtol, atol=atol)
+
+
+def _parity_pq_adc(case, dtype):
+    q_n, n, m, ksub, dsub, k, bq, bn = case
+    rng = np.random.default_rng(q_n + n)
+    qs = jnp.asarray(rng.normal(size=(q_n, m * dsub)), dtype)
+    cb = jnp.asarray(rng.normal(size=(m, ksub, dsub)), dtype)
+    codes = jnp.asarray(rng.integers(0, ksub, (n, m)), jnp.int32)
+    got = pq_adc(qs, cb, codes, k, impl="pallas", bq=bq, bn=bn,
+                 interpret=True)
+    want = pq_adc_ref(qs, cb, codes, min(k, n))
+    _topk_parity(got, want, dtype, k_valid=min(k, n) if k > n else None)
+
+
+# case ids name the edge they exercise; every kernel gets n-not-divisible-
+# by-block, a k/cur overflow variant where meaningful, and d=1.
+PARITY_CASES = [
+    ("l2_topk", "ragged_n", (32, 333, 16, 5, 32, 128), _parity_l2_topk),
+    ("l2_topk", "ragged_q", (19, 256, 16, 5, 32, 128), _parity_l2_topk),
+    ("l2_topk", "d1", (16, 100, 1, 3, 16, 32), _parity_l2_topk),
+    ("rae_encode", "ragged_rows", (77, 64, 16, 64, 64), _parity_rae_encode),
+    ("rae_encode", "ragged_k", (64, 129, 16, 64, 128), _parity_rae_encode),
+    ("rae_encode", "d1", (32, 1, 8, 32, 128), _parity_rae_encode),
+    ("flash_decode", "ragged_s", (2, 2, 2, 8, 50, 37, 32),
+     _parity_flash_decode),
+    ("flash_decode", "cur1", (1, 1, 4, 8, 64, 1, 32), _parity_flash_decode),
+    ("flash_decode", "dh1", (2, 1, 2, 1, 33, 20, 16), _parity_flash_decode),
+    ("embedding_bag", "odd_shapes", (13, 5, 7, 3), _parity_embedding_bag),
+    ("embedding_bag", "d1", (10, 1, 4, 5), _parity_embedding_bag),
+    ("pq_adc", "ragged_n", (17, 337, 4, 16, 4, 5, 32, 128), _parity_pq_adc),
+    ("pq_adc", "k_gt_n", (4, 6, 2, 4, 2, 10, 8, 8), _parity_pq_adc),
+    ("pq_adc", "d1", (8, 64, 1, 8, 1, 3, 8, 32), _parity_pq_adc),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("kernel,case,params,fn", PARITY_CASES,
+                         ids=[f"{k}-{c}" for k, c, _, _ in PARITY_CASES])
+def test_kernel_parity(kernel, case, params, fn, dtype):
+    fn(params, dtype)

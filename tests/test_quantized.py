@@ -1,0 +1,230 @@
+"""Quantized index tier: codecs, factory grammar, persistence, acceptance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.metrics import recall_at_k
+from repro.data import synthetic
+from repro.search import quantize as qz
+
+jax.config.update("jax_platform_name", "cpu")
+
+QUANT_SPECS = ["SQ8", "PQ4x8", "IVF32,SQ8", "IVF32,PQ4x8"]
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return synthetic.embedding_corpus(2000, 32, n_clusters=8, intrinsic=12,
+                                      seed=7)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    rng = np.random.default_rng(2)
+    picks = rng.integers(0, corpus.shape[0], 32)
+    return corpus[picks] + 0.01 * rng.standard_normal(
+        (32, corpus.shape[1])).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def exact(corpus, queries):
+    return api.FlatIndex().build(corpus).search(queries, 10)
+
+
+# ---------------------------------------------------------------------------
+# Spec grammar
+# ---------------------------------------------------------------------------
+def test_parse_quant_stages():
+    s = api.parse_index_spec("RAE64,IVF256,PQ8x8,Rerank4")
+    assert s == api.IndexSpec(reducer="rae", out_dim=64, base="ivf",
+                              n_cells=256, quant="pq", pq_m=8, pq_bits=8,
+                              rerank_factor=4)
+    s = api.parse_index_spec("RAE32,SQ8")
+    assert s.reducer == "rae" and s.base == "flat" and s.quant == "sq8"
+    assert api.parse_index_spec("sq8").quant == "sq8"
+    assert api.parse_index_spec("pq4x6") == api.IndexSpec(
+        quant="pq", pq_m=4, pq_bits=6)
+    assert api.parse_index_spec("Flat,SQ8").quant == "sq8"
+    # plain specs are untouched (back-compat with PR 1)
+    assert api.parse_index_spec("Flat") == api.IndexSpec()
+
+
+@pytest.mark.parametrize("bad", [
+    "SQ4", "SQ8x8", "PQ8", "PQx8", "PQ0x8", "PQ4x9", "PQ4x0",
+    "SQ8,Flat", "SQ8,IVF32", "PQ4x8,SQ8", "SQ8,SQ8", "IVF8,SQ8,PQ4x8",
+    "SQ8,Rerank2", "PQ4x8,Rerank2", "SQ8,PCA8",
+])
+def test_parse_rejects_bad_quant(bad):
+    with pytest.raises(ValueError, match="bad index spec"):
+        api.parse_index_spec(bad)
+
+
+def test_factory_maps_quant_to_classes():
+    for spec, cls in [("SQ8", api.SQ8Index), ("PQ4x8", api.PQIndex),
+                      ("IVF32,SQ8", api.IVFSQ8Index),
+                      ("IVF32,PQ4x8", api.IVFPQIndex)]:
+        assert isinstance(api.index_factory(spec), cls), spec
+
+
+def test_factory_quant_euclidean_only():
+    with pytest.raises(ValueError, match="euclidean only"):
+        api.index_factory("SQ8", metric="cosine")
+
+
+# ---------------------------------------------------------------------------
+# Codecs
+# ---------------------------------------------------------------------------
+def test_sq8_roundtrip_bound(corpus):
+    sq = qz.sq8_train(corpus)
+    codes = qz.sq8_encode(sq, corpus)
+    assert np.asarray(codes).dtype == np.uint8
+    err = np.abs(np.asarray(qz.sq8_decode(sq, codes)) - corpus)
+    bound = np.asarray(sq.step)[None, :] / 2
+    assert np.all(err <= bound + 1e-6)
+
+
+def test_pq_dim_not_divisible_raises():
+    with pytest.raises(ValueError, match="not divisible"):
+        qz.pq_train(np.zeros((64, 30), np.float32), m=4)
+
+
+def test_pq_encode_decode_shrinks_error_with_ksub(corpus):
+    """More centroids per subspace -> strictly better reconstruction."""
+    errs = []
+    for bits in (2, 4, 8):
+        pq = qz.pq_train(corpus, m=4, bits=bits, iters=10, seed=0)
+        codes = qz.pq_encode(pq, corpus)
+        assert np.asarray(codes).dtype == np.uint8
+        rec = np.asarray(qz.pq_decode(pq, codes))
+        errs.append(float(np.mean(np.sum((rec - corpus) ** 2, -1))))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_pq_adc_lut_gather_equals_decoded_distance(corpus, queries):
+    pq = qz.pq_train(corpus, m=4, bits=6, iters=8, seed=1)
+    codes = qz.pq_encode(pq, corpus[:300])
+    lut = qz.pq_adc_lut(pq, queries)
+    adc = np.asarray(qz.pq_adc_gather(lut, codes))
+    rec = np.asarray(qz.pq_decode(pq, codes))
+    exact = ((queries[:, None, :] - rec[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(adc, exact, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Index behaviour
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("spec", QUANT_SPECS)
+def test_quant_index_search_and_roundtrip(spec, corpus, queries, tmp_path):
+    idx = api.index_factory(spec).build(corpus)
+    assert idx.ntotal == corpus.shape[0]
+    res = idx.search(queries, 10)
+    assert res.indices.shape == (32, 10)
+    assert res.latency_s > 0
+    valid = res.indices >= 0
+    assert np.all(valid)  # 2000 rows, nprobe*cap >> 10: no pads expected
+    idx.save(str(tmp_path / "q"))
+    idx2 = api.load_index(str(tmp_path / "q"))
+    assert type(idx2) is type(idx)
+    res2 = idx2.search(queries, 10)
+    np.testing.assert_array_equal(res2.indices, res.indices)
+    np.testing.assert_allclose(res2.scores, res.scores, rtol=1e-5)
+
+
+@pytest.mark.parametrize("spec,bound", [("SQ8", 36), ("PQ4x8", 4),
+                                        ("IVF32,SQ8", 40),
+                                        ("IVF32,PQ4x8", 8)])
+def test_bytes_per_vector(spec, bound, corpus):
+    idx = api.index_factory(spec).build(corpus)
+    assert idx.bytes_per_vector == bound
+    # every quantized tier beats f32 flat storage (32 dims * 4 bytes)
+    assert idx.bytes_per_vector < 32 * 4 + 1
+
+
+def test_sq8_recall_near_exact(corpus, queries, exact):
+    """SQ8 error (step/2 per dim) barely perturbs the ranking."""
+    res = api.index_factory("SQ8").build(corpus).search(queries, 10)
+    rec = recall_at_k(res.indices, exact.indices)
+    assert rec >= 0.95, rec
+
+
+def test_sq8_scan_matches_decoded_flat_scan(corpus, queries):
+    """The dequant-free form must equal brute force on decoded codes."""
+    idx = api.index_factory("SQ8").build(corpus)
+    res = idx.search(queries, 10)
+    dec = np.asarray(qz.sq8_decode(idx._sq, idx._codes))
+    ref = api.FlatIndex().build(dec).search(queries, 10)
+    np.testing.assert_allclose(res.scores, ref.scores, rtol=1e-3, atol=1e-3)
+    same = (res.indices == ref.indices).mean()
+    assert same > 0.99  # ties may swap
+
+
+def test_pq_index_uses_adc_not_decode(corpus, queries):
+    """PQIndex scores == the pq_adc kernel ref on its own codes."""
+    from repro.kernels.pq_adc.ref import pq_adc_ref
+
+    idx = api.index_factory("PQ4x8").build(corpus)
+    res = idx.search(queries, 10)
+    vr, ir = pq_adc_ref(jnp.asarray(queries), idx._pq.codebooks,
+                        idx._codes, 10)
+    np.testing.assert_allclose(res.scores, np.asarray(vr), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ivfpq_short_probe_pads(queries):
+    """k beyond the probed capacity pads with -1/-inf (FAISS semantics)."""
+    tiny = synthetic.embedding_corpus(200, 32, n_clusters=8, intrinsic=12,
+                                      seed=5)
+    idx = api.IVFPQIndex(n_cells=64, m=4, nprobe=2, cell_cap=4)
+    idx.build(tiny)
+    res = idx.search(queries, 20)  # probed capacity = 2*4 = 8 < 20
+    assert res.indices.shape == (32, 20)
+    assert np.all(res.indices[:, 8:] == -1)
+    assert np.all(np.isneginf(res.scores[:, 8:]))
+    valid = res.indices >= 0
+    assert np.all(np.isfinite(res.scores[valid]))
+
+
+def test_twostage_over_pq_base(corpus, queries, exact):
+    """Reducer + PQ base + full-space rerank — the compounding story."""
+    idx = api.index_factory("PCA8,PQ4x8,Rerank8")
+    idx.build(corpus)
+    res = idx.search(queries, 10)
+    rec = recall_at_k(res.indices, exact.indices)
+    assert rec >= 0.5, rec
+    assert idx.bytes_per_vector == 4  # stage-1 payload: 4 PQ bytes
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: the ISSUE 2 criterion
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.timeout(900)
+def test_acceptance_20k_ivfpq_recall_and_memory(tmp_path):
+    """``RAE64,IVF256,PQ8x8,Rerank4`` builds, saves, reloads, reaches
+    recall@10 >= 0.85 vs the exact scan on 20k x 256, at <= 1/8 the
+    bytes-per-vector of ``RAE64,Flat``."""
+    corpus = synthetic.embedding_corpus(20000, 256, n_clusters=16,
+                                        intrinsic=64, seed=0)
+    rng = np.random.default_rng(1)
+    q = corpus[rng.integers(0, 20000, 64)] + \
+        0.01 * rng.standard_normal((64, 256)).astype(np.float32)
+
+    idx = api.index_factory("RAE64,IVF256,PQ8x8,Rerank4",
+                            reducer_kw={"steps": 1000, "seed": 0})
+    idx.build(corpus)
+    res = idx.search(q, 10)
+    exact = api.FlatIndex().build(corpus).search(q, 10)
+    recall = recall_at_k(res.indices, exact.indices)
+    assert recall >= 0.85, recall
+
+    # memory: reuse the SAME fitted reducer for the uncompressed reference
+    ref = api.TwoStageIndex(idx.reducer, api.FlatIndex(), rerank_factor=4)
+    ref.build(corpus)
+    assert idx.bytes_per_vector <= ref.bytes_per_vector / 8, (
+        idx.bytes_per_vector, ref.bytes_per_vector)
+
+    idx.save(str(tmp_path / "ivfpq"))
+    res2 = api.load_index(str(tmp_path / "ivfpq")).search(q, 10)
+    np.testing.assert_array_equal(res2.indices, res.indices)
