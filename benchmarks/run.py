@@ -2,9 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. Full-scale variants of the
 paper tables live in table1_knn.py / table2_time.py / fig1_weight_decay.py
-/ table3_quant.py (separate CLIs); this harness runs CPU-budget versions of
-each so ``python -m benchmarks.run`` finishes in minutes and covers every
-artifact.
+/ table3_quant.py / table4_graph.py (separate CLIs); this harness runs
+CPU-budget versions of each so ``python -m benchmarks.run`` finishes in
+minutes and covers every artifact.
 
 Machine-readable output: every run also writes ``results/BENCH_run.json``
 (and each table CLI writes its own ``results/BENCH_<name>.json`` via
@@ -172,6 +172,23 @@ def bench_quant_quick():
              build_s=r["build_s"])
 
 
+def bench_graph_quick():
+    """CPU-budget slice of table4_graph: the graph tier's
+    recall-vs-QPS-vs-visited-fraction rows (also writes BENCH_graph.json)."""
+    from .table4_graph import run
+
+    rows = run(quick=True)
+    for r in rows:
+        emit(f"table4.{r['space']}.{r['spec']}",
+             r["latency_ms_p50"] * 1e3,
+             f"recall@{r['k']}={r['recall_at_k']};"
+             f"evals={r['distance_evals']:.0f};"
+             f"visited={r['visited_frac']:.1%}",
+             recall=r["recall_at_k"], qps=r["qps"],
+             distance_evals=r["distance_evals"],
+             visited_frac=r["visited_frac"], build_s=r["build_s"])
+
+
 def bench_table1_quick():
     from .table1_knn import run
 
@@ -227,6 +244,7 @@ def main() -> None:
     bench_two_stage_search()
     bench_ivf()
     bench_quant_quick()
+    bench_graph_quick()
     bench_fig1_quick()
     bench_table1_quick()
     bench_roofline_summary()

@@ -1,0 +1,133 @@
+"""Table 4 (beyond paper): graph traversal vs scan — the sublinearity axis.
+
+Sweeps {Flat, IVF<c>, HNSW<M>} x {raw, RAE<m>} and reports recall@k against
+the exact full-space scan, queries-per-second, and *distance evaluations
+per query* — the work metric that separates a graph index from every scan
+tier: beam search visits a few hundred nodes where Flat touches all N and
+IVF still scans nprobe full cells. The RAE space runs every base behind a
+``TwoStageIndex`` with full-space rerank (the paper's deployment story,
+told on graph indexes like GleanVec's), reusing ONE fitted reducer so
+differences are purely the candidate-generation tier.
+
+Writes ``results/BENCH_graph.json`` (schema: ``benchmarks.run.write_bench``)
+so the recall/QPS/visited-fraction trajectory is tracked across PRs.
+
+CPU-budget default: ``python -m benchmarks.table4_graph --quick`` finishes
+in a few minutes at n=4096; the full 20k x 256 run mirrors the acceptance
+test in tests/test_graph.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core.metrics import recall_at_k
+from repro.data import synthetic
+
+from .run import write_bench
+
+
+def _qps(index: "api.VectorIndex", q: np.ndarray, k: int,
+         repeats: int = 3) -> tuple[float, float]:
+    """(queries/s, p50 latency ms); first call warms the jit cache."""
+    index.search(q, k)
+    lat = [index.search(q, k).latency_s for _ in range(repeats)]
+    p50 = float(np.percentile(lat, 50))
+    return q.shape[0] / p50, p50 * 1e3
+
+
+def run(n: int = 20000, dim: int = 256, m_reduce: int = 64,
+        n_cells: int = 256, hnsw_m: int = 32, ef_construction: int = 100,
+        ef_search: int = 64, n_queries: int = 256, k: int = 10,
+        rae_steps: int = 1000, rerank_factor: int = 4, seed: int = 0,
+        quick: bool = False) -> list[dict]:
+    if quick:
+        n, rae_steps, n_cells, n_queries = 4096, 300, 64, 64
+    corpus = synthetic.embedding_corpus(n, dim, n_clusters=16,
+                                        intrinsic=dim // 4, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    q = corpus[rng.integers(0, n, n_queries)] + \
+        0.01 * rng.standard_normal((n_queries, dim)).astype(np.float32)
+
+    exact = api.FlatIndex().build(corpus)
+    exact_res = exact.search(q, k)
+
+    print(f"fitting RAE {dim}->{m_reduce} ({rae_steps} steps) once, "
+          f"shared across the RAE-space bases")
+    reducer = api.make_reducer("rae", m_reduce, steps=rae_steps, seed=seed)
+    reducer.fit(corpus)
+
+    bases = ["Flat", f"IVF{n_cells}", f"HNSW{hnsw_m}"]
+    index_kw = {"ef_construction": ef_construction, "ef_search": ef_search}
+    rows = []
+    for space in ("raw", f"rae{m_reduce}"):
+        for base in bases:
+            kw = index_kw if base.startswith("HNSW") else None
+            if space == "raw":
+                spec = base
+                index = api.index_factory(base, index_kw=kw)
+            else:
+                spec = f"RAE{m_reduce},{base},Rerank{rerank_factor}"
+                index = api.TwoStageIndex(reducer,
+                                          api.index_factory(base,
+                                                            index_kw=kw),
+                                          rerank_factor=rerank_factor)
+            t0 = time.perf_counter()
+            index.build(corpus)
+            build_s = time.perf_counter() - t0
+            qps, p50_ms = _qps(index, q, k)
+            res = index.search(q, k)
+            rec = recall_at_k(res.indices, exact_res.indices)
+            evals = res.distance_evals
+            row = {"space": space, "spec": spec,
+                   "recall_at_k": round(rec, 4), "k": k,
+                   "distance_evals": round(evals, 1),
+                   "visited_frac": round(evals / n, 4),
+                   "bytes_per_vector": index.bytes_per_vector,
+                   "qps": round(qps, 1), "latency_ms_p50": round(p50_ms, 3),
+                   "build_s": round(build_s, 2)}
+            rows.append(row)
+            print(f"{space:8s} {spec:24s} recall@{k}={rec:.4f} "
+                  f"evals/q={evals:8.1f} ({row['visited_frac']:.1%}) "
+                  f"qps={qps:8.1f} build={build_s:.1f}s")
+    write_bench("graph", rows,
+                config={"n": n, "dim": dim, "m_reduce": m_reduce,
+                        "n_cells": n_cells, "hnsw_m": hnsw_m,
+                        "ef_construction": ef_construction,
+                        "ef_search": ef_search, "n_queries": n_queries,
+                        "k": k, "rae_steps": rae_steps,
+                        "rerank_factor": rerank_factor, "seed": seed,
+                        "quick": quick})
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--m-reduce", type=int, default=64)
+    ap.add_argument("--n-cells", type=int, default=256)
+    ap.add_argument("--hnsw-m", type=int, default=32)
+    ap.add_argument("--ef-construction", type=int, default=100)
+    ap.add_argument("--ef-search", type=int, default=64)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--rae-steps", type=int, default=1000)
+    ap.add_argument("--rerank-factor", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU-budget run: n=4096, 300 RAE steps")
+    a = ap.parse_args(argv)
+    run(n=a.n, dim=a.dim, m_reduce=a.m_reduce, n_cells=a.n_cells,
+        hnsw_m=a.hnsw_m, ef_construction=a.ef_construction,
+        ef_search=a.ef_search, n_queries=a.queries, k=a.k,
+        rae_steps=a.rae_steps, rerank_factor=a.rerank_factor, seed=a.seed,
+        quick=a.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

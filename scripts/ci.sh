@@ -5,7 +5,10 @@
 # `slow` (the 20k-point acceptance runs). Tier-1 verify (see ROADMAP.md)
 # remains the FULL suite: run with CI_MARKERS="" or call pytest directly.
 #
-#   scripts/ci.sh                 # fast: -m "not slow"
+#   scripts/ci.sh                 # fast: -m "not slow" (graph/quant unit +
+#                                 #   property tests included)
+#   CI_MARKERS="slow" scripts/ci.sh  # slow split only: the 20k acceptance
+#                                 #   runs (api, quantized, graph)
 #   CI_MARKERS="" scripts/ci.sh   # full suite (tier-1 equivalent)
 #   scripts/ci.sh -k quant        # extra pytest args pass through
 set -euo pipefail
@@ -19,6 +22,13 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if ! collect_out=$(python -m pytest --collect-only -q 2>&1); then
     echo "$collect_out"
     echo "FATAL: test collection failed (import error?)" >&2
+    exit 1
+fi
+
+# The graph-invariant suite guards the HNSW tier's correctness contract;
+# a rename/deselection that silently drops it must fail the gate.
+if ! grep -q "test_graph" <<<"$collect_out"; then
+    echo "FATAL: tests/test_graph.py not collected" >&2
     exit 1
 fi
 

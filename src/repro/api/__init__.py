@@ -8,13 +8,15 @@ the reduced space") and every baseline/search tier the repo grew around it:
   a drop-in peer of the baselines for the first time.
 * :class:`VectorIndex` — ``build / search / save / load`` returning a
   uniform :class:`SearchResult`; ``FlatIndex`` (exact distributed scan),
-  ``IVFFlatIndex`` (coarse-quantized), the quantized storage tiers
-  (``SQ8Index`` / ``PQIndex`` / ``IVFSQ8Index`` / ``IVFPQIndex`` — int8 and
-  product codes searched with ADC), and the composable
-  ``TwoStageIndex(reducer, base_index)`` that unlocks RAE -> IVF -> rerank.
+  ``IVFFlatIndex`` (coarse-quantized), ``HNSWIndex`` (graph beam search —
+  sublinear per-query work, reported via ``stats["distance_evals"]``),
+  the quantized storage tiers (``SQ8Index`` / ``PQIndex`` / ``IVFSQ8Index``
+  / ``IVFPQIndex`` — int8 and product codes searched with ADC), and the
+  composable ``TwoStageIndex(reducer, base_index)`` that unlocks
+  RAE -> IVF/HNSW -> rerank.
 * :func:`index_factory` — ``index_factory("RAE64,IVF256,PQ8x8,Rerank4")``
   builds the whole stack from a spec string; ``parse_index_spec`` exposes
-  the parsed form.
+  the parsed form, and ``str(spec)`` renders it back canonically.
 
 Everything persists to plain npz + json directories, so serving never
 retrains on start (``load_reducer`` / ``load_index``).
@@ -38,10 +40,12 @@ from .index import (
     register_index,
 )
 from .quantized import IVFPQIndex, IVFSQ8Index, PQIndex, SQ8Index
+from .graph import HNSWIndex
 from .factory import IndexSpec, index_factory, parse_index_spec
 
 __all__ = [
     "FlatIndex",
+    "HNSWIndex",
     "IVFFlatIndex",
     "IVFPQIndex",
     "IVFSQ8Index",

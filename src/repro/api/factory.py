@@ -5,8 +5,8 @@ Grammar (comma-separated stages, case-insensitive)::
     spec     := [reducer ","] stack ["," rerank]
     stack    := base | quant | base "," quant
     reducer  := ("RAE" | "PCA" | "RP" | "MDS" | "ISOMAP" | "UMAP") out_dim
-    base     := "Flat" | "IVF" n_cells
-    quant    := "SQ8" | "PQ" m "x" bits     # bits in 1..8
+    base     := "Flat" | "IVF" n_cells | "HNSW" M
+    quant    := "SQ8" | "PQ" m "x" bits     # bits in 1..8; scan bases only
     rerank   := "Rerank" factor             # requires a reducer stage
 
 Stage semantics:
@@ -14,8 +14,10 @@ Stage semantics:
 * ``reducer`` — any name registered via :func:`repro.api.register_reducer`
   (third-party reducers compose for free); maps the corpus to
   R^``out_dim`` before the base index sees it.
-* ``base`` — how candidates are *found*: exact scan (``Flat``) or k-means
-  coarse cells probed ``nprobe`` at a time (``IVF``).
+* ``base`` — how candidates are *found*: exact scan (``Flat``), k-means
+  coarse cells probed ``nprobe`` at a time (``IVF``), or hierarchical
+  graph beam search (``HNSW``, degree cap ``M`` — sublinear per-query
+  work; stores raw f32 vectors, so no quant stage composes with it).
 * ``quant`` — how vectors are *stored*: f32 (absent), per-dim int8
   scalar codes (``SQ8``), or m-subspace product codes searched with ADC
   (``PQ8x8`` = 8 subspaces x 8 bits = 8 bytes/vector). A quant stage with
@@ -29,10 +31,12 @@ Examples::
 
     index_factory("Flat")                       # exact scan
     index_factory("IVF256")                     # coarse-quantized, raw space
+    index_factory("HNSW32")                     # graph beam search, raw space
     index_factory("SQ8")                        # flat scan over int8 codes
     index_factory("RAE32,SQ8")                  # reduce, then SQ8 codes
     index_factory("IVF256,PQ8x8")               # FAISS-style IVF-PQ (ADC)
     index_factory("RAE64,IVF256,Rerank4")       # the full paper stack
+    index_factory("RAE64,HNSW32,Rerank4")       # graph over reduced space
     index_factory("RAE64,IVF256,PQ8x8,Rerank4") # + PQ list payloads
 
 ``parse_index_spec`` exposes the parsed form for callers that need to
@@ -45,6 +49,7 @@ from dataclasses import dataclass
 from typing import Any, Optional
 
 from ..models.common import NULL_CTX, MeshCtx
+from .graph import HNSWIndex
 from .index import FlatIndex, IVFFlatIndex, TwoStageIndex, VectorIndex
 from .quantized import IVFPQIndex, IVFSQ8Index, PQIndex, SQ8Index
 from .reducer import list_reducers, make_reducer
@@ -55,16 +60,37 @@ _PQ = re.compile(r"^pq(\d+)x(\d+)$", re.IGNORECASE)
 
 @dataclass(frozen=True)
 class IndexSpec:
-    """Parsed form of a factory spec string."""
+    """Parsed form of a factory spec string. ``str(spec)`` renders the
+    canonical spec string, so ``parse_index_spec(str(spec)) == spec``
+    for every parseable spec (round-trip tested)."""
 
     reducer: Optional[str] = None     # registry name, e.g. "rae"
     out_dim: int = 0                  # reducer target dim
-    base: str = "flat"                # "flat" | "ivf"
+    base: str = "flat"                # "flat" | "ivf" | "hnsw"
     n_cells: int = 0                  # ivf only
     quant: Optional[str] = None       # None | "sq8" | "pq"
     pq_m: int = 0                     # pq only: subspace count
     pq_bits: int = 0                  # pq only: bits per code
     rerank_factor: int = 1
+    hnsw_m: int = 0                   # hnsw only: degree cap M
+
+    def __str__(self) -> str:
+        parts = []
+        if self.reducer is not None:
+            parts.append(f"{self.reducer.upper()}{self.out_dim}")
+        if self.base == "ivf":
+            parts.append(f"IVF{self.n_cells}")
+        elif self.base == "hnsw":
+            parts.append(f"HNSW{self.hnsw_m}")
+        else:
+            parts.append("Flat")
+        if self.quant == "sq8":
+            parts.append("SQ8")
+        elif self.quant == "pq":
+            parts.append(f"PQ{self.pq_m}x{self.pq_bits}")
+        if self.rerank_factor > 1:
+            parts.append(f"Rerank{self.rerank_factor}")
+        return ",".join(parts)
 
 
 def _fail(spec: str, why: str):
@@ -82,6 +108,7 @@ def parse_index_spec(spec: str) -> IndexSpec:
     quant: Optional[str] = None
     pq_m = pq_bits = 0
     rerank = 0
+    hnsw_m = 0
 
     def check_order(stage):
         if rerank:
@@ -123,6 +150,15 @@ def parse_index_spec(spec: str) -> IndexSpec:
                 _fail(spec, "multiple base stages")
             check_order("base")
             base, n_cells = "ivf", int(num)
+        elif name == "hnsw":
+            if num is None:
+                _fail(spec, "HNSW needs a degree cap, e.g. HNSW32")
+            if int(num) < 2:
+                _fail(spec, f"HNSW needs M >= 2, got {tok!r}")
+            if base is not None:
+                _fail(spec, "multiple base stages")
+            check_order("base")
+            base, hnsw_m = "hnsw", int(num)
         elif name == "rerank":
             if num is None:
                 _fail(spec, "Rerank needs a factor, e.g. Rerank4")
@@ -140,17 +176,22 @@ def parse_index_spec(spec: str) -> IndexSpec:
             reducer, out_dim = name, int(num)
         else:
             _fail(spec, f"unknown stage {tok!r} "
-                        f"(reducers: {list_reducers()}; bases: flat, ivf; "
-                        f"quantizers: sq8, pq<m>x<bits>)")
+                        f"(reducers: {list_reducers()}; bases: flat, ivf, "
+                        f"hnsw; quantizers: sq8, pq<m>x<bits>)")
     if base is None and quant is None:
-        _fail(spec, "no base stage (Flat, IVF<n>, SQ8 or PQ<m>x<bits>)")
+        _fail(spec, "no base stage (Flat, IVF<n>, HNSW<M>, SQ8 or "
+                    "PQ<m>x<bits>)")
+    if base == "hnsw" and quant is not None:
+        _fail(spec, "HNSW stores raw f32 vectors; quantized payloads do "
+                    "not compose with it")
     if rerank and reducer is None:
         _fail(spec, "Rerank requires a reducer stage to rerank against")
     if out_dim <= 0 and reducer is not None:
         _fail(spec, "reducer target dim must be positive")
     return IndexSpec(reducer=reducer, out_dim=out_dim, base=base or "flat",
                      n_cells=n_cells, quant=quant, pq_m=pq_m,
-                     pq_bits=pq_bits, rerank_factor=rerank or 1)
+                     pq_bits=pq_bits, rerank_factor=rerank or 1,
+                     hnsw_m=hnsw_m)
 
 
 def _make_base(parsed: IndexSpec, metric: str, ctx: MeshCtx,
@@ -158,6 +199,10 @@ def _make_base(parsed: IndexSpec, metric: str, ctx: MeshCtx,
     """Map (base, quant) to the index class; see the module grammar."""
     if parsed.quant is not None and metric != "euclidean":
         raise ValueError("quantized tiers support euclidean only")
+    if parsed.base == "hnsw":
+        if metric != "euclidean":
+            raise ValueError("HNSW base supports euclidean only")
+        return HNSWIndex(m=parsed.hnsw_m, **index_kw)
     if parsed.base == "ivf":
         if metric != "euclidean":
             raise ValueError("IVF base supports euclidean only")

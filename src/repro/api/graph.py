@@ -1,0 +1,115 @@
+"""Graph ``VectorIndex`` tier: HNSW beam search behind the factory.
+
+The first index family where per-query work is *sublinear in N* — beam
+search visits a few hundred nodes of a 20k corpus instead of scanning all
+of it (``SearchResult.stats["distance_evals"]`` reports the visited
+count). The engine lives in :mod:`repro.search.hnsw`; this class adapts it
+to the ``build / search / save / load`` protocol and the factory grammar::
+
+    index_factory("HNSW32")                  # graph over the raw space
+    index_factory("RAE64,HNSW32,Rerank4")    # graph over the reduced space,
+                                             # exact full-space rerank
+
+``M`` (the factory numeral) caps per-node degree — ``M`` on upper layers,
+``2M`` at layer 0; ``ef_construction`` is the insert-time beam width
+(recall of the *graph*), ``ef_search`` the query-time beam width (the
+recall/latency knob — search always uses ``max(ef_search, k)``).
+
+Under a rerank the graph declares ``stage1_oversample=2``: beam search
+returns exact reduced-space distances but can *miss* neighbors near the
+beam boundary, so ``TwoStageIndex`` widens k1 (which also widens the beam)
+and lets the full-space rerank absorb the ordering noise.
+
+Persistence follows the house layout: ``meta.json`` + ``arrays.npz``
+holding the corpus vectors, per-node levels, and the padded-dense
+adjacency of every layer.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+from ..search import hnsw as hnsw_lib
+from .index import (SearchResult, VectorIndex, _load_arrays, _save_dir,
+                    register_index)
+
+
+@register_index("hnsw")
+class HNSWIndex(VectorIndex):
+    """Hierarchical navigable small-world graph (euclidean only)."""
+
+    stage1_oversample = 2
+
+    def __init__(self, m: int = 32, ef_construction: int = 100,
+                 ef_search: int = 64, seed: int = 0):
+        if m < 2:
+            raise ValueError(f"HNSW needs M >= 2, got {m}")
+        self.m = m
+        self.ef_construction = ef_construction
+        self.ef_search = ef_search
+        self.seed = seed
+        self._g: Optional[hnsw_lib.HNSWGraph] = None
+
+    @property
+    def ntotal(self) -> int:
+        return 0 if self._g is None else self._g.ntotal
+
+    @property
+    def built(self) -> bool:
+        return self._g is not None
+
+    @property
+    def bytes_per_vector(self) -> float:
+        """f32 vector + int32 link slots in every layer the node occupies
+        (2M at layer 0, M per upper layer — averaged over the geometric
+        level distribution) + int32 level."""
+        self._require_built()
+        g = self._g
+        upper_slots = g.M * float(g.levels.mean())
+        return float(g.vecs.shape[1] * 4
+                     + 4 * (g.links0.shape[1] + upper_slots) + 4)
+
+    def build(self, corpus: np.ndarray) -> "HNSWIndex":
+        self._g = hnsw_lib.build(corpus, M=self.m,
+                                 ef_construction=self.ef_construction,
+                                 seed=self.seed)
+        return self
+
+    def search(self, queries: np.ndarray, k: int) -> SearchResult:
+        """Beam search with ef = max(ef_search, k). Queries whose beam
+        holds fewer than k nodes pad the tail with index -1 / score -inf
+        (FAISS convention, same as the IVF tiers)."""
+        self._require_built()
+        k_req = min(k, self.ntotal)
+        t0 = time.perf_counter()
+        scores, idx, evals = hnsw_lib.search(
+            self._g, queries, k_req, ef_search=max(self.ef_search, k_req))
+        dt = time.perf_counter() - t0
+        return SearchResult(scores=scores, indices=idx, latency_s=dt,
+                            stats={"distance_evals": float(evals.mean())})
+
+    def save(self, directory: str) -> None:
+        self._require_built()
+        g = self._g
+        _save_dir(directory,
+                  {"kind": self.kind, "m": self.m,
+                   "ef_construction": self.ef_construction,
+                   "ef_search": self.ef_search, "seed": self.seed,
+                   "entry": int(g.entry)},
+                  {"vecs": g.vecs, "levels": g.levels,
+                   "links0": g.links0, "links": g.links})
+
+    @classmethod
+    def _load(cls, directory: str, meta: dict[str, Any]) -> "HNSWIndex":
+        self = cls(m=meta["m"], ef_construction=meta["ef_construction"],
+                   ef_search=meta["ef_search"], seed=meta["seed"])
+        a = _load_arrays(directory)
+        links = a["links"]
+        if links.size == 0:  # single-layer graph round-trips as [0, N, M]
+            links = links.reshape(0, a["vecs"].shape[0], meta["m"])
+        self._g = hnsw_lib.HNSWGraph(
+            vecs=a["vecs"], levels=a["levels"], links0=a["links0"],
+            links=links, entry=int(meta["entry"]), M=int(meta["m"]))
+        return self

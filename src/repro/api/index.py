@@ -21,7 +21,7 @@ import functools
 import json
 import os
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 import jax
@@ -40,15 +40,27 @@ _ARRAYS = "arrays.npz"
 @dataclass
 class SearchResult:
     """Uniform k-NN result: ``scores``/``indices`` are [Q, k]; higher score
-    = closer; ``latency_s`` is device-synchronized wall time of the query."""
+    = closer; ``latency_s`` is device-synchronized wall time of the query.
+
+    ``stats`` carries per-query work counters; every built-in index reports
+    ``distance_evals`` — the mean number of corpus vectors whose distance
+    to the query was evaluated (flat scan = N, IVF = probed list sizes,
+    HNSW = beam-visited count) — the sublinearity axis benchmarks report
+    next to recall and QPS."""
 
     scores: np.ndarray
     indices: np.ndarray
     latency_s: float
+    stats: dict[str, float] = field(default_factory=dict)
 
     @property
     def k(self) -> int:
         return self.indices.shape[1]
+
+    @property
+    def distance_evals(self) -> Optional[float]:
+        """Mean distance evaluations per query (None if not reported)."""
+        return self.stats.get("distance_evals")
 
 
 # ---------------------------------------------------------------------------
@@ -143,7 +155,8 @@ def _pad_result(v: jax.Array, i: jax.Array, k_req: int
     return v, i
 
 
-def _timed(fn: Callable[[], tuple[jax.Array, jax.Array]]) -> SearchResult:
+def _timed(fn: Callable[[], tuple[jax.Array, jax.Array]],
+           stats: Optional[dict[str, float]] = None) -> SearchResult:
     """Monotonic wall time of the query, blocking on EVERY device output —
     otherwise the clock measures dispatch, not the scan (jax is async)."""
     t0 = time.perf_counter()
@@ -151,7 +164,23 @@ def _timed(fn: Callable[[], tuple[jax.Array, jax.Array]]) -> SearchResult:
     jax.block_until_ready((scores, idx))
     dt = time.perf_counter() - t0
     return SearchResult(scores=np.asarray(scores), indices=np.asarray(idx),
-                        latency_s=dt)
+                        latency_s=dt, stats=dict(stats or {}))
+
+
+def _probed_sizes(queries: np.ndarray, centroids: np.ndarray,
+                  cell_sizes: np.ndarray, nprobe: int) -> float:
+    """Mean members the probe scan evaluates per query — the IVF
+    ``distance_evals`` stat. Recomputes the nprobe-nearest cells on host
+    (Q x C, negligible next to the scan itself) so the jitted search path
+    stays untouched; the centroid scan is reported separately by callers
+    as ``centroid_evals``."""
+    q = np.asarray(queries, np.float32)
+    c = np.asarray(centroids, np.float32)
+    d2 = (np.sum(q * q, 1)[:, None] - 2.0 * q @ c.T
+          + np.sum(c * c, 1)[None, :])
+    p = min(nprobe, c.shape[0])
+    cells = np.argpartition(d2, p - 1, axis=1)[:, :p]
+    return float(cell_sizes[cells].sum(axis=1).mean())
 
 
 # ---------------------------------------------------------------------------
@@ -193,7 +222,8 @@ class FlatIndex(VectorIndex):
     def search(self, queries: np.ndarray, k: int) -> SearchResult:
         self._require_built()
         q = jnp.asarray(queries, jnp.float32)
-        return _timed(lambda: self._scan(q, self._db, k=min(k, self.ntotal)))
+        return _timed(lambda: self._scan(q, self._db, k=min(k, self.ntotal)),
+                      stats={"distance_evals": float(self.ntotal)})
 
     def save(self, directory: str) -> None:
         self._require_built()
@@ -225,6 +255,7 @@ class IVFFlatIndex(VectorIndex):
         self.kmeans_iters = kmeans_iters
         self.seed = seed
         self._ivf: Optional[ivf_lib.IVFIndex] = None
+        self._cell_sizes: Optional[np.ndarray] = None  # fixed at build
         self._ntotal = 0
 
     @property
@@ -247,6 +278,7 @@ class IVFFlatIndex(VectorIndex):
         self._ivf = ivf_lib.build(corpus, n_cells, cell_cap=self.cell_cap,
                                   kmeans_iters=self.kmeans_iters,
                                   seed=self.seed)
+        self._cell_sizes = np.asarray(self._ivf.list_mask).sum(axis=1)
         self._ntotal = int(corpus.shape[0])
         return self
 
@@ -264,7 +296,11 @@ class IVFFlatIndex(VectorIndex):
             v, i = ivf_lib.search(self._ivf, q, k_eff, nprobe=nprobe)
             return _pad_result(v, i, k_req)
 
-        return _timed(run)
+        return _timed(run, stats={
+            "distance_evals": _probed_sizes(queries, self._ivf.centroids,
+                                            self._cell_sizes, nprobe),
+            "centroid_evals": float(self._ivf.centroids.shape[0]),
+        })
 
     def save(self, directory: str) -> None:
         self._require_built()
@@ -290,6 +326,7 @@ class IVFFlatIndex(VectorIndex):
             list_vecs=jnp.asarray(a["list_vecs"]),
             list_mask=jnp.asarray(a["list_mask"]),
             spill=int(meta.get("spill", 0)))
+        self._cell_sizes = a["list_mask"].sum(axis=1)
         self._ntotal = int(meta["ntotal"])
         return self
 
@@ -381,8 +418,16 @@ class TwoStageIndex(VectorIndex):
         scores, idx = self._rerank(q, cand_vecs, cand, k=k_eff)
         jax.block_until_ready((scores, idx))
         dt = time.perf_counter() - t0
+        # total work per query: stage-1 reduced-space evals + the k1
+        # full-space rerank distances
+        s1_evals = stage1.stats.get("distance_evals", 0.0)
+        stats = dict(stage1.stats)
+        stats.update({"distance_evals": s1_evals + float(k1),
+                      "stage1_distance_evals": s1_evals,
+                      "rerank_evals": float(k1)})
         return SearchResult(scores=np.asarray(scores),
-                            indices=np.asarray(idx), latency_s=dt)
+                            indices=np.asarray(idx), latency_s=dt,
+                            stats=stats)
 
     def save(self, directory: str) -> None:
         self._require_built()

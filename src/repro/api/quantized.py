@@ -30,8 +30,8 @@ import numpy as np
 from ..kernels import pq_adc
 from ..search import ivf as ivf_lib
 from ..search import quantize as qz
-from .index import (VectorIndex, _load_arrays, _pad_result, _save_dir,
-                    _timed, register_index)
+from .index import (VectorIndex, _load_arrays, _pad_result, _probed_sizes,
+                    _save_dir, _timed, register_index)
 
 
 # ---------------------------------------------------------------------------
@@ -80,7 +80,8 @@ class SQ8Index(VectorIndex):
         q = jnp.asarray(queries, jnp.float32)
         k_eff = min(k, self.ntotal)
         return _timed(lambda: qz.sq8_scan(self._sq.vmin, self._sq.step, q,
-                                          self._codes, self._recon_sq, k_eff))
+                                          self._codes, self._recon_sq, k_eff),
+                      stats={"distance_evals": float(self.ntotal)})
 
     def save(self, directory: str) -> None:
         self._require_built()
@@ -152,7 +153,8 @@ class PQIndex(VectorIndex):
         q = jnp.asarray(queries, jnp.float32)
         k_eff = min(k, self.ntotal)
         return _timed(lambda: pq_adc(q, self._pq.codebooks, self._codes,
-                                     k_eff))
+                                     k_eff),
+                      stats={"distance_evals": float(self.ntotal)})
 
     def save(self, directory: str) -> None:
         self._require_built()
@@ -192,6 +194,7 @@ class _IVFQuantBase(VectorIndex):
         self._centroids: Optional[jax.Array] = None
         self._lists: Optional[jax.Array] = None
         self._mask: Optional[jax.Array] = None
+        self._cell_sizes: Optional[np.ndarray] = None  # fixed at build
         self._ntotal = 0
         self.spill = 0
 
@@ -210,6 +213,7 @@ class _IVFQuantBase(VectorIndex):
         self._centroids = coarse.centroids
         self._lists = coarse.lists
         self._mask = coarse.list_mask
+        self._cell_sizes = np.asarray(coarse.list_mask).sum(axis=1)
         self._ntotal = int(corpus.shape[0])
         self.spill = int(coarse.spill)
         return coarse
@@ -220,6 +224,12 @@ class _IVFQuantBase(VectorIndex):
         k_req = min(k, self.ntotal)
         k_eff = min(k_req, nprobe * int(self._lists.shape[1]))
         return k_req, k_eff, nprobe
+
+    def _probe_stats(self, queries: np.ndarray,
+                     nprobe: int) -> dict[str, float]:
+        return {"distance_evals": _probed_sizes(queries, self._centroids,
+                                                self._cell_sizes, nprobe),
+                "centroid_evals": float(self._centroids.shape[0])}
 
     def _coarse_meta(self) -> dict[str, Any]:
         return {"kind": self.kind, "n_cells": self.n_cells,
@@ -237,6 +247,7 @@ class _IVFQuantBase(VectorIndex):
         self._centroids = jnp.asarray(a["centroids"])
         self._lists = jnp.asarray(a["lists"])
         self._mask = jnp.asarray(a["mask"])
+        self._cell_sizes = a["mask"].sum(axis=1)
         self._ntotal = int(meta["ntotal"])
         self.spill = int(meta.get("spill", 0))
 
@@ -286,7 +297,7 @@ class IVFSQ8Index(_IVFQuantBase):
                                      k_eff, nprobe)
             return _pad_result(v, i, k_req)
 
-        return _timed(run)
+        return _timed(run, stats=self._probe_stats(queries, nprobe))
 
     def save(self, directory: str) -> None:
         self._require_built()
@@ -355,7 +366,7 @@ class IVFPQIndex(_IVFQuantBase):
                                     self._pq.codebooks, q, k_eff, nprobe)
             return _pad_result(v, i, k_req)
 
-        return _timed(run)
+        return _timed(run, stats=self._probe_stats(queries, nprobe))
 
     def save(self, directory: str) -> None:
         self._require_built()

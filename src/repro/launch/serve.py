@@ -6,10 +6,16 @@ index::
 
     RAE64,Flat,Rerank4         # the paper stack: RAE -> reduced scan -> rerank
     RAE64,IVF256,Rerank4       # + coarse quantization in the reduced space
+    RAE64,HNSW32,Rerank4       # + graph beam search: sublinear per-query work
     RAE64,IVF256,PQ8x8,Rerank4 # + PQ list payloads (8 bytes/vector, ADC)
     RAE32,SQ8                  # reduce, then int8 scalar codes
     PCA64,Flat,Rerank4         # baseline reducer, same serving path
     Flat                       # exact full-space scan (the recall reference)
+
+Every batch reports ``distance_evals`` — the mean number of corpus vectors
+whose distance each query evaluated (scan = N; HNSW = beam-visited count)
+— so the sublinearity of a graph stack is visible next to recall/latency.
+``--ef-search`` tunes the HNSW beam width at serve time.
 
 Built indexes persist (``--save-index DIR``) and reload without retraining
 (``--load-index DIR``) — cold starts no longer pay the RAE training bill.
@@ -39,6 +45,14 @@ def build_or_load_index(args) -> tuple[api.VectorIndex, np.ndarray]:
     if args.load_index:
         print(f"[2/5] loading index from {args.load_index}")
         index = api.load_index(args.load_index)
+        if args.ef_search is not None:
+            # ef_search is a pure query-time knob: retune the beam on a
+            # loaded graph instead of silently serving the saved width
+            hnsw = index.base if isinstance(index, api.TwoStageIndex) \
+                else index
+            if isinstance(hnsw, api.HNSWIndex):
+                hnsw.ef_search = args.ef_search
+                print(f"      ef_search -> {args.ef_search}")
         if index.ntotal != args.n:
             raise SystemExit(
                 f"loaded index holds {index.ntotal} vectors but "
@@ -54,10 +68,16 @@ def build_or_load_index(args) -> tuple[api.VectorIndex, np.ndarray]:
     if parsed.reducer == "rae":
         reducer_kw = dict(steps=args.steps, weight_decay=args.weight_decay,
                           seed=args.seed)
+    index_kw = {}
+    if parsed.base == "hnsw":
+        index_kw = dict(ef_construction=args.ef_construction or 100,
+                        ef_search=args.ef_search or 64, seed=args.seed)
     print(f"[2/5] building {spec!r}"
           + (f" (rae: {args.steps} steps, lambda={args.weight_decay})"
-             if reducer_kw else ""))
-    index = api.index_factory(spec, reducer_kw=reducer_kw)
+             if reducer_kw else "")
+          + (f" (hnsw: efC={index_kw['ef_construction']}, "
+             f"efS={index_kw['ef_search']})" if index_kw else ""))
+    index = api.index_factory(spec, reducer_kw=reducer_kw, index_kw=index_kw)
     t0 = time.perf_counter()
     index.build(corpus)
     print(f"      built in {time.perf_counter() - t0:.2f}s "
@@ -78,6 +98,13 @@ def main(argv: Optional[list[str]] = None) -> int:
     ap.add_argument("--rerank-factor", type=int, default=4)
     ap.add_argument("--steps", type=int, default=600)
     ap.add_argument("--weight-decay", type=float, default=1e-2)
+    ap.add_argument("--ef-construction", type=int, default=None,
+                    help="HNSW insert-time beam width (default 100; "
+                         "HNSW specs only)")
+    ap.add_argument("--ef-search", type=int, default=None,
+                    help="HNSW query-time beam width, the recall/latency "
+                         "knob (default 64); also retunes a --load-index'd "
+                         "graph")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--index-spec", default=None,
                     help='factory spec, e.g. "RAE64,IVF256,PQ8x8,Rerank4" '
@@ -101,21 +128,28 @@ def main(argv: Optional[list[str]] = None) -> int:
 
     print(f"[4/5] serving {args.batches} batches x {args.queries} queries")
     rng = np.random.default_rng(args.seed + 1)
-    lat, recalls = [], []
+    lat, recalls, evals = [], [], []
     for _ in range(args.batches):
         q = corpus[rng.integers(0, args.n, args.queries)] + \
             0.01 * rng.standard_normal(
                 (args.queries, args.dim)).astype(np.float32)
         res = index.search(q, args.k)
         lat.append(res.latency_s)
+        if res.distance_evals is not None:
+            evals.append(res.distance_evals)
         ref = exact.search(q, args.k)
         inter = (ref.indices[:, :, None] ==
                  res.indices[:, None, :]).any(-1).mean()
         recalls.append(float(inter))
     lat_ms = np.array(lat[1:] or lat) * 1e3  # drop compile batch
+    evals_str = ""
+    if evals:
+        ev = float(np.mean(evals))
+        evals_str = (f" | distance evals/query {ev:.0f} "
+                     f"({ev / args.n:.1%} of corpus)")
     print(f"[5/5] recall@{args.k}: {np.mean(recalls):.4f} | "
           f"latency p50 {np.percentile(lat_ms, 50):.2f} ms "
-          f"p99 {np.percentile(lat_ms, 99):.2f} ms")
+          f"p99 {np.percentile(lat_ms, 99):.2f} ms" + evals_str)
     return 0
 
 

@@ -1,3 +1,3 @@
-from . import distributed, ivf, quantize, twostage
+from . import distributed, hnsw, ivf, quantize, twostage
 from .distributed import distributed_topk, search, sharded_scores
 from .twostage import encode_corpus, recall_vs_exact, two_stage_search

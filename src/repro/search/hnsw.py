@@ -1,0 +1,371 @@
+"""HNSW graph search (Malkov & Yashunin 2016) — the sublinear search tier.
+
+Layered navigable-small-world graph: each node draws a top layer from the
+geometric distribution ``floor(-ln(U) / ln(M))``; insert runs an
+``ef_construction``-bounded beam per layer and connects to at most ``M``
+neighbors chosen by the pruning heuristic (Alg. 4: a candidate joins only
+if it is closer to the query than to every already-selected neighbor,
+which keeps edges spread across directions instead of clustering). Degrees
+are capped at ``M`` on upper layers and ``2M`` at layer 0; when a cap
+overflows, the overfull list is re-pruned with the same heuristic and the
+dropped back-links are removed, so links stay bidirectional (unlike
+hnswlib, which leaves asymmetric edges after a shrink — symmetric graphs
+are what the invariant suite checks, and pruned slots are refilled with
+the nearest rejected candidates to protect connectivity).
+
+Search greedy-descends from the entry point through the upper layers
+(ef=1) and runs the ef-bounded best-first beam at layer 0. Traversal is
+pointer-chasing and stays on host (numpy + heapq); only the inner
+candidate-distance batches are vectorized, routed through the fused
+Pallas L2 scan on TPU and a numpy ref elsewhere
+(:func:`candidate_distances`). Every distance evaluation is counted —
+:func:`search` returns per-query eval totals, the sublinearity axis the
+benchmarks report next to recall.
+
+Composes with the paper's RAE exactly like IVF: build the graph over the
+*reduced* corpus and rerank in R^n, so beam search pays O(m) per hop
+instead of O(n).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+import numpy as np
+
+_MAX_LEVEL = 15
+
+
+def _backend() -> str:
+    import jax
+
+    return jax.default_backend()
+
+
+def _resolve_impl(impl: str) -> str:
+    """Collapse ``"auto"`` to a concrete impl ONCE per build/search — the
+    backend cannot change mid-traversal and the hot loops issue tens of
+    thousands of tiny distance batches."""
+    if impl == "auto":
+        return "fused" if _backend() == "tpu" else "np"
+    return impl
+
+
+def candidate_distances(q: np.ndarray, vecs: np.ndarray,
+                        impl: str = "auto") -> np.ndarray:
+    """Squared L2 from one query [d] to a candidate batch [c, d].
+
+    ``impl="fused"`` routes through the fused ``l2_topk`` scan (Pallas on
+    TPU, jnp ref elsewhere) with k = c and scatters the sorted output back
+    to input order; ``"np"`` is the host ref. ``"auto"`` picks fused only
+    on TPU — traversal is host-driven, so device round-trips lose on CPU.
+    """
+    impl = _resolve_impl(impl)
+    if impl == "np":
+        diff = vecs - q
+        return np.einsum("cd,cd->c", diff, diff)
+    import jax.numpy as jnp
+
+    from ..kernels import l2_topk
+
+    c = int(vecs.shape[0])
+    scores, idx = l2_topk(jnp.asarray(q)[None, :], jnp.asarray(vecs), c)
+    out = np.empty(c, np.float32)
+    out[np.asarray(idx[0])] = -np.asarray(scores[0])  # scores = -||q-d||^2
+    return out
+
+
+class _Evals:
+    """Mutable distance-evaluation counter threaded through the traversal."""
+
+    __slots__ = ("n",)
+
+    def __init__(self):
+        self.n = 0
+
+
+@dataclass
+class HNSWGraph:
+    """Padded-dense adjacency: ``links0`` [N, 2M] is layer 0, ``links``
+    [L, N, M] are layers 1..L (-1 = empty slot; rows of nodes absent from
+    a layer are all -1)."""
+
+    vecs: np.ndarray     # [N, d] float32
+    levels: np.ndarray   # [N] int32: top layer of each node
+    links0: np.ndarray   # [N, 2M] int32
+    links: np.ndarray    # [L, N, M] int32
+    entry: int
+    M: int
+
+    @property
+    def ntotal(self) -> int:
+        return int(self.vecs.shape[0])
+
+    @property
+    def max_level(self) -> int:
+        return int(self.levels[self.entry])
+
+    def adjacency(self, layer: int) -> np.ndarray:
+        return self.links0 if layer == 0 else self.links[layer - 1]
+
+
+def sample_levels(n: int, M: int, seed: int) -> np.ndarray:
+    """Geometric level draw: floor(-ln(U) * mL) with mL = 1/ln(M)."""
+    rng = np.random.default_rng(seed)
+    u = rng.uniform(np.finfo(np.float64).tiny, 1.0, size=n)
+    lv = np.floor(-np.log(u) / np.log(max(M, 2))).astype(np.int32)
+    return np.minimum(lv, _MAX_LEVEL)
+
+
+def _greedy_descent(vecs, adj, q, cur, d_cur, evals, impl):
+    """ef=1 layer traversal: hop to the closest neighbor until no
+    neighbor improves."""
+    while True:
+        nbrs = adj[cur]
+        nbrs = nbrs[nbrs >= 0]
+        if nbrs.size == 0:
+            return cur, d_cur
+        ds = candidate_distances(q, vecs[nbrs], impl)
+        evals.n += int(nbrs.size)
+        j = int(np.argmin(ds))
+        if ds[j] >= d_cur:
+            return cur, d_cur
+        cur, d_cur = int(nbrs[j]), float(ds[j])
+
+
+def _search_layer(vecs, adj, q, eps, ef, visited, stamp, evals, impl):
+    """Best-first beam (Alg. 2): returns the ef closest visited nodes as a
+    sorted [(dist, node), ...] list. ``eps`` are (dist, node) entry points
+    (already counted); ``visited``/``stamp`` implement an O(1)-reset
+    visited set shared across calls."""
+    cand: list[tuple[float, int]] = []   # min-heap on distance
+    res: list[tuple[float, int]] = []    # max-heap via negated distance
+    for d, e in eps:
+        visited[e] = stamp
+        heapq.heappush(cand, (d, e))
+        heapq.heappush(res, (-d, e))
+    while cand:
+        d, c = heapq.heappop(cand)
+        if d > -res[0][0] and len(res) >= ef:
+            break
+        nbrs = adj[c]
+        nbrs = nbrs[nbrs >= 0]
+        fresh = nbrs[visited[nbrs] != stamp]
+        if fresh.size == 0:
+            continue
+        visited[fresh] = stamp
+        ds = candidate_distances(q, vecs[fresh], impl)
+        evals.n += int(fresh.size)
+        worst = -res[0][0]
+        full = len(res) >= ef
+        for dj, nj in zip(ds.tolist(), fresh.tolist()):
+            if not full or dj < worst:
+                heapq.heappush(cand, (dj, nj))
+                heapq.heappush(res, (-dj, nj))
+                if len(res) > ef:
+                    heapq.heappop(res)
+                worst = -res[0][0]
+                full = len(res) >= ef
+    return sorted((-nd, node) for nd, node in res)
+
+
+def _select_heuristic(cands, vecs, m, evals, impl, keep_pruned=False):
+    """Alg. 4 neighbor selection: scan candidates nearest-first, keep one
+    only if it is closer to the query than to every kept neighbor. With
+    ``keep_pruned`` the remaining slots are refilled nearest-first (used
+    on cap overflow, where dropping to << m edges risks disconnection)."""
+    sel: list[int] = []
+    sel_vecs: list[np.ndarray] = []
+    pruned: list[int] = []
+    for d_c, c in cands:
+        if len(sel) >= m:
+            break
+        if sel:
+            ds = candidate_distances(vecs[c], np.stack(sel_vecs), impl)
+            evals.n += len(sel)
+            if not np.all(d_c < ds):
+                pruned.append(c)
+                continue
+        sel.append(c)
+        sel_vecs.append(vecs[c])
+    if keep_pruned:
+        sel.extend(pruned[: m - len(sel)])
+    return sel
+
+
+def _bfs_layer0(links0: np.ndarray, entry: int) -> np.ndarray:
+    """Boolean reachability mask of the layer-0 graph from ``entry``."""
+    seen = np.zeros(links0.shape[0], bool)
+    seen[entry] = True
+    stack = [entry]
+    while stack:
+        c = stack.pop()
+        for t in links0[c][links0[c] >= 0].tolist():
+            if not seen[t]:
+                seen[t] = True
+                stack.append(t)
+    return seen
+
+
+def _evict_farthest(links0, vecs, node, evals, impl) -> None:
+    """Free one slot in a full row by dropping its farthest link (both
+    directions, keeping the graph symmetric)."""
+    nbrs = links0[node][links0[node] >= 0]
+    ds = candidate_distances(vecs[node], vecs[nbrs], impl)
+    evals.n += int(nbrs.size)
+    t = int(nbrs[np.argmax(ds)])
+    links0[t][links0[t] == node] = -1
+    links0[node][links0[node] == t] = -1
+
+
+def _repair_connectivity(vecs, links0, entry, evals, impl) -> int:
+    """Symmetric pruning can (rarely) strand a node at layer 0: every
+    neighbor that once pointed at it overflowed and evicted it. Stitch each
+    stranded component back via its nearest reachable node — an evictee
+    keeps its other edges, so the loop makes monotone progress and the
+    layer-0 reachability invariant holds unconditionally."""
+    stitched = 0
+    for _ in range(links0.shape[0]):
+        seen = _bfs_layer0(links0, entry)
+        miss = np.flatnonzero(~seen)
+        if miss.size == 0:
+            return stitched
+        u = int(miss[0])
+        reach = np.flatnonzero(seen)
+        ds = candidate_distances(vecs[u], vecs[reach], impl)
+        evals.n += int(reach.size)
+        r = int(reach[np.argmin(ds)])
+        for node in (u, r):
+            if not np.any(links0[node] < 0):
+                _evict_farthest(links0, vecs, node, evals, impl)
+        links0[u][np.flatnonzero(links0[u] < 0)[0]] = r
+        links0[r][np.flatnonzero(links0[r] < 0)[0]] = u
+        stitched += 1
+    return stitched
+
+
+def build(corpus: np.ndarray, M: int = 32, ef_construction: int = 100,
+          seed: int = 0, impl: str = "auto") -> HNSWGraph:
+    """Sequential heuristic insert of every corpus row (Alg. 1)."""
+    vecs = np.ascontiguousarray(np.asarray(corpus, np.float32))
+    n = vecs.shape[0]
+    if n == 0:
+        raise ValueError("empty corpus")
+    impl = _resolve_impl(impl)
+    m0 = 2 * M
+    levels = sample_levels(n, M, seed)
+    top = int(levels.max())
+    links0 = np.full((n, m0), -1, np.int32)
+    links = np.full((top, n, M), -1, np.int32)
+    visited = np.full(n, -1, np.int64)
+    # the traversal helpers are shared with search(), where the caller
+    # consumes the count; at build time it only feeds the helpers
+    evals = _Evals()
+    entry = 0
+
+    def write_row(adj, node, nbrs):
+        row = adj[node]
+        row[: len(nbrs)] = nbrs
+        row[len(nbrs):] = -1
+
+    for i in range(1, n):
+        q = vecs[i]
+        l_i = int(levels[i])
+        l_ep = int(levels[entry])
+        cur = entry
+        d_cur = float(candidate_distances(q, vecs[entry][None], impl)[0])
+        evals.n += 1
+        for layer in range(l_ep, l_i, -1):
+            cur, d_cur = _greedy_descent(vecs, links[layer - 1], q, cur,
+                                         d_cur, evals, impl)
+        eps = [(d_cur, cur)]
+        for layer in range(min(l_ep, l_i), -1, -1):
+            adj = links0 if layer == 0 else links[layer - 1]
+            cap = m0 if layer == 0 else M
+            found = _search_layer(vecs, adj, q, eps, ef_construction,
+                                  visited, i * (top + 1) + layer, evals,
+                                  impl)
+            sel = _select_heuristic(found, vecs, M, evals, impl)
+            write_row(adj, i, sel)
+            # bidirectional: add the back-link, re-pruning on overflow and
+            # dropping the reverse edge of anything the prune evicts
+            for s in sel:
+                row = adj[s]
+                free = np.flatnonzero(row < 0)  # prune leaves holes anywhere
+                if free.size:
+                    row[free[0]] = i
+                    continue
+                nbrs = row[row >= 0]
+                ds = candidate_distances(vecs[s], vecs[nbrs], impl)
+                evals.n += int(nbrs.size)
+                d_i = float(candidate_distances(vecs[s], q[None], impl)[0])
+                evals.n += 1
+                merged = sorted([*zip(ds.tolist(), nbrs.tolist()),
+                                 (d_i, i)])
+                kept = _select_heuristic(merged, vecs, cap, evals, impl,
+                                         keep_pruned=True)
+                for t in nbrs:
+                    if t not in kept:
+                        trow = adj[t]
+                        trow[trow == s] = -1
+                if i not in kept and len(kept) < cap:
+                    kept.append(i)  # never orphan the node being inserted
+                elif i not in kept:
+                    irow = adj[i]
+                    irow[irow == s] = -1
+                write_row(adj, s, kept)
+            eps = found
+        if l_i > int(levels[entry]):
+            entry = i
+    _repair_connectivity(vecs, links0, entry, evals, impl)
+    # compact pad slots left of real links (prune leaves holes)
+    for adj in (links0, *links):
+        order = np.argsort(adj < 0, axis=1, kind="stable")
+        adj[:] = np.take_along_axis(adj, order, axis=1)
+    return HNSWGraph(vecs=vecs, levels=levels, links0=links0, links=links,
+                     entry=entry, M=M)
+
+
+def search(graph: HNSWGraph, queries: np.ndarray, k: int,
+           ef_search: int = 64, impl: str = "auto"
+           ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Beam search per query. Returns (scores [Q, k], ids [Q, k], evals
+    [Q]): scores = -squared-euclidean (engine convention, higher =
+    closer), ids pad with -1 / scores with -inf when the beam holds fewer
+    than k nodes, evals = distance computations per query (the visited
+    count — the sublinearity metric)."""
+    q = np.asarray(queries, np.float32)
+    nq = q.shape[0]
+    impl = _resolve_impl(impl)
+    ef = max(ef_search, k)
+    scores = np.full((nq, k), -np.inf, np.float32)
+    ids = np.full((nq, k), -1, np.int32)
+    evals = np.zeros(nq, np.int64)
+    visited = np.full(graph.ntotal, -1, np.int64)
+    for qi in range(nq):
+        cnt = _Evals()
+        cur = graph.entry
+        d_cur = float(candidate_distances(q[qi], graph.vecs[cur][None],
+                                          impl)[0])
+        cnt.n += 1
+        for layer in range(graph.max_level, 0, -1):
+            cur, d_cur = _greedy_descent(graph.vecs, graph.links[layer - 1],
+                                         q[qi], cur, d_cur, cnt, impl)
+        found = _search_layer(graph.vecs, graph.links0, q[qi],
+                              [(d_cur, cur)], ef, visited, qi, cnt, impl)
+        for j, (d, node) in enumerate(found[:k]):
+            scores[qi, j] = -d
+            ids[qi, j] = node
+        evals[qi] = cnt.n
+    return scores, ids, evals
+
+
+def recall_vs_exact(graph: HNSWGraph, corpus: np.ndarray,
+                    queries: np.ndarray, k: int, ef_search: int) -> float:
+    import jax.numpy as jnp
+
+    from ..core.metrics import knn_indices, set_overlap
+
+    exact = knn_indices(jnp.asarray(queries), jnp.asarray(corpus), k)
+    _, got, _ = search(graph, queries, k, ef_search)
+    return float(set_overlap(exact, jnp.asarray(got)))

@@ -1,8 +1,18 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
-see the real (1-device) host; only launch/dryrun.py fakes 512 devices."""
+see the real (1-device) host; only launch/dryrun.py fakes 512 devices.
+
+The 20k x 256 acceptance setup (corpus + queries + exact ground truth) is
+session-scoped so the slow split synthesizes and brute-force-scans it ONCE
+— tests/test_api.py, tests/test_quantized.py, and tests/test_graph.py all
+assert against the same fixture instead of recomputing ground truth per
+module."""
 import jax
 import numpy as np
 import pytest
+
+ACCEPTANCE_N = 20000
+ACCEPTANCE_DIM = 256
+ACCEPTANCE_K = 10
 
 
 @pytest.fixture(scope="session")
@@ -13,3 +23,31 @@ def rng():
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def acceptance_corpus():
+    """The 20k x 256 corpus every slow acceptance test searches."""
+    from repro.data import synthetic
+
+    return synthetic.embedding_corpus(ACCEPTANCE_N, ACCEPTANCE_DIM,
+                                      n_clusters=16, intrinsic=64, seed=0)
+
+
+@pytest.fixture(scope="session")
+def acceptance_queries(acceptance_corpus):
+    """64 perturbed corpus rows (the historical acceptance protocol)."""
+    rng = np.random.default_rng(1)
+    picks = rng.integers(0, ACCEPTANCE_N, 64)
+    noise = 0.01 * rng.standard_normal(
+        (64, ACCEPTANCE_DIM)).astype(np.float32)
+    return acceptance_corpus[picks] + noise
+
+
+@pytest.fixture(scope="session")
+def acceptance_gt(acceptance_corpus, acceptance_queries):
+    """Exact full-space top-10 ids [64, 10] from the brute-force scan."""
+    from repro import api
+
+    exact = api.FlatIndex().build(acceptance_corpus)
+    return exact.search(acceptance_queries, ACCEPTANCE_K).indices

@@ -87,11 +87,35 @@ def test_parse_rejects_invalid(bad):
         api.parse_index_spec(bad)
 
 
+# ---------------------------------------------------------------------------
+# Spec round-trip: every registered grammar form renders back canonically
+# ---------------------------------------------------------------------------
+# One spec per registered grammar form (base x quant x reducer x rerank).
+ALL_SPEC_FORMS = [
+    "Flat", "IVF32", "HNSW8", "SQ8", "PQ4x8", "Flat,SQ8",
+    "IVF32,SQ8", "IVF32,PQ4x8",
+    "PCA8,Flat", "PCA8,IVF32,Rerank2", "PCA8,HNSW8,Rerank2",
+    "PCA8,SQ8,Rerank2", "PCA8,PQ4x8,Rerank2", "PCA8,IVF32,PQ4x8,Rerank2",
+    "RAE8,Flat,Rerank2",
+]
+
+
+@pytest.mark.parametrize("spec", ALL_SPEC_FORMS)
+def test_parse_str_roundtrip_idempotent(spec):
+    """``str(parsed)`` is a canonical spec: re-parsing it is a fixed
+    point, in both the parsed and the rendered domain."""
+    parsed = api.parse_index_spec(spec)
+    assert api.parse_index_spec(str(parsed)) == parsed
+    assert str(api.parse_index_spec(str(parsed))) == str(parsed)
+
+
 def test_factory_builds_each_shape(small_corpus, queries):
     for spec, cls in [("Flat", api.FlatIndex),
                       ("IVF32", api.IVFFlatIndex),
+                      ("HNSW8", api.HNSWIndex),
                       ("PCA8,Flat", api.TwoStageIndex)]:
-        idx = api.index_factory(spec)
+        idx = api.index_factory(spec, index_kw={"ef_construction": 40}
+                                if "HNSW" in spec else None)
         assert isinstance(idx, cls)
         idx.build(small_corpus)
         res = idx.search(queries, 5)
@@ -114,9 +138,16 @@ def test_reducer_save_load_roundtrip(name, small_corpus, queries, tmp_path):
     np.testing.assert_allclose(red2.transform(queries), z, rtol=1e-6)
 
 
-@pytest.mark.parametrize("spec", ["Flat", "IVF32", "RAE8,IVF32,Rerank2"])
+@pytest.mark.parametrize("spec", [
+    "Flat", "IVF32", "HNSW8", "SQ8", "PQ4x8", "IVF32,SQ8", "IVF32,PQ4x8",
+    "RAE8,IVF32,Rerank2", "PCA8,HNSW8,Rerank2",
+])
 def test_index_save_load_roundtrip(spec, small_corpus, queries, tmp_path):
-    idx = api.index_factory(spec, reducer_kw={"steps": 40})
+    """Every registered spec form: save -> load -> search returns
+    identical ids (and scores) on a fixed corpus."""
+    reducer_kw = {"steps": 40} if spec.startswith("RAE") else None
+    index_kw = {"ef_construction": 60} if "HNSW" in spec else None
+    idx = api.index_factory(spec, reducer_kw=reducer_kw, index_kw=index_kw)
     idx.build(small_corpus)
     res = idx.search(queries, 5)
     idx.save(str(tmp_path / "idx"))
@@ -216,25 +247,21 @@ def test_rae_reducer_encode_matches_core(small_corpus, queries):
 
 # ---------------------------------------------------------------------------
 # Acceptance: 20k x 256, both factory stacks, recall@10 >= 0.9, save+reload
+# (corpus/queries/ground truth are the session-scoped conftest fixtures,
+# shared with the quantized and graph acceptance tests)
 # ---------------------------------------------------------------------------
 @pytest.mark.slow
 @pytest.mark.timeout(900)
 @pytest.mark.parametrize("spec", ["RAE64,Flat,Rerank4", "RAE64,IVF256,Rerank4"])
-def test_acceptance_20k_recall(spec, tmp_path):
-    corpus = synthetic.embedding_corpus(20000, 256, n_clusters=16,
-                                        intrinsic=64, seed=0)
-    rng = np.random.default_rng(1)
-    q = corpus[rng.integers(0, 20000, 64)] + \
-        0.01 * rng.standard_normal((64, 256)).astype(np.float32)
-
+def test_acceptance_20k_recall(spec, tmp_path, acceptance_corpus,
+                               acceptance_queries, acceptance_gt):
     idx = api.index_factory(spec, reducer_kw={"steps": 1000, "seed": 0})
-    idx.build(corpus)
-    res = idx.search(q, 10)
-    exact = api.FlatIndex().build(corpus).search(q, 10)
-    recall = (exact.indices[:, :, None] ==
+    idx.build(acceptance_corpus)
+    res = idx.search(acceptance_queries, 10)
+    recall = (acceptance_gt[:, :, None] ==
               res.indices[:, None, :]).any(-1).mean()
     assert recall >= 0.9, (spec, recall)
 
     idx.save(str(tmp_path / "acc"))
-    res2 = api.load_index(str(tmp_path / "acc")).search(q, 10)
+    res2 = api.load_index(str(tmp_path / "acc")).search(acceptance_queries, 10)
     np.testing.assert_array_equal(res2.indices, res.indices)

@@ -1,0 +1,272 @@
+"""HNSW graph tier: structural invariants, ef monotonicity, stats,
+factory/persistence integration, 20k acceptance.
+
+Invariants follow the construction contract in ``repro.search.hnsw``:
+degree caps (M upper / 2M layer 0), symmetric links *after* pruning,
+entry point on the top layer, layer-0 reachability, layer membership.
+Each property runs as a deterministic seed sweep (always on) plus a
+``hypothesis`` fuzz variant via the optional-dependency shim.
+"""
+import jax
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro import api
+from repro.data import synthetic
+from repro.search import hnsw
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return synthetic.embedding_corpus(2000, 32, n_clusters=8, intrinsic=12,
+                                      seed=13)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    rng = np.random.default_rng(4)
+    picks = rng.integers(0, corpus.shape[0], 48)
+    return corpus[picks] + 0.01 * rng.standard_normal(
+        (48, corpus.shape[1])).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def graph(corpus):
+    return hnsw.build(corpus, M=8, ef_construction=60, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Structural invariants
+# ---------------------------------------------------------------------------
+def check_graph_invariants(g: hnsw.HNSWGraph):
+    n = g.ntotal
+    # entry point sits on the top layer; no node exceeds it
+    assert int(g.levels[g.entry]) == int(g.levels.max())
+    assert np.all(g.levels <= g.levels[g.entry])
+    for layer in range(g.max_level + 1):
+        adj = g.adjacency(layer)
+        cap = 2 * g.M if layer == 0 else g.M
+        deg = (adj >= 0).sum(axis=1)
+        # degree cap
+        assert deg.max() <= cap, (layer, int(deg.max()), cap)
+        src, slot = np.nonzero(adj >= 0)
+        dst = adj[src, slot]
+        # links stay inside the corpus and never self-loop
+        assert np.all((dst >= 0) & (dst < n))
+        assert np.all(src != dst)
+        # both endpoints are members of this layer
+        assert np.all(g.levels[src] >= layer)
+        assert np.all(g.levels[dst] >= layer)
+        # no duplicate slots
+        assert len(set(zip(src.tolist(), dst.tolist()))) == len(src)
+        # bidirectional after pruning: edge set equals its transpose
+        edges = set(zip(src.tolist(), dst.tolist()))
+        assert all((b, a) in edges for a, b in edges), f"layer {layer}"
+    # layer 0 is reachable from the entry point
+    assert hnsw._bfs_layer0(g.links0, g.entry).all()
+
+
+def test_graph_invariants_deterministic(graph):
+    check_graph_invariants(graph)
+
+
+@pytest.mark.parametrize("seed,n,m", [(1, 50, 2), (2, 300, 4), (3, 777, 6),
+                                      (4, 120, 16), (5, 1, 4), (6, 2, 4)])
+def test_graph_invariants_sweep(seed, n, m):
+    x = synthetic.embedding_corpus(max(n, 8), 16, n_clusters=4, intrinsic=8,
+                                   seed=seed)[:n]
+    check_graph_invariants(hnsw.build(x, M=m, ef_construction=30, seed=seed))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 250),
+       m=st.integers(2, 12), efc=st.integers(4, 60))
+def test_graph_invariants_fuzz(seed, n, m, efc):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 8)).astype(np.float32)
+    check_graph_invariants(hnsw.build(x, M=m, ef_construction=efc, seed=seed))
+
+
+def test_level_sampling_geometric():
+    """Levels follow the floor(-ln(U)/ln(M)) law: P(level >= L) ~ M^-L."""
+    lv = hnsw.sample_levels(200_000, 16, seed=0)
+    frac1 = float((lv >= 1).mean())
+    assert abs(frac1 - 1 / 16) < 0.005
+    frac2 = float((lv >= 2).mean())
+    assert abs(frac2 - 1 / 256) < 0.002
+
+
+# ---------------------------------------------------------------------------
+# Search behaviour: ef monotonicity + beam padding
+# ---------------------------------------------------------------------------
+def test_ef_recall_monotone_deterministic(graph, corpus, queries):
+    recalls = [hnsw.recall_vs_exact(graph, corpus, queries, 10, ef)
+               for ef in (10, 20, 40, 80, 160)]
+    for lo, hi in zip(recalls, recalls[1:]):
+        assert hi >= lo, recalls
+    assert recalls[-1] >= 0.95, recalls
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_ef_recall_monotone_fuzz(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((400, 12)).astype(np.float32)
+    g = hnsw.build(x, M=6, ef_construction=40, seed=seed)
+    q = x[:16] + 0.01 * rng.standard_normal((16, 12)).astype(np.float32)
+    recalls = [hnsw.recall_vs_exact(g, x, q, 5, ef) for ef in (5, 20, 80)]
+    # greedy beams are not *theoretically* monotone query-by-query; allow
+    # a hair of noise pairwise but require the sweep to end at least as
+    # high as it starts
+    for lo, hi in zip(recalls, recalls[1:]):
+        assert hi >= lo - 0.02, recalls
+    assert recalls[-1] >= recalls[0], recalls
+
+
+def test_search_pads_when_beam_short(corpus):
+    """k beyond the beam/corpus pads with -1/-inf (FAISS convention)."""
+    g = hnsw.build(corpus[:6], M=4, ef_construction=20, seed=0)
+    scores, ids, _ = hnsw.search(g, corpus[:3], 10)
+    assert ids.shape == (3, 10)
+    assert np.all(ids[:, 6:] == -1)
+    assert np.all(np.isneginf(scores[:, 6:]))
+    valid = ids >= 0
+    assert np.all(np.isfinite(scores[valid]))
+
+
+def test_candidate_distances_fused_matches_np():
+    """The TPU-routed form (fused kernel; jnp ref off-TPU) must equal the
+    host ref, scattered back to input order."""
+    rng = np.random.default_rng(7)
+    q = rng.standard_normal(24).astype(np.float32)
+    vecs = rng.standard_normal((33, 24)).astype(np.float32)
+    a = hnsw.candidate_distances(q, vecs, impl="np")
+    b = hnsw.candidate_distances(q, vecs, impl="fused")
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# distance_evals stats: the sublinearity contract, asserted per tier
+# ---------------------------------------------------------------------------
+def test_distance_evals_flat_is_n(corpus, queries):
+    res = api.FlatIndex().build(corpus).search(queries, 10)
+    assert res.distance_evals == corpus.shape[0]
+
+
+def test_distance_evals_ivf_is_probed_sizes(corpus, queries):
+    idx = api.IVFFlatIndex(n_cells=32, nprobe=4).build(corpus)
+    res = idx.search(queries, 10)
+    # probed sizes: more than k, far less than the full corpus
+    assert 10 <= res.distance_evals < corpus.shape[0]
+    assert res.stats["centroid_evals"] == 32
+    # probing more cells evaluates more distances
+    more = api.IVFFlatIndex(n_cells=32, nprobe=16).build(corpus)
+    assert more.search(queries, 10).distance_evals > res.distance_evals
+
+
+def test_distance_evals_hnsw_is_visited_and_sublinear(graph, corpus,
+                                                      queries):
+    idx = api.HNSWIndex(m=8, ef_construction=60)
+    idx._g = graph  # reuse the module-scoped build
+    res = idx.search(queries, 10)
+    assert 10 <= res.distance_evals < corpus.shape[0]
+    # widening the beam visits more
+    wide = api.HNSWIndex(m=8, ef_search=256)
+    wide._g = graph
+    assert wide.search(queries, 10).distance_evals > res.distance_evals
+
+
+def test_distance_evals_two_stage_composes(corpus, queries):
+    idx = api.TwoStageIndex(api.make_reducer("pca", 8),
+                            api.HNSWIndex(m=8, ef_construction=60),
+                            rerank_factor=4)
+    idx.build(corpus)
+    res = idx.search(queries, 10)
+    k1 = 10 * 4 * api.HNSWIndex.stage1_oversample
+    assert res.stats["rerank_evals"] == k1
+    assert res.distance_evals == (res.stats["stage1_distance_evals"] + k1)
+
+
+# ---------------------------------------------------------------------------
+# Factory + persistence integration
+# ---------------------------------------------------------------------------
+def test_factory_hnsw_knobs_flow_through():
+    idx = api.index_factory("HNSW16", index_kw={"ef_construction": 33,
+                                                "ef_search": 44, "seed": 5})
+    assert isinstance(idx, api.HNSWIndex)
+    assert (idx.m, idx.ef_construction, idx.ef_search, idx.seed) == \
+        (16, 33, 44, 5)
+    stack = api.index_factory("RAE64,HNSW32,Rerank4")
+    assert isinstance(stack, api.TwoStageIndex)
+    assert isinstance(stack.base, api.HNSWIndex)
+    assert stack.rerank_factor == 4
+
+
+def test_factory_hnsw_rejects_cosine_and_quant():
+    with pytest.raises(ValueError, match="euclidean only"):
+        api.index_factory("HNSW32", metric="cosine")
+    with pytest.raises(ValueError, match="bad index spec"):
+        api.parse_index_spec("HNSW32,SQ8")
+
+
+def test_hnsw_save_load_roundtrip_with_upper_layers(tmp_path):
+    """Force a multi-layer graph (small M -> tall hierarchy) and check the
+    adjacency stack round-trips bit-exact."""
+    x = synthetic.embedding_corpus(600, 16, n_clusters=4, intrinsic=8,
+                                   seed=21)
+    idx = api.HNSWIndex(m=4, ef_construction=40, seed=3).build(x)
+    assert idx._g.max_level >= 1  # the point of the test
+    res = idx.search(x[:16], 5)
+    idx.save(str(tmp_path / "g"))
+    idx2 = api.load_index(str(tmp_path / "g"))
+    assert isinstance(idx2, api.HNSWIndex)
+    np.testing.assert_array_equal(idx2._g.links0, idx._g.links0)
+    np.testing.assert_array_equal(idx2._g.links, idx._g.links)
+    np.testing.assert_array_equal(idx2._g.levels, idx._g.levels)
+    assert idx2._g.entry == idx._g.entry
+    res2 = idx2.search(x[:16], 5)
+    np.testing.assert_array_equal(res2.indices, res.indices)
+    check_graph_invariants(idx2._g)
+
+
+def test_bytes_per_vector_accounts_links(corpus):
+    idx = api.HNSWIndex(m=8, ef_construction=40).build(corpus)
+    d = corpus.shape[1]
+    # vector + layer-0 slots at least; strictly more than flat storage
+    assert idx.bytes_per_vector >= d * 4 + 4 * 2 * 8
+    flat = api.FlatIndex().build(corpus)
+    assert idx.bytes_per_vector > flat.bytes_per_vector
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: the ISSUE 3 criterion, on the shared 20k fixture
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.timeout(900)
+def test_acceptance_20k_hnsw_recall_and_sublinearity(tmp_path,
+                                                     acceptance_corpus,
+                                                     acceptance_queries,
+                                                     acceptance_gt):
+    """``RAE64,HNSW32,Rerank4`` reaches recall@10 >= 0.9 vs the exact scan
+    while evaluating distances on < 10% of the corpus per query (the
+    ``distance_evals`` stat), and survives save -> load bit-exact."""
+    idx = api.index_factory("RAE64,HNSW32,Rerank4",
+                            reducer_kw={"steps": 1000, "seed": 0})
+    idx.build(acceptance_corpus)
+    res = idx.search(acceptance_queries, 10)
+    recall = (acceptance_gt[:, :, None] ==
+              res.indices[:, None, :]).any(-1).mean()
+    assert recall >= 0.9, recall
+
+    n = acceptance_corpus.shape[0]
+    assert res.distance_evals < 0.10 * n, (res.distance_evals, n)
+    check_graph_invariants(idx.base._g)
+
+    idx.save(str(tmp_path / "hnsw"))
+    res2 = api.load_index(str(tmp_path / "hnsw")).search(acceptance_queries,
+                                                         10)
+    np.testing.assert_array_equal(res2.indices, res.indices)

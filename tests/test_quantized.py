@@ -201,30 +201,26 @@ def test_twostage_over_pq_base(corpus, queries, exact):
 # ---------------------------------------------------------------------------
 @pytest.mark.slow
 @pytest.mark.timeout(900)
-def test_acceptance_20k_ivfpq_recall_and_memory(tmp_path):
+def test_acceptance_20k_ivfpq_recall_and_memory(tmp_path, acceptance_corpus,
+                                                acceptance_queries,
+                                                acceptance_gt):
     """``RAE64,IVF256,PQ8x8,Rerank4`` builds, saves, reloads, reaches
-    recall@10 >= 0.85 vs the exact scan on 20k x 256, at <= 1/8 the
-    bytes-per-vector of ``RAE64,Flat``."""
-    corpus = synthetic.embedding_corpus(20000, 256, n_clusters=16,
-                                        intrinsic=64, seed=0)
-    rng = np.random.default_rng(1)
-    q = corpus[rng.integers(0, 20000, 64)] + \
-        0.01 * rng.standard_normal((64, 256)).astype(np.float32)
-
+    recall@10 >= 0.85 vs the exact scan on the shared 20k x 256 acceptance
+    fixture, at <= 1/8 the bytes-per-vector of ``RAE64,Flat``."""
     idx = api.index_factory("RAE64,IVF256,PQ8x8,Rerank4",
                             reducer_kw={"steps": 1000, "seed": 0})
-    idx.build(corpus)
-    res = idx.search(q, 10)
-    exact = api.FlatIndex().build(corpus).search(q, 10)
-    recall = recall_at_k(res.indices, exact.indices)
+    idx.build(acceptance_corpus)
+    res = idx.search(acceptance_queries, 10)
+    recall = recall_at_k(res.indices, acceptance_gt)
     assert recall >= 0.85, recall
 
     # memory: reuse the SAME fitted reducer for the uncompressed reference
     ref = api.TwoStageIndex(idx.reducer, api.FlatIndex(), rerank_factor=4)
-    ref.build(corpus)
+    ref.build(acceptance_corpus)
     assert idx.bytes_per_vector <= ref.bytes_per_vector / 8, (
         idx.bytes_per_vector, ref.bytes_per_vector)
 
     idx.save(str(tmp_path / "ivfpq"))
-    res2 = api.load_index(str(tmp_path / "ivfpq")).search(q, 10)
+    res2 = api.load_index(str(tmp_path / "ivfpq")).search(acceptance_queries,
+                                                          10)
     np.testing.assert_array_equal(res2.indices, res.indices)
