@@ -2,9 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. Full-scale variants of the
 paper tables live in table1_knn.py / table2_time.py / fig1_weight_decay.py
-/ table3_quant.py / table4_graph.py (separate CLIs); this harness runs
-CPU-budget versions of each so ``python -m benchmarks.run`` finishes in
-minutes and covers every artifact.
+/ table3_quant.py / table4_graph.py / table5_serve.py (separate CLIs);
+this harness runs CPU-budget versions of each so ``python -m
+benchmarks.run`` finishes in minutes and covers every artifact.
 
 Machine-readable output: every run also writes ``results/BENCH_run.json``
 (and each table CLI writes its own ``results/BENCH_<name>.json`` via
@@ -189,6 +189,22 @@ def bench_graph_quick():
              visited_frac=r["visited_frac"], build_s=r["build_s"])
 
 
+def bench_serve_quick():
+    """CPU-budget slice of table5_serve: micro-batched engine QPS vs the
+    sequential q=1 loop (also writes BENCH_serve.json)."""
+    from .table5_serve import run
+
+    rows = run(quick=True)
+    for r in rows:
+        emit(f"table5.{r['spec']}", r["latency_ms_p50"] * 1e3,
+             f"recall@{r['k']}={r['recall_at_k']};"
+             f"speedup={r['speedup']}x;"
+             f"batch={r['batch_size_mean']}",
+             recall=r["recall_at_k"], qps=r["engine_qps"],
+             seq_qps=r["seq_qps"], speedup=r["speedup"],
+             batch_size_mean=r["batch_size_mean"], build_s=r["build_s"])
+
+
 def bench_table1_quick():
     from .table1_knn import run
 
@@ -245,6 +261,7 @@ def main() -> None:
     bench_ivf()
     bench_quant_quick()
     bench_graph_quick()
+    bench_serve_quick()
     bench_fig1_quick()
     bench_table1_quick()
     bench_roofline_summary()

@@ -1,0 +1,209 @@
+"""Table 5 (beyond paper): micro-batched serving throughput — the QPS axis.
+
+Compares, on the SAME built index, two ways of answering a stream of
+single-query requests:
+
+* ``seq``: the naive serving loop — one ``index.search(q[i:i+1])`` per
+  request. Every request pays full dispatch overhead and runs the fused
+  scan at its least efficient shape (q=1).
+* ``engine``: ``repro.serve.SearchEngine`` — N closed-loop client threads
+  (each fires its next request only after the previous answer returns)
+  whose requests the scheduler coalesces into padded batches of up to
+  ``max_batch``.
+
+Recall is reported for BOTH paths against the exact scan; they must be
+equal (row-independent kernels — parity-tested in tests/test_serve.py),
+so ``speedup = engine_qps / seq_qps`` is a pure scheduling win. The
+acceptance bar (ISSUE 4 / scripts/check_bench.py): best speedup >= 3x.
+Jitted scan tiers clear it easily; the HNSW stack's stage-1 beam is
+host-driven Python, so batching only amortizes its rerank — reported
+honestly, not excluded.
+
+Sweeps {Flat, RAE<m>,IVF<c>,Rerank4, RAE<m>,HNSW<M>,Rerank4} and writes
+``results/BENCH_serve.json`` (schema: ``benchmarks.run.write_bench``).
+
+CPU-budget default: ``python -m benchmarks.table5_serve --quick`` finishes
+in a few minutes at n=4096.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core.metrics import recall_at_k
+from repro.data import synthetic
+from repro.serve import SearchEngine
+
+from .run import write_bench
+
+
+def _client_pool(engine: SearchEngine, queries: np.ndarray, k: int,
+                 n_clients: int) -> tuple[float, np.ndarray]:
+    """Closed-loop clients: a shared cursor hands out requests; each
+    client awaits its answer before taking the next. Clients are
+    coroutines on the engine loop (the async-client serving model) rather
+    than OS threads, so a small-core bench box measures the scheduler,
+    not GIL thrash — the threaded `search_one` path is covered by
+    tests/test_serve.py and the HTTP front-end. Returns (wall seconds,
+    per-request indices [R, k])."""
+    indices = np.zeros((queries.shape[0], k), np.int64)
+
+    async def drive():
+        cursor = iter(range(queries.shape[0]))
+
+        async def client():
+            # shared iterator is safe: single loop thread, no await in next
+            for i in cursor:
+                res = await engine.asearch(queries[i], k)
+                indices[i] = res.indices[0]
+
+        await asyncio.gather(*[client() for _ in range(n_clients)])
+
+    engine.start()
+    t0 = time.perf_counter()
+    asyncio.run_coroutine_threadsafe(drive(), engine.loop).result()
+    return time.perf_counter() - t0, indices
+
+
+def _sequential(index: api.VectorIndex, queries: np.ndarray, k: int
+                ) -> tuple[float, np.ndarray]:
+    """The q=1 loop the engine replaces. Warmed before timing."""
+    index.search(queries[:1], k)
+    indices = np.zeros((queries.shape[0], k), np.int64)
+    t0 = time.perf_counter()
+    for i in range(queries.shape[0]):
+        indices[i] = index.search(queries[i:i + 1], k).indices[0]
+    return time.perf_counter() - t0, indices
+
+
+def run(n: int = 20000, dim: int = 256, m_reduce: int = 64,
+        n_cells: int = 256, hnsw_m: int = 32, n_requests: int = 512,
+        n_clients: int = 64, k: int = 10, max_batch: int = 32,
+        max_wait_ms: float = 4.0, rae_steps: int = 600,
+        rerank_factor: int = 4, seed: int = 0, repeats: int = 3,
+        quick: bool = False) -> list[dict]:
+    if quick:
+        n, rae_steps, n_cells = 4096, 300, 64
+        n_requests = 256
+        # 2-core CPU sweet spot: past q=16 the scan tiers go memory-bound
+        # and batching stops amortizing, so cap the batch and offer
+        # 2 x max_batch clients (pipelined batching double-buffers
+        # closed-loop clients: one cohort in flight, one queued)
+        max_batch = min(max_batch, 16)
+        n_clients = 2 * max_batch
+    corpus = synthetic.embedding_corpus(n, dim, n_clusters=16,
+                                        intrinsic=dim // 4, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    queries = corpus[rng.integers(0, n, n_requests)] + \
+        0.01 * rng.standard_normal((n_requests, dim)).astype(np.float32)
+
+    exact = api.FlatIndex().build(corpus)
+    gt = exact.search(queries, k).indices
+
+    print(f"fitting RAE {dim}->{m_reduce} ({rae_steps} steps) once, "
+          f"shared across the reduced-space stacks")
+    reducer = api.make_reducer("rae", m_reduce, steps=rae_steps, seed=seed)
+    reducer.fit(corpus)
+
+    specs = ["Flat",
+             f"RAE{m_reduce},IVF{n_cells},Rerank{rerank_factor}",
+             f"RAE{m_reduce},HNSW{hnsw_m},Rerank{rerank_factor}"]
+    rows = []
+    for spec in specs:
+        if spec == "Flat":
+            index = api.FlatIndex()
+        else:
+            base = api.index_factory(spec.split(",")[1])
+            index = api.TwoStageIndex(reducer, base,
+                                      rerank_factor=rerank_factor)
+        t0 = time.perf_counter()
+        index.build(corpus)
+        build_s = time.perf_counter() - t0
+
+        # both paths are deterministic pass-to-pass, so best-of-`repeats`
+        # measures the serving path, not OS scheduling noise (the bench
+        # gate's 20% QPS tolerance needs stable numbers to be meaningful)
+        seq_s, seq_idx = min((_sequential(index, queries, k)
+                              for _ in range(repeats)),
+                             key=lambda r: r[0])
+        seq_qps = n_requests / seq_s
+        seq_recall = recall_at_k(seq_idx, gt)
+
+        engine = SearchEngine(index, max_batch=max_batch,
+                              max_wait_ms=max_wait_ms,
+                              cache_size=0)  # distinct queries: measure
+                                             # scheduling, not caching
+        with engine:
+            engine.warmup(dim=dim, ks=(k,))
+            eng_s, eng_idx = min((_client_pool(engine, queries, k, n_clients)
+                                  for _ in range(repeats)),
+                                 key=lambda r: r[0])
+            stats = engine.stats()
+        eng_qps = n_requests / eng_s
+        eng_recall = recall_at_k(eng_idx, gt)
+
+        row = {"spec": spec, "k": k, "recall_at_k": round(eng_recall, 4),
+               "seq_recall_at_k": round(seq_recall, 4),
+               "seq_qps": round(seq_qps, 1),
+               "engine_qps": round(eng_qps, 1),
+               "speedup": round(eng_qps / seq_qps, 2),
+               "batch_size_mean": stats["batch_size_mean"],
+               "latency_ms_p50": stats["latency_ms"]["p50"],
+               "latency_ms_p99": stats["latency_ms"]["p99"],
+               "build_s": round(build_s, 2)}
+        rows.append(row)
+        print(f"{spec:28s} recall@{k}={eng_recall:.4f} "
+              f"seq={seq_qps:8.1f} qps  engine={eng_qps:8.1f} qps "
+              f"({row['speedup']:.2f}x, mean batch "
+              f"{row['batch_size_mean']:.1f}, "
+              f"p50 {row['latency_ms_p50']:.1f} ms)")
+        if eng_recall != seq_recall:
+            print(f"  WARNING: engine recall {eng_recall:.4f} != "
+                  f"sequential {seq_recall:.4f} — parity broken?")
+    best = max(r["speedup"] for r in rows)
+    print(f"best speedup: {best:.2f}x (bar: >= 3x)")
+    write_bench("serve", rows,
+                config={"n": n, "dim": dim, "m_reduce": m_reduce,
+                        "n_cells": n_cells, "hnsw_m": hnsw_m,
+                        "n_requests": n_requests, "n_clients": n_clients,
+                        "k": k, "max_batch": max_batch,
+                        "max_wait_ms": max_wait_ms, "rae_steps": rae_steps,
+                        "rerank_factor": rerank_factor, "seed": seed,
+                        "repeats": repeats, "quick": quick})
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--m-reduce", type=int, default=64)
+    ap.add_argument("--n-cells", type=int, default=256)
+    ap.add_argument("--hnsw-m", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=512)
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--max-wait-ms", type=float, default=4.0)
+    ap.add_argument("--rae-steps", type=int, default=600)
+    ap.add_argument("--rerank-factor", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed passes per path; best-of wins (noise guard)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU-budget run: n=4096, 300 RAE steps")
+    a = ap.parse_args(argv)
+    run(n=a.n, dim=a.dim, m_reduce=a.m_reduce, n_cells=a.n_cells,
+        hnsw_m=a.hnsw_m, n_requests=a.requests, n_clients=a.clients,
+        k=a.k, max_batch=a.max_batch, max_wait_ms=a.max_wait_ms,
+        rae_steps=a.rae_steps, rerank_factor=a.rerank_factor, seed=a.seed,
+        repeats=a.repeats, quick=a.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

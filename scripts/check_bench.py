@@ -1,0 +1,195 @@
+#!/usr/bin/env python
+"""Bench regression gate: fresh ``BENCH_*.json`` vs committed baselines.
+
+Usage::
+
+    python scripts/check_bench.py --baseline <dir> --candidate results \\
+        [--benches serve,graph] [--recall-tol 0.01] [--qps-tol 0.20]
+
+For every ``BENCH_<name>.json`` present in BOTH directories (restricted to
+``--benches`` when given, which are then REQUIRED on both sides), rows are
+matched by their identity fields (``spec`` + ``space`` when present, else
+``name``, else position) and gated per metric:
+
+* recall-like metrics (any key starting with ``recall`` or
+  ``seq_recall``): candidate may not drop more than ``--recall-tol``
+  (absolute, default 0.01) below baseline — the paper's k-NN preservation
+  guarantee is the product; it never silently erodes.
+* throughput metrics (``qps``, ``seq_qps``, ``engine_qps``): candidate
+  may not drop more than ``--qps-tol`` (relative, default 20%) below
+  baseline — wide enough for shared-runner noise, tight enough to catch
+  a real regression.
+
+Extra candidate rows/metrics pass silently (growth is fine); a baseline
+row or gated metric MISSING from the candidate fails (silent coverage
+loss is a regression too).
+
+Serve-specific floor (the ISSUE 4 acceptance bar): when ``BENCH_serve`` is
+checked, the candidate's best ``speedup`` must be >= 3.0 regardless of
+what the baseline says — micro-batching that stops paying for itself is a
+failure even if it regressed "within tolerance".
+
+Exit status: 0 = all gates pass, 1 = regression (details on stdout),
+2 = usage/schema error. Wired into scripts/ci.sh behind ``CI_BENCH=1``.
+
+Baseline hygiene: the gate is one-sided (only drops fail), so commit a
+CONSERVATIVE baseline — the per-metric minimum over a few runs, not one
+hot outlier (a too-fast baseline turns normal variance into false
+alarms). The committed ``BENCH_serve.json`` notes this in its config.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Optional
+
+RECALL_PREFIXES = ("recall", "seq_recall")
+# speedup is deliberately NOT tolerance-gated: it is the ratio of two
+# keys that already are, and ratios double the noise; the serve floor
+# below still enforces its absolute bar
+QPS_KEYS = ("qps", "seq_qps", "engine_qps")
+SERVE_SPEEDUP_FLOOR = 3.0
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if "rows" not in data:
+        raise ValueError(f"{path}: no 'rows' key — not a write_bench file")
+    return data
+
+
+def _bench_files(directory: str) -> dict[str, str]:
+    out = {}
+    for fn in sorted(os.listdir(directory)):
+        if fn.startswith("BENCH_") and fn.endswith(".json"):
+            out[fn[len("BENCH_"):-len(".json")]] = os.path.join(directory, fn)
+    return out
+
+
+def _row_key(row: dict, position: int) -> str:
+    if "spec" in row:
+        return f"{row.get('space', '')}/{row['spec']}"
+    if "name" in row:
+        return str(row["name"])
+    return f"#{position}"
+
+
+def _gated_metrics(row: dict) -> dict[str, tuple[float, str]]:
+    """{metric: (value, kind)} for every metric this gate watches."""
+    out = {}
+    for key, val in row.items():
+        if not isinstance(val, (int, float)):
+            continue
+        if any(key.startswith(p) for p in RECALL_PREFIXES):
+            out[key] = (float(val), "recall")
+        elif key in QPS_KEYS:
+            out[key] = (float(val), "qps")
+    return out
+
+
+def check_bench(name: str, baseline: dict, candidate: dict,
+                recall_tol: float, qps_tol: float) -> list[str]:
+    """Returns human-readable failure strings (empty = pass)."""
+    failures = []
+    cand_rows = {_row_key(r, i): r
+                 for i, r in enumerate(candidate["rows"])}
+    for i, base_row in enumerate(baseline["rows"]):
+        key = _row_key(base_row, i)
+        cand_row = cand_rows.get(key)
+        if cand_row is None:
+            failures.append(f"{name}: row {key!r} missing from candidate")
+            continue
+        for metric, (base_val, kind) in _gated_metrics(base_row).items():
+            if metric not in cand_row:
+                failures.append(
+                    f"{name}/{key}: metric {metric!r} missing from candidate")
+                continue
+            cand_val = float(cand_row[metric])
+            if kind == "recall":
+                floor, desc = base_val - recall_tol, f"-{recall_tol} abs"
+            else:
+                floor, desc = base_val * (1 - qps_tol), f"-{qps_tol:.0%} rel"
+            if cand_val < floor:
+                failures.append(
+                    f"{name}/{key}: {metric} regressed "
+                    f"{base_val:g} -> {cand_val:g} "
+                    f"(floor {floor:g}, tolerance {desc})")
+    if name == "serve":
+        speedups = [float(r["speedup"]) for r in candidate["rows"]
+                    if "speedup" in r]
+        if not speedups or max(speedups) < SERVE_SPEEDUP_FLOOR:
+            failures.append(
+                f"serve: best micro-batching speedup "
+                f"{max(speedups) if speedups else 0:.2f}x is below the "
+                f"{SERVE_SPEEDUP_FLOOR}x acceptance floor")
+    return failures
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Gate fresh BENCH_*.json against committed baselines")
+    ap.add_argument("--baseline", required=True,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--candidate", default="results",
+                    help="directory holding the fresh BENCH_*.json")
+    ap.add_argument("--benches", default=None,
+                    help="comma-separated bench names to check (default: "
+                         "every bench present in both directories)")
+    ap.add_argument("--recall-tol", type=float, default=0.01,
+                    help="max absolute recall drop (default 0.01)")
+    ap.add_argument("--qps-tol", type=float, default=0.20,
+                    help="max relative QPS drop (default 0.20)")
+    args = ap.parse_args(argv)
+
+    try:
+        base_files = _bench_files(args.baseline)
+        cand_files = _bench_files(args.candidate)
+    except FileNotFoundError as e:
+        print(f"FATAL: {e}")
+        return 2
+
+    if args.benches:
+        names = [b.strip() for b in args.benches.split(",") if b.strip()]
+        missing = [b for b in names
+                   if b not in base_files or b not in cand_files]
+        if missing:
+            print(f"FATAL: requested benches missing a side: {missing} "
+                  f"(baseline has {sorted(base_files)}, "
+                  f"candidate has {sorted(cand_files)})")
+            return 2
+    else:
+        names = sorted(set(base_files) & set(cand_files))
+        if not names:
+            print(f"FATAL: no common BENCH_*.json between {args.baseline} "
+                  f"and {args.candidate}")
+            return 2
+
+    all_failures = []
+    for name in names:
+        try:
+            baseline = _load(base_files[name])
+            candidate = _load(cand_files[name])
+        except (ValueError, json.JSONDecodeError) as e:
+            print(f"FATAL: {e}")
+            return 2
+        failures = check_bench(name, baseline, candidate,
+                               args.recall_tol, args.qps_tol)
+        status = "FAIL" if failures else "ok"
+        print(f"[{status}] {name}: {len(baseline['rows'])} baseline rows "
+              f"vs {len(candidate['rows'])} candidate rows")
+        for f in failures:
+            print(f"  {f}")
+        all_failures.extend(failures)
+
+    if all_failures:
+        print(f"\nREGRESSION: {len(all_failures)} gate(s) failed")
+        return 1
+    print(f"\nall bench gates passed ({', '.join(names)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

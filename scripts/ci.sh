@@ -5,11 +5,16 @@
 # `slow` (the 20k-point acceptance runs). Tier-1 verify (see ROADMAP.md)
 # remains the FULL suite: run with CI_MARKERS="" or call pytest directly.
 #
-#   scripts/ci.sh                 # fast: -m "not slow" (graph/quant unit +
-#                                 #   property tests included)
+#   scripts/ci.sh                 # fast: -m "not slow" (graph/quant/serve
+#                                 #   unit + property tests included)
 #   CI_MARKERS="slow" scripts/ci.sh  # slow split only: the 20k acceptance
 #                                 #   runs (api, quantized, graph)
 #   CI_MARKERS="" scripts/ci.sh   # full suite (tier-1 equivalent)
+#   CI_BENCH=1 scripts/ci.sh      # + bench regression gate: rerun the
+#                                 #   serving bench, compare against the
+#                                 #   committed results/BENCH_*.json via
+#                                 #   scripts/check_bench.py
+#   CI_SKIP_TESTS=1 CI_BENCH=1 scripts/ci.sh   # bench gate only
 #   scripts/ci.sh -k quant        # extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -25,15 +30,33 @@ if ! collect_out=$(python -m pytest --collect-only -q 2>&1); then
     exit 1
 fi
 
-# The graph-invariant suite guards the HNSW tier's correctness contract;
-# a rename/deselection that silently drops it must fail the gate.
-if ! grep -q "test_graph" <<<"$collect_out"; then
-    echo "FATAL: tests/test_graph.py not collected" >&2
-    exit 1
+# Every suite that guards a subsystem contract must stay collected: a
+# rename/deselection that silently drops one is a coverage regression,
+# not a green build.
+REQUIRED_SUITES=(api properties kernels quantized graph serve)
+for suite in "${REQUIRED_SUITES[@]}"; do
+    if ! grep -q "test_${suite}" <<<"$collect_out"; then
+        echo "FATAL: tests/test_${suite}.py not collected" >&2
+        exit 1
+    fi
+done
+
+if [ "${CI_SKIP_TESTS:-0}" != "1" ]; then
+    MARKERS="${CI_MARKERS-not slow}"
+    if [ -n "$MARKERS" ]; then
+        python -m pytest -x -q -m "$MARKERS" "$@"
+    else
+        python -m pytest -x -q "$@"
+    fi
 fi
 
-MARKERS="${CI_MARKERS-not slow}"
-if [ -n "$MARKERS" ]; then
-    exec python -m pytest -x -q -m "$MARKERS" "$@"
+# Bench regression gate: snapshot the committed baselines, rerun the
+# serving bench (CPU-budget), and fail on recall/QPS regression.
+if [ "${CI_BENCH:-0}" = "1" ]; then
+    baseline_dir=$(mktemp -d)
+    trap 'rm -rf "$baseline_dir"' EXIT
+    cp results/BENCH_*.json "$baseline_dir"/
+    python -m benchmarks.table5_serve --quick
+    python scripts/check_bench.py --baseline "$baseline_dir" \
+        --candidate results --benches serve
 fi
-exec python -m pytest -x -q "$@"

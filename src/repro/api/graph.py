@@ -71,6 +71,20 @@ class HNSWIndex(VectorIndex):
         return float(g.vecs.shape[1] * 4
                      + 4 * (g.links0.shape[1] + upper_slots) + 4)
 
+    @property
+    def dim(self) -> int:
+        self._require_built()
+        return int(self._g.vecs.shape[1])
+
+    def _fingerprint_state(self) -> list:
+        # full traversal state: vectors, EVERY layer's adjacency, levels,
+        # entry (upper layers steer the layer-0 beam entry, so two graphs
+        # differing only above layer 0 answer differently); ef_search is a
+        # query-time knob that changes answers, so it is part of identity
+        g = self._g
+        return [f"ef={self.ef_search}:entry={g.entry}", g.vecs, g.links0,
+                g.links, g.levels]
+
     def build(self, corpus: np.ndarray) -> "HNSWIndex":
         self._g = hnsw_lib.build(corpus, M=self.m,
                                  ef_construction=self.ef_construction,

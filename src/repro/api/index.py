@@ -18,6 +18,7 @@ subdirectories. ``load_index(dir)`` dispatches on ``meta.json["kind"]``.
 from __future__ import annotations
 
 import functools
+import hashlib
 import json
 import os
 import time
@@ -128,6 +129,35 @@ class VectorIndex:
         recall/QPS. Composite indexes report their stage-1 payload."""
         raise NotImplementedError
 
+    @property
+    def dim(self) -> int:
+        """Query dimensionality this index accepts (the ORIGINAL space for
+        composite indexes — what a client hands ``search``)."""
+        raise NotImplementedError
+
+    def _fingerprint_state(self) -> list:
+        """Arrays/strings that identify the searchable content. Subclasses
+        list whatever distinguishes two builds: the stored vectors, codes,
+        or (for composites) the children's fingerprints."""
+        raise NotImplementedError
+
+    def fingerprint(self) -> str:
+        """Stable content hash of the built index. Two indexes answering
+        queries identically hash equal; rebuilding over a different corpus
+        (or swapping a stage) changes it — the serving cache keys results
+        on it so a hot swap can never serve stale answers."""
+        self._require_built()
+        h = hashlib.sha1()
+        h.update(f"{self.kind}:{self.ntotal}".encode())
+        for item in self._fingerprint_state():
+            if isinstance(item, str):
+                h.update(item.encode())
+            else:
+                a = np.asarray(item)
+                h.update(f"{a.shape}:{a.dtype}".encode())
+                h.update(a.tobytes())
+        return h.hexdigest()[:16]
+
     def build(self, corpus: np.ndarray) -> "VectorIndex":
         raise NotImplementedError
 
@@ -209,6 +239,14 @@ class FlatIndex(VectorIndex):
         self._require_built()
         return float(self._db.shape[1] * self._db.dtype.itemsize)
 
+    @property
+    def dim(self) -> int:
+        self._require_built()
+        return int(self._db.shape[1])
+
+    def _fingerprint_state(self) -> list:
+        return [self.metric, self._db]
+
     def build(self, corpus: np.ndarray) -> "FlatIndex":
         self._db = jnp.asarray(corpus, jnp.float32)
         return self
@@ -272,6 +310,17 @@ class IVFFlatIndex(VectorIndex):
         self._require_built()
         return float(self._ivf.list_vecs.shape[2] * 4 + 4)
 
+    @property
+    def dim(self) -> int:
+        self._require_built()
+        return int(self._ivf.centroids.shape[1])
+
+    def _fingerprint_state(self) -> list:
+        # list_vecs is what search actually scores against — centroids +
+        # id lists alone could collide across corpora with equal means
+        return [f"nprobe={self.nprobe}", self._ivf.centroids,
+                self._ivf.lists, self._ivf.list_vecs]
+
     def build(self, corpus: np.ndarray) -> "IVFFlatIndex":
         corpus = jnp.asarray(corpus, jnp.float32)
         n_cells = min(self.n_cells, corpus.shape[0])
@@ -281,6 +330,19 @@ class IVFFlatIndex(VectorIndex):
         self._cell_sizes = np.asarray(self._ivf.list_mask).sum(axis=1)
         self._ntotal = int(corpus.shape[0])
         return self
+
+    @functools.cached_property
+    def _probe(self):
+        """Jitted probe scan (static k/nprobe): one XLA call per search
+        instead of an eager op-by-op trace — the q=1 serving path is
+        dispatch-bound without this."""
+        def fn(q, centroids, lists, list_vecs, list_mask, k, nprobe):
+            idx = ivf_lib.IVFIndex(centroids=centroids, lists=lists,
+                                   list_vecs=list_vecs, list_mask=list_mask,
+                                   spill=0)
+            return ivf_lib.search(idx, q, k, nprobe=nprobe)
+
+        return jax.jit(fn, static_argnames=("k", "nprobe"))
 
     def search(self, queries: np.ndarray, k: int) -> SearchResult:
         """Like FAISS, a query whose probed cells hold fewer than k members
@@ -293,7 +355,9 @@ class IVFFlatIndex(VectorIndex):
         k_eff = min(k_req, nprobe * int(self._ivf.lists.shape[1]))
 
         def run():
-            v, i = ivf_lib.search(self._ivf, q, k_eff, nprobe=nprobe)
+            v, i = self._probe(q, self._ivf.centroids, self._ivf.lists,
+                               self._ivf.list_vecs, self._ivf.list_mask,
+                               k=k_eff, nprobe=nprobe)
             return _pad_result(v, i, k_req)
 
         return _timed(run, stats={
@@ -371,6 +435,16 @@ class TwoStageIndex(VectorIndex):
         host RAM (the paper's deployment split)."""
         return self.base.bytes_per_vector
 
+    @property
+    def dim(self) -> int:
+        """Queries arrive in the ORIGINAL space (the reducer encodes them)."""
+        self._require_built()
+        return int(self._db_full.shape[1])
+
+    def _fingerprint_state(self) -> list:
+        return [f"rerank={self.rerank_factor}:{self.metric}",
+                self.base.fingerprint(), self._db_full]
+
     def build(self, corpus: np.ndarray) -> "TwoStageIndex":
         corpus = np.asarray(corpus, np.float32)
         # absent `fitted` means unknown -> fit (skipping would hand an
@@ -384,7 +458,10 @@ class TwoStageIndex(VectorIndex):
 
     @functools.cached_property
     def _rerank(self):
-        def fn(q, cand_vecs, cand, k):
+        def fn(q, db_full, cand, k):
+            # gather INSIDE the jit: XLA fuses it with the distance compute,
+            # and the serving path pays one dispatch instead of two
+            cand_vecs = jnp.take(db_full, cand, axis=0)  # [Q, k1, n]
             q32 = q.astype(jnp.float32)
             c32 = cand_vecs.astype(jnp.float32)
             if self.metric == "cosine":
@@ -414,8 +491,7 @@ class TwoStageIndex(VectorIndex):
         stage1 = self.base.search(zq, k1)
         cand = jnp.asarray(stage1.indices)
         q = jnp.asarray(queries, jnp.float32)
-        cand_vecs = jnp.take(self._db_full, cand, axis=0)  # [Q, k1, n]
-        scores, idx = self._rerank(q, cand_vecs, cand, k=k_eff)
+        scores, idx = self._rerank(q, self._db_full, cand, k=k_eff)
         jax.block_until_ready((scores, idx))
         dt = time.perf_counter() - t0
         # total work per query: stage-1 reduced-space evals + the k1

@@ -68,6 +68,14 @@ class SQ8Index(VectorIndex):
         self._require_built()
         return float(self._codes.shape[1] + 4)
 
+    @property
+    def dim(self) -> int:
+        self._require_built()
+        return int(self._codes.shape[1])
+
+    def _fingerprint_state(self) -> list:
+        return [self._sq.vmin, self._sq.step, self._codes]
+
     def build(self, corpus: np.ndarray) -> "SQ8Index":
         corpus = jnp.asarray(corpus, jnp.float32)
         self._sq = qz.sq8_train(corpus)
@@ -140,6 +148,15 @@ class PQIndex(VectorIndex):
     @property
     def bytes_per_vector(self) -> float:
         return float(qz.bytes_per_code(self.m, self.bits))
+
+    @property
+    def dim(self) -> int:
+        self._require_built()
+        # codebooks are [m, 2^bits, d/m]
+        return int(self._pq.codebooks.shape[0] * self._pq.codebooks.shape[2])
+
+    def _fingerprint_state(self) -> list:
+        return [self._pq.codebooks, self._codes]
 
     def build(self, corpus: np.ndarray) -> "PQIndex":
         corpus = jnp.asarray(corpus, jnp.float32)
@@ -218,6 +235,15 @@ class _IVFQuantBase(VectorIndex):
         self.spill = int(coarse.spill)
         return coarse
 
+    @property
+    def dim(self) -> int:
+        self._require_built()
+        return int(self._centroids.shape[1])
+
+    def _fingerprint_state(self) -> list:
+        # coarse layer; subclasses append their code payloads
+        return [f"nprobe={self.nprobe}", self._centroids, self._lists]
+
     def _probe_budget(self, k: int) -> tuple[int, int, int]:
         """(k requested, k servable by the probe scan, nprobe)."""
         nprobe = min(self.nprobe, int(self._centroids.shape[0]))
@@ -273,6 +299,10 @@ class IVFSQ8Index(_IVFQuantBase):
         """uint8 per dim + f32 recon norm + int32 row id."""
         self._require_built()
         return float(self._codes.shape[2] + 4 + 4)
+
+    def _fingerprint_state(self) -> list:
+        return super()._fingerprint_state() + [self._sq.vmin, self._sq.step,
+                                               self._codes]
 
     def build(self, corpus: np.ndarray) -> "IVFSQ8Index":
         corpus = jnp.asarray(corpus, jnp.float32)
@@ -344,6 +374,10 @@ class IVFPQIndex(_IVFQuantBase):
     def bytes_per_vector(self) -> float:
         """packed code + int32 row id."""
         return float(qz.bytes_per_code(self.m, self.bits) + 4)
+
+    def _fingerprint_state(self) -> list:
+        return super()._fingerprint_state() + [self._pq.codebooks,
+                                               self._codes]
 
     def build(self, corpus: np.ndarray) -> "IVFPQIndex":
         corpus = jnp.asarray(corpus, jnp.float32)

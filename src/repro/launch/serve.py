@@ -20,12 +20,23 @@ whose distance each query evaluated (scan = N; HNSW = beam-visited count)
 Built indexes persist (``--save-index DIR``) and reload without retraining
 (``--load-index DIR``) — cold starts no longer pay the RAE training bill.
 
+The built index is wrapped in :class:`repro.serve.SearchEngine` (warmed up
+at every padded batch size). Two modes:
+
+* default: a closed-loop benchmark through the engine's batch path,
+  reporting recall vs the exact scan + the engine stats surface;
+* ``--serve``: stay up as an HTTP service (``POST /search``,
+  ``GET /stats``, ``GET /healthz``) where concurrent single-query clients
+  are coalesced by the micro-batching scheduler
+  (``--max-batch`` / ``--max-wait-ms`` / ``--cache-size``).
+
 Smoke-scale by default so it runs anywhere:
   PYTHONPATH=src python -m repro.launch.serve --n 20000 --dim 256 --m 64
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from typing import Optional
 
@@ -33,6 +44,7 @@ import numpy as np
 
 from .. import api
 from ..data import synthetic
+from ..serve import SearchEngine, make_server
 
 
 def build_or_load_index(args) -> tuple[api.VectorIndex, np.ndarray]:
@@ -60,6 +72,10 @@ def build_or_load_index(args) -> tuple[api.VectorIndex, np.ndarray]:
                 f"across different corpora. Re-serve with --n "
                 f"{index.ntotal} (and the --dim/--seed the index was "
                 f"built with).")
+        if index.dim != args.dim:
+            raise SystemExit(
+                f"loaded index takes {index.dim}-d queries but "
+                f"--dim={args.dim}: re-serve with --dim {index.dim}.")
         return index, corpus
 
     spec = args.index_spec or f"RAE{args.m},Flat,Rerank{args.rerank_factor}"
@@ -114,6 +130,20 @@ def main(argv: Optional[list[str]] = None) -> int:
                     help="persist the built index (reducer + base + corpus)")
     ap.add_argument("--load-index", default=None, metavar="DIR",
                     help="serve a previously saved index (skips training)")
+    ap.add_argument("--serve", action="store_true",
+                    help="stay up as an HTTP service instead of running "
+                         "the one-shot benchmark loop")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="HTTP port for --serve (0 picks a free one)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--max-batch", type=int, default=32,
+                    help="scheduler: coalesce at most this many concurrent "
+                         "single-query requests per index.search call")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="scheduler: max wait after the first queued "
+                         "request before flushing a partial batch")
+    ap.add_argument("--cache-size", type=int, default=1024,
+                    help="LRU result-cache entries (0 disables)")
     args = ap.parse_args(argv)
 
     print(f"[1/5] corpus: {args.n} x {args.dim}")
@@ -123,33 +153,57 @@ def main(argv: Optional[list[str]] = None) -> int:
         index.save(args.save_index)
         print(f"      saved -> {args.save_index}")
 
+    engine = SearchEngine(index, max_batch=args.max_batch,
+                          max_wait_ms=args.max_wait_ms,
+                          cache_size=args.cache_size)
+
+    if args.serve:
+        print(f"[3/5] engine warm-up: buckets {engine.buckets}, k={args.k}")
+        engine.start().warmup(ks=(args.k,))  # dim from the index itself
+        server = make_server(engine, port=args.port, host=args.host)
+        host, port = server.server_address[:2]
+        print(f"[4/5] serving http://{host}:{port} "
+              f"(POST /search, GET /stats, GET /healthz) — ^C to stop")
+        try:
+            server.serve_forever()
+        except KeyboardInterrupt:
+            pass
+        finally:
+            server.shutdown()
+            print("[5/5] final stats:")
+            print(json.dumps(engine.stats(), indent=1))
+            engine.stop()
+        return 0
+
     print("[3/5] exact reference index (recall baseline)")
     exact = api.FlatIndex().build(corpus)
 
-    print(f"[4/5] serving {args.batches} batches x {args.queries} queries")
+    print(f"[4/5] serving {args.batches} batches x {args.queries} queries "
+          "through the engine")
     rng = np.random.default_rng(args.seed + 1)
-    lat, recalls, evals = [], [], []
+    lat, recalls = [], []
     for _ in range(args.batches):
         q = corpus[rng.integers(0, args.n, args.queries)] + \
             0.01 * rng.standard_normal(
                 (args.queries, args.dim)).astype(np.float32)
-        res = index.search(q, args.k)
+        res = engine.search(q, args.k)
         lat.append(res.latency_s)
-        if res.distance_evals is not None:
-            evals.append(res.distance_evals)
         ref = exact.search(q, args.k)
         inter = (ref.indices[:, :, None] ==
                  res.indices[:, None, :]).any(-1).mean()
         recalls.append(float(inter))
     lat_ms = np.array(lat[1:] or lat) * 1e3  # drop compile batch
+    stats = engine.stats()
     evals_str = ""
-    if evals:
-        ev = float(np.mean(evals))
+    if "distance_evals" in stats:
+        ev = stats["distance_evals"]
         evals_str = (f" | distance evals/query {ev:.0f} "
                      f"({ev / args.n:.1%} of corpus)")
     print(f"[5/5] recall@{args.k}: {np.mean(recalls):.4f} | "
           f"latency p50 {np.percentile(lat_ms, 50):.2f} ms "
           f"p99 {np.percentile(lat_ms, 99):.2f} ms" + evals_str)
+    print(f"      engine: {stats['requests']} queries in "
+          f"{stats['batches']} batches, qps={stats['qps']:.1f}")
     return 0
 
 

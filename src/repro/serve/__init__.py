@@ -1,0 +1,18 @@
+"""Serving layer: micro-batched engine + HTTP front-end over ``repro.api``.
+
+``SearchEngine`` turns any factory-built ``VectorIndex`` into a concurrent
+service: an asyncio scheduler coalesces single-query requests into padded
+batches for the fused kernels, an LRU cache (keyed on query bytes, k, and
+the index content fingerprint) absorbs repeats, warm-up pre-compiles every
+padded shape, and ``stats()`` reports QPS / latency percentiles /
+batch-size histogram / cache hit rate. ``repro.serve.http`` exposes it as
+``/search`` + ``/stats`` + ``/healthz`` on the stdlib HTTP server;
+``python -m repro.launch.serve --serve`` is the launcher.
+"""
+from .cache import LRUCache
+from .engine import SearchEngine
+from .http import make_server, start_http_server
+from .metrics import EngineMetrics
+
+__all__ = ["EngineMetrics", "LRUCache", "SearchEngine", "make_server",
+           "start_http_server"]

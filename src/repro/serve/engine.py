@@ -1,0 +1,379 @@
+"""Micro-batched serving engine over any ``repro.api`` VectorIndex.
+
+The fused scan kernels (``l2_topk``, ``pq_adc``) are built for MXU-friendly
+query batches; a user request is one query. ``SearchEngine`` closes the
+gap: concurrent single-query requests land on an asyncio queue, a
+scheduler coalesces up to ``max_batch`` of them (waiting at most
+``max_wait_ms`` after the first), pads the stack to a power-of-two bucket
+so the jit cache holds a handful of shapes, runs ONE ``index.search``, and
+scatters the per-row results back to their callers. Because every built-in
+index scores rows independently, a coalesced answer is exactly the answer
+the lone query would have gotten (parity-tested in tests/test_serve.py).
+
+On top of the scheduler:
+
+* an :class:`~repro.serve.cache.LRUCache` keyed on ``(query bytes, k,
+  index fingerprint)`` — repeat queries skip the index entirely, and a
+  hot ``set_index`` swap can never serve stale answers because the
+  fingerprint (content hash, see ``VectorIndex.fingerprint``) changes;
+* ``warmup()`` — pre-compiles the hot path at every padded bucket size so
+  the first real request pays search cost, not XLA compile cost;
+* ``stats()`` — QPS (lifetime + windowed), p50/p99 latency, batch-size
+  histogram, cache hit rate, ``distance_evals`` passthrough.
+
+Threading model: the asyncio loop runs on a dedicated daemon thread;
+``search_one`` is safe to call from any thread (HTTP handler threads,
+closed-loop bench clients) and blocks until its future resolves. The
+actual ``index.search`` runs on a single-worker executor so batches
+pipeline — batch N+1 coalesces while batch N is on the accelerator — and
+the index never sees concurrent calls.
+"""
+from __future__ import annotations
+
+import asyncio
+import contextlib
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+from ..api.index import SearchResult, VectorIndex
+from .cache import LRUCache
+from .metrics import EngineMetrics
+
+_STOP = object()
+
+
+@dataclass
+class _Request:
+    q: np.ndarray                 # [d] f32
+    k: int
+    future: "asyncio.Future[SearchResult]"
+    t_enq: float = field(default_factory=time.perf_counter)
+
+
+def _buckets(max_batch: int) -> list[int]:
+    """Padded batch sizes the engine compiles: powers of two up to (and
+    always including) ``max_batch``."""
+    out, b = [], 1
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return out
+
+
+class SearchEngine:
+    """Wrap a built ``VectorIndex`` for concurrent single-query serving.
+
+    >>> engine = SearchEngine(index, max_batch=32, max_wait_ms=2.0)
+    >>> engine.start().warmup()
+    >>> res = engine.search_one(query, k=10)     # from any thread
+    >>> engine.stats()["batch_size_mean"]
+    >>> engine.stop()
+
+    Also usable as a context manager (``with SearchEngine(index) as e:``).
+    """
+
+    def __init__(self, index: VectorIndex, max_batch: int = 32,
+                 max_wait_ms: float = 2.0, cache_size: int = 1024):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0, got {max_wait_ms}")
+        index._require_built()
+        self.index = index
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self.buckets = _buckets(max_batch)
+        self.cache = LRUCache(cache_size)
+        self.metrics = EngineMetrics()
+        self._fingerprint = index.fingerprint()
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+        self._queue: Optional[asyncio.Queue] = None
+        self._batcher_task: Optional[asyncio.Task] = None
+        self._pending: set[asyncio.Task] = set()
+        self._inflight: Optional[asyncio.Task] = None
+        self._accepting = False
+        self._executor = ThreadPoolExecutor(max_workers=1,
+                                            thread_name_prefix="engine-search")
+        self._start_lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    @property
+    def loop(self) -> Optional[asyncio.AbstractEventLoop]:
+        """The engine's event loop (None before start). Async clients can
+        drive :meth:`asearch` on it directly via
+        ``asyncio.run_coroutine_threadsafe`` — cheaper per request than one
+        OS thread per in-flight call."""
+        return self._loop
+
+    def start(self) -> "SearchEngine":
+        with self._start_lock:
+            if self.running:
+                return self
+            ready = threading.Event()
+
+            def _main():
+                loop = asyncio.new_event_loop()
+                asyncio.set_event_loop(loop)
+                self._loop = loop
+                self._queue = asyncio.Queue()
+                self._accepting = True
+                self._batcher_task = loop.create_task(self._batcher())
+                loop.call_soon(ready.set)
+                try:
+                    loop.run_forever()
+                finally:
+                    loop.close()
+
+            self._thread = threading.Thread(target=_main, daemon=True,
+                                            name="search-engine")
+            self._thread.start()
+            ready.wait()
+        return self
+
+    def stop(self) -> None:
+        with self._start_lock:
+            if not self.running:
+                return
+            asyncio.run_coroutine_threadsafe(self._shutdown(),
+                                             self._loop).result()
+            self._loop.call_soon_threadsafe(self._loop.stop)
+            self._thread.join(timeout=10)
+            self._thread = None
+            self._loop = None
+
+    async def _shutdown(self):
+        # refuse new submissions FIRST (same thread as asearch, which has
+        # no await between its accepting-check and its enqueue, so no
+        # request can slip in after the drain below and hang its caller)
+        self._accepting = False
+        await self._queue.put(_STOP)
+        await self._batcher_task
+        if self._pending:
+            await asyncio.gather(*self._pending, return_exceptions=True)
+        # requests that raced the sentinel would otherwise hang their
+        # callers forever: fail them loudly instead
+        while not self._queue.empty():
+            item = self._queue.get_nowait()
+            if item is not _STOP and not item.future.done():
+                item.future.set_exception(
+                    RuntimeError("engine stopped before request was served"))
+
+    def __enter__(self) -> "SearchEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------------
+    # serving paths
+    # ------------------------------------------------------------------
+    def _cache_key(self, q: np.ndarray, k: int) -> tuple:
+        return (self._fingerprint, k, q.shape, q.tobytes())
+
+    async def asearch(self, query: np.ndarray, k: int = 10) -> SearchResult:
+        """Single-query path: cache lookup, then the micro-batch queue."""
+        q = np.ascontiguousarray(query, np.float32)
+        if q.ndim == 2 and q.shape[0] == 1:
+            q = q[0]
+        if q.ndim != 1:
+            raise ValueError("asearch/search_one take ONE query vector "
+                             f"([d] or [1, d]); got shape {q.shape}. "
+                             "Use engine.search for explicit batches.")
+        if q.shape[0] != self.index.dim:
+            # reject BEFORE the queue: a wrong-dim request inside a
+            # coalesced batch would fail every co-batched request
+            raise ValueError(f"query has dim {q.shape[0]} but the index "
+                             f"takes {self.index.dim}-d queries")
+        if self.cache.maxsize:  # disabled cache: skip the key hash entirely
+            t0 = time.perf_counter()
+            hit = self.cache.get(self._cache_key(q, k))
+            if hit is not None:
+                dt = time.perf_counter() - t0
+                self.metrics.record_cached(dt)
+                # arrays are shared (frozen); latency + stats are this
+                # serve's own so a caller mutating them can't leak back
+                return replace(hit, latency_s=dt, stats=dict(hit.stats))
+        if not self._accepting:
+            raise RuntimeError("engine is stopping; request rejected")
+        fut = asyncio.get_running_loop().create_future()
+        await self._queue.put(_Request(q=q, k=int(k), future=fut))
+        return await fut
+
+    def search_one(self, query: np.ndarray, k: int = 10) -> SearchResult:
+        """Thread-safe blocking wrapper around :meth:`asearch` (auto-starts
+        the engine). This is the path HTTP handlers and threaded clients
+        use — N threads calling it concurrently coalesce into shared
+        batches."""
+        if not self.running:  # fast path: skip the start lock per request
+            self.start()
+        loop = self._loop  # local capture: a concurrent stop() nulls it
+        if loop is None:
+            raise RuntimeError("engine stopped while request was submitted")
+        return asyncio.run_coroutine_threadsafe(
+            self.asearch(query, k), loop).result()
+
+    def search(self, queries: np.ndarray, k: int = 10) -> SearchResult:
+        """Explicit-batch passthrough: the caller already batched, so skip
+        the queue (and the single-query cache) but keep the metrics."""
+        queries = np.asarray(queries, np.float32)
+        res = self.index.search(queries, k)
+        n = queries.shape[0]
+        self.metrics.record_batch(size=n, bucket=n,
+                                  latencies_s=[res.latency_s] * n,
+                                  distance_evals=res.distance_evals)
+        return res
+
+    def set_index(self, index: VectorIndex) -> None:
+        """Hot-swap the served index. Runs on the search executor so it
+        can never interleave with an in-flight batch; the new fingerprint
+        invalidates every cached result implicitly."""
+        index._require_built()
+
+        def _swap():
+            self.index = index
+            self._fingerprint = index.fingerprint()
+
+        if self.running:
+            self._executor.submit(_swap).result()
+        else:
+            _swap()
+
+    def warmup(self, dim: Optional[int] = None,
+               ks: Sequence[int] = (10,)) -> "SearchEngine":
+        """Compile the hot path at every padded bucket size (x every k the
+        deployment serves) so no real request pays XLA compile latency.
+        Warm-up searches bypass the metrics — stats reflect traffic."""
+        dim = dim if dim is not None else self.index.dim
+        for k in ks:
+            for b in self.buckets:
+                self.index.search(np.zeros((b, dim), np.float32), k)
+        return self
+
+    # ------------------------------------------------------------------
+    # scheduler
+    # ------------------------------------------------------------------
+    async def _batcher(self):
+        loop = asyncio.get_running_loop()
+        while True:
+            head = await self._queue.get()
+            if head is _STOP:
+                return
+            batch = [head]
+            deadline = loop.time() + self.max_wait_ms / 1e3
+            stop = False
+            while len(batch) < self.max_batch:
+                timeout = deadline - loop.time()
+                if timeout <= 0:
+                    if self._inflight is None or self._inflight.done():
+                        break
+                    # past the deadline but the search executor is still
+                    # chewing the previous batch: flushing now would only
+                    # queue behind it, so keep coalescing (batches FILL
+                    # under load, at zero added latency) — sleeping until
+                    # a request arrives OR the executor frees, no polling
+                    get_task = loop.create_task(self._queue.get())
+                    await asyncio.wait({get_task, self._inflight},
+                                       return_when=asyncio.FIRST_COMPLETED)
+                    if not get_task.done():
+                        get_task.cancel()
+                        with contextlib.suppress(asyncio.CancelledError):
+                            await get_task
+                        continue  # executor freed: loop breaks above
+                    item = get_task.result()
+                else:
+                    try:
+                        item = await asyncio.wait_for(self._queue.get(),
+                                                      timeout)
+                    except asyncio.TimeoutError:
+                        continue  # re-check deadline + executor state
+                if item is _STOP:
+                    stop = True
+                    break
+                batch.append(item)
+            # same-k requests share one padded search; mixed k (rare in
+            # practice) split into per-k flushes, still inside this cycle
+            groups: dict[int, list[_Request]] = {}
+            for req in batch:
+                groups.setdefault(req.k, []).append(req)
+            for k, reqs in groups.items():
+                task = loop.create_task(self._flush(k, reqs))
+                self._pending.add(task)
+                task.add_done_callback(self._pending.discard)
+                self._inflight = task  # last task: executor is FIFO
+            if stop:
+                return
+
+    async def _flush(self, k: int, reqs: list[_Request]):
+        loop = asyncio.get_running_loop()
+        try:
+            results = await loop.run_in_executor(
+                self._executor, self._run_batch, k, reqs)
+        except Exception as e:  # surface to every caller, keep serving
+            for req in reqs:
+                if not req.future.done():
+                    req.future.set_exception(e)
+            return
+        for req, res in zip(reqs, results):
+            if not req.future.done():
+                req.future.set_result(res)
+
+    def _run_batch(self, k: int, reqs: list[_Request]) -> list[SearchResult]:
+        """Executor-side: pad to the bucket, search once, slice per caller."""
+        size = len(reqs)
+        bucket = next(b for b in self.buckets if b >= size)
+        qs = np.stack([r.q for r in reqs])
+        if bucket > size:
+            # pad with a REAL query row (not zeros): identical numerics to
+            # the unpadded rows, and never a degenerate all-zero distance
+            qs = np.concatenate(
+                [qs, np.repeat(qs[:1], bucket - size, axis=0)])
+        res = self.index.search(qs, k)
+        done = time.perf_counter()
+        out = []
+        for i, req in enumerate(reqs):
+            single = SearchResult(scores=res.scores[i:i + 1].copy(),
+                                  indices=res.indices[i:i + 1].copy(),
+                                  latency_s=res.latency_s,
+                                  stats=dict(res.stats))
+            if self.cache.maxsize:
+                # the cached object IS the returned object: freeze its
+                # arrays so a caller mutating its result can't poison
+                # every future hit on this key
+                single.scores.setflags(write=False)
+                single.indices.setflags(write=False)
+                self.cache.put(self._cache_key(req.q, k), single)
+            out.append(single)
+        self.metrics.record_batch(
+            size=size, bucket=bucket,
+            latencies_s=[done - r.t_enq for r in reqs],
+            distance_evals=res.distance_evals)
+        return out
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+    def stats(self) -> dict[str, Any]:
+        out = self.metrics.snapshot()
+        out["cache"] = self.cache.stats()
+        out["index"] = {"kind": self.index.kind,
+                        "ntotal": self.index.ntotal,
+                        "fingerprint": self._fingerprint,
+                        "bytes_per_vector": self.index.bytes_per_vector}
+        out["scheduler"] = {"max_batch": self.max_batch,
+                            "max_wait_ms": self.max_wait_ms,
+                            "buckets": self.buckets,
+                            "running": self.running}
+        return out
