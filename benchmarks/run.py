@@ -8,9 +8,12 @@ benchmarks.run`` finishes in minutes and covers every artifact.
 
 Machine-readable output: every run also writes ``results/BENCH_run.json``
 (and each table CLI writes its own ``results/BENCH_<name>.json`` via
-:func:`write_bench`) with a stable schema — ``{bench, created_unix,
-config, rows}`` — so the perf trajectory (recall, QPS, bytes/vector,
-wall-clock) is diffable across PRs.
+:func:`write_bench`) with a stable schema — ``{bench, schema_version,
+created_unix, config, rows}`` — so the perf trajectory (recall, QPS,
+bytes/vector, wall-clock) is diffable across PRs. Every ``write_bench``
+also refreshes ``results/BENCH_summary.json``, the cross-bench aggregate
+(:func:`write_summary`) that merges all per-bench files under one schema
+version, so one file answers "what did every bench last measure".
 """
 from __future__ import annotations
 
@@ -20,6 +23,10 @@ import time
 
 import numpy as np
 
+#: Bump when the shape of BENCH_*.json / BENCH_summary.json changes;
+#: scripts/check_bench.py and any cross-PR trajectory tooling key on it.
+BENCH_SCHEMA_VERSION = 1
+
 ROWS: list[dict] = []
 
 
@@ -28,13 +35,50 @@ def write_bench(name: str, rows: list[dict], config: dict | None = None,
     """Write ``results/BENCH_<name>.json``: the one machine-readable schema
     every benchmark emits. ``rows`` are flat dicts (recall/qps/bytes
     keys where applicable); ``config`` records the knobs that produced
-    them."""
+    them. Also re-aggregates ``BENCH_summary.json`` so the summary can
+    never go stale relative to the file that just changed."""
     os.makedirs(results_dir, exist_ok=True)
     path = os.path.join(results_dir, f"BENCH_{name}.json")
     with open(path, "w") as f:
-        json.dump({"bench": name, "created_unix": time.time(),
+        json.dump({"bench": name, "schema_version": BENCH_SCHEMA_VERSION,
+                   "created_unix": time.time(),
                    "config": config or {}, "rows": rows}, f, indent=1)
     print(f"# wrote {path} ({len(rows)} rows)")
+    write_summary(results_dir)
+    return path
+
+
+def write_summary(results_dir: str = "results") -> str:
+    """Merge every ``results/BENCH_*.json`` into ``BENCH_summary.json``:
+    ``{bench: {schema_version, created_unix, config, rows}}`` keyed by
+    bench name, discovered by glob (no hardcoded bench list — a new table
+    CLI shows up here for free). Files without a ``rows`` key (foreign or
+    pre-schema artifacts) are skipped rather than fatal."""
+    benches: dict[str, dict] = {}
+    for fn in sorted(os.listdir(results_dir)):
+        if (not fn.startswith("BENCH_") or not fn.endswith(".json")
+                or fn == "BENCH_summary.json"):
+            continue
+        try:
+            with open(os.path.join(results_dir, fn)) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        if "rows" not in data:
+            continue
+        name = data.get("bench", fn[len("BENCH_"):-len(".json")])
+        benches[name] = {
+            "schema_version": data.get("schema_version", 0),
+            "created_unix": data.get("created_unix"),
+            "config": data.get("config", {}),
+            "rows": data["rows"],
+        }
+    path = os.path.join(results_dir, "BENCH_summary.json")
+    with open(path, "w") as f:
+        json.dump({"bench": "summary",
+                   "schema_version": BENCH_SCHEMA_VERSION,
+                   "created_unix": time.time(),
+                   "benches": benches}, f, indent=1)
     return path
 
 

@@ -11,13 +11,21 @@ single-query requests:
   whose requests the scheduler coalesces into padded batches of up to
   ``max_batch``.
 
-Recall is reported for BOTH paths against the exact scan; they must be
-equal (row-independent kernels — parity-tested in tests/test_serve.py),
-so ``speedup = engine_qps / seq_qps`` is a pure scheduling win. The
-acceptance bar (ISSUE 4 / scripts/check_bench.py): best speedup >= 3x.
-Jitted scan tiers clear it easily; the HNSW stack's stage-1 beam is
-host-driven Python, so batching only amortizes its rerank — reported
-honestly, not excluded.
+Recall is reported for BOTH paths against the exact scan; answers are
+row-independent (parity-tested in tests/test_serve.py), so ``speedup =
+engine_qps / seq_qps`` measures scheduling plus whatever the index's
+batched path adds. Gates (scripts/check_bench.py): best speedup >= 3x,
+AND the HNSW-stack row >= 2.5x on its own — since the batched
+array-native traversal (ISSUE 5) the graph tier earns its speedup
+per-tier instead of hiding behind the scan tiers' best-of. ``speedup``
+is reported PER ROW (each row is one tier) so the per-tier gate always
+has a stable ``spec``-keyed value to read.
+
+The engine config is also per-tier: scan tiers saturate this box's
+2 cores around q=16 (past that the fused scan goes memory-bound), while
+the batched graph traversal amortizes a fixed per-hop cost across the
+whole batch and keeps gaining — so the HNSW stack serves with
+``2 * max_batch`` (and twice the clients), recorded per row.
 
 Sweeps {Flat, RAE<m>,IVF<c>,Rerank4, RAE<m>,HNSW<M>,Rerank4} and writes
 ``results/BENCH_serve.json`` (schema: ``benchmarks.run.write_bench``).
@@ -89,6 +97,9 @@ def run(n: int = 20000, dim: int = 256, m_reduce: int = 64,
     if quick:
         n, rae_steps, n_cells = 4096, 300, 64
         n_requests = 256
+        # shared/2-core boxes swing +-30% minute to minute; more best-of
+        # passes keep the committed baseline out of the noise floor
+        repeats = max(repeats, 5)
         # 2-core CPU sweet spot: past q=16 the scan tiers go memory-bound
         # and batching stops amortizing, so cap the batch and offer
         # 2 x max_batch clients (pipelined batching double-buffers
@@ -133,13 +144,17 @@ def run(n: int = 20000, dim: int = 256, m_reduce: int = 64,
         seq_qps = n_requests / seq_s
         seq_recall = recall_at_k(seq_idx, gt)
 
-        engine = SearchEngine(index, max_batch=max_batch,
+        # per-tier engine shape: the batched graph traversal keeps
+        # amortizing past the scan tiers' sweet spot (module docstring)
+        mb = 2 * max_batch if "HNSW" in spec else max_batch
+        nc = 2 * n_clients if "HNSW" in spec else n_clients
+        engine = SearchEngine(index, max_batch=mb,
                               max_wait_ms=max_wait_ms,
                               cache_size=0)  # distinct queries: measure
                                              # scheduling, not caching
         with engine:
             engine.warmup(dim=dim, ks=(k,))
-            eng_s, eng_idx = min((_client_pool(engine, queries, k, n_clients)
+            eng_s, eng_idx = min((_client_pool(engine, queries, k, nc)
                                   for _ in range(repeats)),
                                  key=lambda r: r[0])
             stats = engine.stats()
@@ -151,6 +166,7 @@ def run(n: int = 20000, dim: int = 256, m_reduce: int = 64,
                "seq_qps": round(seq_qps, 1),
                "engine_qps": round(eng_qps, 1),
                "speedup": round(eng_qps / seq_qps, 2),
+               "max_batch": mb, "n_clients": nc,
                "batch_size_mean": stats["batch_size_mean"],
                "latency_ms_p50": stats["latency_ms"]["p50"],
                "latency_ms_p99": stats["latency_ms"]["p99"],
@@ -166,6 +182,10 @@ def run(n: int = 20000, dim: int = 256, m_reduce: int = 64,
                   f"sequential {seq_recall:.4f} — parity broken?")
     best = max(r["speedup"] for r in rows)
     print(f"best speedup: {best:.2f}x (bar: >= 3x)")
+    for r in rows:
+        if "HNSW" in r["spec"]:
+            print(f"HNSW-tier speedup: {r['speedup']:.2f}x "
+                  f"(per-tier bar: >= 2.5x)")
     write_bench("serve", rows,
                 config={"n": n, "dim": dim, "m_reduce": m_reduce,
                         "n_cells": n_cells, "hnsw_m": hnsw_m,

@@ -24,10 +24,20 @@ Extra candidate rows/metrics pass silently (growth is fine); a baseline
 row or gated metric MISSING from the candidate fails (silent coverage
 loss is a regression too).
 
-Serve-specific floor (the ISSUE 4 acceptance bar): when ``BENCH_serve`` is
-checked, the candidate's best ``speedup`` must be >= 3.0 regardless of
-what the baseline says — micro-batching that stops paying for itself is a
-failure even if it regressed "within tolerance".
+Bench files are discovered by glob (``BENCH_*.json``) on both sides —
+never by a hardcoded name list — so a new table CLI is gated the moment
+its baseline is committed. The ``BENCH_summary.json`` aggregate (an index
+of the per-bench files, see ``benchmarks.run.write_summary``) is skipped:
+gating it would double-count every row.
+
+Serve-specific floors: when ``BENCH_serve`` is checked, the candidate's
+best ``speedup`` must be >= 3.0 regardless of what the baseline says —
+micro-batching that stops paying for itself is a failure even if it
+regressed "within tolerance". Additionally (ISSUE 5, now that the batched
+HNSW traversal landed) every HNSW-stack row must clear ``speedup`` >= 2.5
+on its own: the graph tier is the paper's flagship reduce-then-graph
+deployment and is gated per-tier, not sheltered by the scan tiers'
+best-of.
 
 Exit status: 0 = all gates pass, 1 = regression (details on stdout),
 2 = usage/schema error. Wired into scripts/ci.sh behind ``CI_BENCH=1``.
@@ -51,6 +61,9 @@ RECALL_PREFIXES = ("recall", "seq_recall")
 # below still enforces its absolute bar
 QPS_KEYS = ("qps", "seq_qps", "engine_qps")
 SERVE_SPEEDUP_FLOOR = 3.0
+# per-tier floor for the graph stack: the batched traversal must keep
+# paying for itself on ITS row, not hide behind the scan tiers' best-of
+HNSW_SPEEDUP_FLOOR = 2.5
 
 
 def _load(path: str) -> dict:
@@ -62,9 +75,13 @@ def _load(path: str) -> dict:
 
 
 def _bench_files(directory: str) -> dict[str, str]:
+    """Glob-discover ``BENCH_<name>.json`` files. The summary aggregate is
+    excluded: it mirrors every other file's rows (gating it would report
+    each regression twice) and has no row list of its own."""
     out = {}
     for fn in sorted(os.listdir(directory)):
-        if fn.startswith("BENCH_") and fn.endswith(".json"):
+        if (fn.startswith("BENCH_") and fn.endswith(".json")
+                and fn != "BENCH_summary.json"):
             out[fn[len("BENCH_"):-len(".json")]] = os.path.join(directory, fn)
     return out
 
@@ -125,6 +142,18 @@ def check_bench(name: str, baseline: dict, candidate: dict,
                 f"serve: best micro-batching speedup "
                 f"{max(speedups) if speedups else 0:.2f}x is below the "
                 f"{SERVE_SPEEDUP_FLOOR}x acceptance floor")
+        hnsw_rows = [r for r in candidate["rows"]
+                     if "HNSW" in str(r.get("spec", "")) and "speedup" in r]
+        if not hnsw_rows:
+            failures.append(
+                "serve: no HNSW-stack row with a speedup — the per-tier "
+                f"{HNSW_SPEEDUP_FLOOR}x gate has nothing to read")
+        for r in hnsw_rows:
+            if float(r["speedup"]) < HNSW_SPEEDUP_FLOOR:
+                failures.append(
+                    f"serve/{r['spec']}: batched-traversal speedup "
+                    f"{float(r['speedup']):.2f}x is below the per-tier "
+                    f"{HNSW_SPEEDUP_FLOOR}x floor")
     return failures
 
 

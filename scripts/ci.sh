@@ -41,6 +41,18 @@ for suite in "${REQUIRED_SUITES[@]}"; do
     fi
 done
 
+# Every Pallas kernel triple must keep its parity cases collected (the
+# shared harness parametrizes test ids by kernel name) — dropping one
+# silently un-gates that kernel's pad/edge paths.
+REQUIRED_KERNELS=(l2_topk rae_encode flash_decode embedding_bag pq_adc
+                  graph_beam)
+for kern in "${REQUIRED_KERNELS[@]}"; do
+    if ! grep -q "${kern}" <<<"$collect_out"; then
+        echo "FATAL: kernel-parity cases for ${kern} not collected" >&2
+        exit 1
+    fi
+done
+
 if [ "${CI_SKIP_TESTS:-0}" != "1" ]; then
     MARKERS="${CI_MARKERS-not slow}"
     if [ -n "$MARKERS" ]; then
@@ -52,11 +64,13 @@ fi
 
 # Bench regression gate: snapshot the committed baselines, rerun the
 # serving bench (CPU-budget), and fail on recall/QPS regression.
+# check_bench discovers BENCH_*.json by glob on both sides — benches not
+# rerun here compare equal to their own snapshot, so no hardcoded list.
 if [ "${CI_BENCH:-0}" = "1" ]; then
     baseline_dir=$(mktemp -d)
     trap 'rm -rf "$baseline_dir"' EXIT
     cp results/BENCH_*.json "$baseline_dir"/
     python -m benchmarks.table5_serve --quick
     python scripts/check_bench.py --baseline "$baseline_dir" \
-        --candidate results --benches serve
+        --candidate results
 fi

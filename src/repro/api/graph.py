@@ -15,19 +15,38 @@ to the ``build / search / save / load`` protocol and the factory grammar::
 (recall of the *graph*), ``ef_search`` the query-time beam width (the
 recall/latency knob — search always uses ``max(ef_search, k)``).
 
+Two traversal engines serve queries (same semantics, same ``ef``):
+``build``/``load`` compile the packed dense adjacency
+(:meth:`HNSWGraph.pack`), and ``search`` routes batches (q > 1) through
+the array-native batched frontier loop — one fused ``graph_beam`` dispatch
+per hop for the WHOLE batch — while lone queries (q = 1) keep the
+sequential heapq beam, which wins when there is no batch to amortize
+across. ``batched=True/False`` pins either engine. Within the batched
+engine answers are bitwise-deterministic and independent of batch-mates;
+ACROSS the two engines neighbor sets agree up to beam-boundary ties
+(exactly at ``frontier=1``; >= 99% of queries at the serving default,
+asserted in tests) and scores differ only in rounding — so a query served
+lone vs coalesced can, rarely, swap its boundary neighbor. Under the
+deployment ``Rerank`` stack the exact full-space rerank absorbs exactly
+that noise; pin ``batched`` if strict cross-batch-size reproducibility
+matters more than lone-query latency. The packed
+arrays are persisted and fingerprinted, so a reloaded index serves the
+fast path without repacking and the serving cache can never alias the two
+forms.
+
 Under a rerank the graph declares ``stage1_oversample=2``: beam search
 returns exact reduced-space distances but can *miss* neighbors near the
 beam boundary, so ``TwoStageIndex`` widens k1 (which also widens the beam)
 and lets the full-space rerank absorb the ordering noise.
 
 Persistence follows the house layout: ``meta.json`` + ``arrays.npz``
-holding the corpus vectors, per-node levels, and the padded-dense
-adjacency of every layer.
+holding the corpus vectors, per-node levels, the padded-dense adjacency of
+every layer, and the packed form's precomputed norms.
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Optional
+from typing import Any, Optional, Union
 
 import numpy as np
 
@@ -43,13 +62,21 @@ class HNSWIndex(VectorIndex):
     stage1_oversample = 2
 
     def __init__(self, m: int = 32, ef_construction: int = 100,
-                 ef_search: int = 64, seed: int = 0):
+                 ef_search: int = 64, seed: int = 0,
+                 batched: Union[str, bool] = "auto", frontier: int = 8):
         if m < 2:
             raise ValueError(f"HNSW needs M >= 2, got {m}")
+        if batched not in ("auto", True, False):
+            raise ValueError(f"batched must be 'auto', True or False, "
+                             f"got {batched!r}")
+        if frontier < 1:
+            raise ValueError(f"frontier must be >= 1, got {frontier}")
         self.m = m
         self.ef_construction = ef_construction
         self.ef_search = ef_search
         self.seed = seed
+        self.batched = batched
+        self.frontier = frontier
         self._g: Optional[hnsw_lib.HNSWGraph] = None
 
     @property
@@ -79,46 +106,81 @@ class HNSWIndex(VectorIndex):
     def _fingerprint_state(self) -> list:
         # full traversal state: vectors, EVERY layer's adjacency, levels,
         # entry (upper layers steer the layer-0 beam entry, so two graphs
-        # differing only above layer 0 answer differently); ef_search is a
-        # query-time knob that changes answers, so it is part of identity
+        # differing only above layer 0 answer differently); ef_search and
+        # the engine routing are query-time knobs that change answers
+        # (batched scores round differently), so they are part of
+        # identity. This also covers the packed form without touching it:
+        # its tables share links0/links' bytes and its norms derive from
+        # vecs (all hashed here), while the batched/frontier flags make an
+        # index serving the packed fast path never alias one pinned to
+        # the ragged sequential engine — and packing later (load, save)
+        # can't shift the hash.
         g = self._g
-        return [f"ef={self.ef_search}:entry={g.entry}", g.vecs, g.links0,
-                g.links, g.levels]
+        return [f"ef={self.ef_search}:entry={g.entry}"
+                f":batched={self.batched}:frontier={self.frontier}",
+                g.vecs, g.links0, g.links, g.levels]
 
     def build(self, corpus: np.ndarray) -> "HNSWIndex":
         self._g = hnsw_lib.build(corpus, M=self.m,
                                  ef_construction=self.ef_construction,
                                  seed=self.seed)
+        if self.batched is not False:
+            self._g.pack()  # compile the dense form once, at build time
         return self
+
+    def _use_batched(self, nq: int) -> bool:
+        if self.batched == "auto":
+            # the batched frontier loop amortizes per-hop work across the
+            # batch; with nothing to amortize (q=1) the heapq beam wins
+            return nq > 1
+        return bool(self.batched)
 
     def search(self, queries: np.ndarray, k: int) -> SearchResult:
         """Beam search with ef = max(ef_search, k). Queries whose beam
         holds fewer than k nodes pad the tail with index -1 / score -inf
         (FAISS convention, same as the IVF tiers)."""
         self._require_built()
+        q = np.asarray(queries, np.float32)
         k_req = min(k, self.ntotal)
+        ef = max(self.ef_search, k_req)
         t0 = time.perf_counter()
-        scores, idx, evals = hnsw_lib.search(
-            self._g, queries, k_req, ef_search=max(self.ef_search, k_req))
+        if self._use_batched(q.shape[0]):
+            scores, idx, evals, hops = hnsw_lib.search_batched(
+                self._g, q, k_req, ef_search=ef, frontier=self.frontier)
+            stats = {"distance_evals": float(evals.mean()),
+                     "beam_hops": float(hops)}
+        else:
+            scores, idx, evals = hnsw_lib.search(self._g, q, k_req,
+                                                 ef_search=ef)
+            stats = {"distance_evals": float(evals.mean())}
         dt = time.perf_counter() - t0
         return SearchResult(scores=scores, indices=idx, latency_s=dt,
-                            stats={"distance_evals": float(evals.mean())})
+                            stats=stats)
 
     def save(self, directory: str) -> None:
         self._require_built()
         g = self._g
+        p = g.pack()  # always persist the packed form alongside the graph
         _save_dir(directory,
                   {"kind": self.kind, "m": self.m,
                    "ef_construction": self.ef_construction,
                    "ef_search": self.ef_search, "seed": self.seed,
-                   "entry": int(g.entry)},
+                   "entry": int(g.entry), "packed": True,
+                   "batched": self.batched, "frontier": self.frontier},
+                  # the packed adjacency is byte-identical to links0/links
+                  # (pack() only makes them contiguous), so persisting it
+                  # "alongside" means sharing their bytes: only the
+                  # packed-exclusive norms are written in addition
                   {"vecs": g.vecs, "levels": g.levels,
-                   "links0": g.links0, "links": g.links})
+                   "links0": g.links0, "links": g.links,
+                   "packed_vecs_sq": p.vecs_sq})
 
     @classmethod
     def _load(cls, directory: str, meta: dict[str, Any]) -> "HNSWIndex":
         self = cls(m=meta["m"], ef_construction=meta["ef_construction"],
-                   ef_search=meta["ef_search"], seed=meta["seed"])
+                   ef_search=meta["ef_search"], seed=meta["seed"],
+                   batched=meta.get("batched", "auto"),
+                   frontier=int(meta.get("frontier", 8)))
         a = _load_arrays(directory)
         links = a["links"]
         if links.size == 0:  # single-layer graph round-trips as [0, N, M]
@@ -126,4 +188,11 @@ class HNSWIndex(VectorIndex):
         self._g = hnsw_lib.HNSWGraph(
             vecs=a["vecs"], levels=a["levels"], links0=a["links0"],
             links=links, entry=int(meta["entry"]), M=int(meta["m"]))
+        if "packed_vecs_sq" in a:  # pre-PR-5 saves: pack() on first batch
+            # zero repack work: npz loads are C-contiguous, so the packed
+            # tables ARE the loaded adjacency; only the norms come from
+            # the file
+            self._g.packed = hnsw_lib.PackedHNSW(
+                nbrs0=self._g.links0, upper=self._g.links,
+                vecs_sq=a["packed_vecs_sq"])
         return self

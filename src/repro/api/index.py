@@ -32,6 +32,7 @@ import numpy as np
 from ..models.common import NULL_CTX, MeshCtx
 from ..search import distributed as ds
 from ..search import ivf as ivf_lib
+from ..search import twostage as ts_lib
 from .reducer import Reducer, load_reducer
 
 _META = "meta.json"
@@ -458,28 +459,12 @@ class TwoStageIndex(VectorIndex):
 
     @functools.cached_property
     def _rerank(self):
-        def fn(q, db_full, cand, k):
-            # gather INSIDE the jit: XLA fuses it with the distance compute,
-            # and the serving path pays one dispatch instead of two
-            cand_vecs = jnp.take(db_full, cand, axis=0)  # [Q, k1, n]
-            q32 = q.astype(jnp.float32)
-            c32 = cand_vecs.astype(jnp.float32)
-            if self.metric == "cosine":
-                qn = q32 / jnp.maximum(
-                    jnp.linalg.norm(q32, axis=-1, keepdims=True), 1e-12)
-                cn = c32 / jnp.maximum(
-                    jnp.linalg.norm(c32, axis=-1, keepdims=True), 1e-12)
-                s = jnp.einsum("qd,qcd->qc", qn, cn)
-            else:
-                s = -jnp.sum(jnp.square(c32 - q32[:, None, :]), -1)
-            # an IVF base pads short results with id -1 (jnp.take wrapped it
-            # to the LAST corpus row above): keep the -1 id but pin its score
-            # to -inf so a pad can never outrank a real candidate
-            s = jnp.where(cand >= 0, s, -jnp.inf)
-            v, sel = jax.lax.top_k(s, k)
-            return v, jnp.take_along_axis(cand, sel, axis=1)
-
-        return jax.jit(fn, static_argnames=("k",))
+        # the shared stage-2 engine (search.twostage.rerank_candidates):
+        # in-jit candidate gather + exact distances, -1 pads from ANY
+        # stage-1 tier (IVF probes, batched HNSW beam) pinned to -inf
+        return jax.jit(
+            functools.partial(ts_lib.rerank_candidates, metric=self.metric),
+            static_argnames=("k",))
 
     def search(self, queries: np.ndarray, k: int) -> SearchResult:
         self._require_built()

@@ -5,12 +5,14 @@ rae_encode    — RAE encoder GEMM + fused L2-normalize epilogue
 flash_decode  — split-KV online-softmax decode attention
 embedding_bag — scalar-prefetch gather-reduce (torch EmbeddingBag on TPU)
 pq_adc        — fused PQ ADC scan: LUT build + one-hot code gather + top-k
+graph_beam    — fused neighbor gather + L2 + beam merge (one batched HNSW hop)
 """
 from .embedding_bag.ops import embedding_bag
 from .flash_decode.ops import flash_decode
+from .graph_beam.ops import graph_beam
 from .l2_topk.ops import l2_topk
 from .pq_adc.ops import pq_adc
 from .rae_encode.ops import rae_encode
 
-__all__ = ["embedding_bag", "flash_decode", "l2_topk", "pq_adc",
-           "rae_encode"]
+__all__ = ["embedding_bag", "flash_decode", "graph_beam", "l2_topk",
+           "pq_adc", "rae_encode"]

@@ -1,0 +1,3 @@
+from .ops import graph_beam
+
+__all__ = ["graph_beam"]

@@ -1,0 +1,108 @@
+"""Fused gather + L2 + beam-merge Pallas TPU kernel (one HNSW hop).
+
+The batched graph traversal expands one frontier node per live query per
+hop; the work of a hop is "score W gathered neighbors against each query
+and fold them into that query's running top-ef beam". Done naively that is
+a [Q, W, d] gather materialized in HBM, a distance reduce, and a top-k —
+three dispatches and triple traffic. This kernel fuses all of it using the
+house idioms:
+
+* *scalar-prefetch gather* (same trick as ``embedding_bag``): the neighbor
+  ids are prefetched into SMEM and drive the DB BlockSpec index map, so
+  each grid step DMAs exactly one corpus row HBM->VMEM — the [Q, W, d]
+  gather never exists;
+* the squared-L2 score uses the same ``2 q.v - ||v||^2 - ||q||^2`` form as
+  ``l2_topk``, with ``||v||^2`` prefetch-gathered from the packed graph's
+  precomputed norms;
+* the beam merge reuses ``l2_topk``'s branchless iterative max-mask
+  ``_topk_update`` — masked slots (id -1: pad links, already-visited
+  nodes) score ``NEG_INF`` and keep their -1 id, so the merged beam stays
+  sorted descending with pads at the tail.
+
+Grid (Q, W), neighbor-slot axis innermost: TPU grids iterate sequentially,
+so the per-query candidate scratch accumulates across the W sweep and the
+merge runs once per query on the last slot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..l2_topk.kernel import NEG_INF, _set_col, _topk_update
+
+
+def _kernel(safe_ref, raw_ref, q_ref, row_ref, rsq_ref, bv_ref, bi_ref,
+            vout_ref, iout_ref, cv_ref, ci_ref, *, w_slots: int, ef: int):
+    i = pl.program_id(0)
+    w = pl.program_id(1)
+    raw = raw_ref[i * w_slots + w]
+    q = q_ref[...].astype(jnp.float32)                   # [1, d]
+    r = row_ref[...].astype(jnp.float32)                 # [1, d]
+    s = (2.0 * jnp.sum(q * r) - rsq_ref[0]
+         - jnp.sum(q * q))                               # -||q - v||^2
+    s = jnp.where(raw < 0, NEG_INF, s)
+    cv_ref[...] = _set_col(cv_ref[...], w, s.reshape(1))
+    ci_ref[...] = _set_col(ci_ref[...], w, raw.reshape(1))
+
+    @pl.when(w == w_slots - 1)
+    def _():
+        nv, ni = _topk_update(bv_ref[...].astype(jnp.float32), bi_ref[...],
+                              cv_ref[...], ci_ref[...], ef)
+        # once every remaining entry ties at NEG_INF the iterative argmax
+        # re-picks the first exhausted slot; those slots are pads, so
+        # canonicalize them to (NEG_INF, -1) exactly like the ref
+        ni = jnp.where(nv <= NEG_INF, -1, ni)
+        nv = jnp.where(ni >= 0, nv, NEG_INF)
+        vout_ref[...] = nv
+        iout_ref[...] = ni
+
+
+def graph_beam_pallas(queries: jax.Array, db: jax.Array, db_sq: jax.Array,
+                      nbr_ids: jax.Array, beam_v: jax.Array,
+                      beam_i: jax.Array, *,
+                      interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """queries [Q, d], db [N, d], db_sq [N] = ||v||^2, nbr_ids [Q, W] int32
+    (-1 = masked), beam_v/beam_i [Q, ef]. Returns the merged beam, sorted
+    descending. ``ops.py`` pads Q; W and ef ride as-is (sub-tile blocks,
+    same as l2_topk's k)."""
+    qn, d = queries.shape
+    w_slots = nbr_ids.shape[1]
+    ef = beam_v.shape[1]
+    ids = nbr_ids.reshape(-1)
+    safe = jnp.clip(ids, 0, db.shape[0] - 1)
+    kernel = functools.partial(_kernel, w_slots=w_slots, ef=ef)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # clamped ids (drive the DMA) + raw ids
+        grid=(qn, w_slots),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, w, safe, raw: (i, 0)),
+            # one corpus row + its norm per grid step, id-selected
+            pl.BlockSpec((1, d),
+                         lambda i, w, safe, raw: (safe[i * w_slots + w], 0)),
+            pl.BlockSpec((1,),
+                         lambda i, w, safe, raw: (safe[i * w_slots + w],)),
+            pl.BlockSpec((1, ef), lambda i, w, safe, raw: (i, 0)),
+            pl.BlockSpec((1, ef), lambda i, w, safe, raw: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ef), lambda i, w, safe, raw: (i, 0)),
+            pl.BlockSpec((1, ef), lambda i, w, safe, raw: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, w_slots), jnp.float32),
+            pltpu.VMEM((1, w_slots), jnp.int32),
+        ],
+    )
+    vals, idx = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, ef), jnp.float32),
+            jax.ShapeDtypeStruct((qn, ef), jnp.int32),
+        ],
+        interpret=interpret,
+    )(safe, ids, queries, db, db_sq, beam_v, beam_i)
+    return vals, idx

@@ -1,0 +1,69 @@
+"""Vectorized numpy oracle for the fused gather+L2+beam-merge hop.
+
+Deliberately numpy, not jnp: off-TPU the batched HNSW traversal is a
+host-driven hop loop and this ref IS the production path — a jitted jnp
+ref would pay one dispatch per hop, which is exactly the overhead the
+batched engine exists to remove. Per-row determinism matters (the serving
+cache relies on a query answering identically at q=1 and inside a
+coalesced batch): every op below — gather, einsum contraction, stable
+argsort — reduces row-by-row with no cross-row reassociation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def graph_beam_ref(queries: np.ndarray, db: np.ndarray, nbr_ids: np.ndarray,
+                   beam_v: np.ndarray, beam_i: np.ndarray,
+                   db_sq: np.ndarray | None = None,
+                   q_sq: np.ndarray | None = None
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """One batched beam hop: score candidate ids and merge into the beam.
+
+    queries [Q, d]; db [N, d]; nbr_ids [Q, W] int32 with -1 = masked slot
+    (pad link or already-visited node); beam_v/beam_i [Q, ef] the running
+    beam, sorted descending by score (-squared-L2; higher = closer), with
+    (NEG_INF, -1) or (-inf, -1) in empty slots. ``db_sq``/``q_sq`` =
+    precomputed squared norms (the packed graph carries the former, the
+    traversal hoists the latter out of its hop loop; both recomputed here
+    when absent). Returns the merged (values, ids), again sorted
+    descending, ef wide, pads canonicalized to (NEG_INF, -1). Masked
+    candidates score ``NEG_INF`` so they can never displace a real entry;
+    ties resolve stably toward the beam (then lower candidate slot),
+    matching the kernel's iterative first-argmax merge bit-for-bit.
+
+    This runs once per traversal hop on the serving path, so it is written
+    for low constant overhead: float32 inputs pass through untouched and
+    the merge gathers index directly rather than via take_along_axis.
+    """
+    q = np.asarray(queries, np.float32)
+    d = np.asarray(db, np.float32)
+    ids = np.asarray(nbr_ids, np.int32)
+    bv = np.asarray(beam_v, np.float32)
+    bi = np.asarray(beam_i, np.int32)
+    ef = bv.shape[1]
+    valid = ids >= 0
+    safe = np.where(valid, ids, 0)
+    g = d[safe]                                          # [Q, W, d]
+    if db_sq is None:
+        db_sq = np.einsum("nd,nd->n", d, d)
+    if q_sq is None:
+        q_sq = np.einsum("qd,qd->q", q, q)
+    # same 2 q.v - ||v||^2 - ||q||^2 form as the kernel (and l2_topk)
+    s = 2.0 * np.einsum("qwd,qd->qw", g, q)
+    s -= np.asarray(db_sq, np.float32)[safe]
+    s -= np.asarray(q_sq, np.float32)[:, None]
+    s[~valid] = NEG_INF
+    allv = np.concatenate([bv, s], axis=1)
+    alli = np.concatenate([bi, np.where(valid, ids, -1)], axis=1)
+    order = np.argsort(-allv, axis=1, kind="stable")[:, :ef]
+    rr = np.arange(q.shape[0])[:, None]
+    out_v = allv[rr, order]
+    out_i = alli[rr, order]
+    # canonical pad slots: (NEG_INF, -1) — empty beam slots arrive as -inf
+    # and masked candidates as NEG_INF; emitting one sentinel keeps the two
+    # impls (and repeated merges of the same beam) bitwise aligned
+    out_v[out_i < 0] = NEG_INF
+    return out_v, out_i

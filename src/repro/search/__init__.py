@@ -1,3 +1,4 @@
 from . import distributed, hnsw, ivf, quantize, twostage
 from .distributed import distributed_topk, search, sharded_scores
-from .twostage import encode_corpus, recall_vs_exact, two_stage_search
+from .twostage import (encode_corpus, recall_vs_exact, rerank_candidates,
+                       two_stage_search)

@@ -7,6 +7,14 @@ Stage 2 reranks only the candidates in the original space, recovering the
 exact-metric ordering on the shortlist. The paper's k-NN preservation bound
 (kappa(W), Eq. 16) governs stage-1 recall, which ``recall_vs_exact``
 measures directly.
+
+:func:`rerank_candidates` is the stage-2 engine shared by every two-stage
+path (this module and ``api.TwoStageIndex``): it takes the PADDED
+candidate matrix any stage-1 tier emits — IVF probes and the batched HNSW
+beam both pad short rows with id -1 — gathers the candidate vectors
+INSIDE the jit (XLA fuses the gather with the distance compute; the
+serving path pays one dispatch, not two), pins pad slots to -inf, and
+returns the exact top-k in the original space.
 """
 from __future__ import annotations
 
@@ -18,6 +26,38 @@ import jax.numpy as jnp
 from ..core import rae as rae_lib
 from ..models.common import MeshCtx
 from . import distributed as ds
+
+
+def rerank_candidates(queries: jax.Array, db_full: jax.Array,
+                      cand: jax.Array, k: int,
+                      metric: str = "euclidean"
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Exact full-space rerank of a padded candidate matrix.
+
+    ``queries`` [Q, n], ``db_full`` [N, n], ``cand`` [Q, k1] int (id -1 =
+    pad from a short stage-1 row). Returns (scores [Q, k], indices [Q, k])
+    — scores follow the engine convention (higher = closer). Jit-safe with
+    ``k`` static; pads keep their -1 id but score -inf so they can never
+    outrank a real candidate.
+    """
+    # gather INSIDE the jit: XLA fuses it with the distance compute (one
+    # dispatch per search, and the [Q, k1, n] gather never round-trips)
+    cand_vecs = jnp.take(db_full, cand, axis=0)  # [Q, k1, n]
+    q32 = queries.astype(jnp.float32)
+    c32 = cand_vecs.astype(jnp.float32)
+    if metric == "cosine":
+        qn = q32 / jnp.maximum(
+            jnp.linalg.norm(q32, axis=-1, keepdims=True), 1e-12)
+        cn = c32 / jnp.maximum(
+            jnp.linalg.norm(c32, axis=-1, keepdims=True), 1e-12)
+        s = jnp.einsum("qd,qcd->qc", qn, cn)
+    else:
+        s = -jnp.sum(jnp.square(c32 - q32[:, None, :]), -1)
+    # a padded id (-1, wrapped to the LAST corpus row by jnp.take above)
+    # keeps its -1 id but is pinned to -inf so it can never win
+    s = jnp.where(cand >= 0, s, -jnp.inf)
+    v, sel = jax.lax.top_k(s, k)
+    return v, jnp.take_along_axis(cand, sel, axis=1)
 
 
 def encode_corpus(rae_params, db: jax.Array, ctx: MeshCtx,
@@ -42,18 +82,7 @@ def two_stage_search(
     zq = rae_lib.encode(rae_params, queries.astype(jnp.float32))
     k1 = min(k * rerank_factor, db_reduced.shape[0])
     _, cand = ds.search(zq, db_reduced, k1, ctx, metric=metric)  # [Q, k1]
-    # rerank in full space: gather candidates (k1 rows/query) then exact
-    cand_vecs = jnp.take(db_full, cand, axis=0)  # [Q, k1, n]
-    q32 = queries.astype(jnp.float32)
-    c32 = cand_vecs.astype(jnp.float32)
-    if metric == "cosine":
-        qn = q32 / jnp.maximum(jnp.linalg.norm(q32, -1, keepdims=True), 1e-12)
-        cn = c32 / jnp.maximum(jnp.linalg.norm(c32, -1, keepdims=True), 1e-12)
-        s = jnp.einsum("qd,qcd->qc", qn, cn)
-    else:
-        s = -jnp.sum(jnp.square(c32 - q32[:, None, :]), -1)
-    v, sel = jax.lax.top_k(s, k)
-    return v, jnp.take_along_axis(cand, sel, axis=1)
+    return rerank_candidates(queries, db_full, cand, k, metric)
 
 
 def recall_vs_exact(queries, db_full, db_reduced, rae_params, k, ctx,

@@ -6,9 +6,12 @@ gap: concurrent single-query requests land on an asyncio queue, a
 scheduler coalesces up to ``max_batch`` of them (waiting at most
 ``max_wait_ms`` after the first), pads the stack to a power-of-two bucket
 so the jit cache holds a handful of shapes, runs ONE ``index.search``, and
-scatters the per-row results back to their callers. Because every built-in
-index scores rows independently, a coalesced answer is exactly the answer
-the lone query would have gotten (parity-tested in tests/test_serve.py).
+scatters the per-row results back to their callers. Every built-in index
+answers a coalesced row independently of its batch-mates; for the scan
+tiers that answer is bitwise the lone-query answer (parity-tested in
+tests/test_serve.py), while the HNSW tier's lone-query heapq engine and
+batched engine agree up to beam-boundary ties and score rounding (see
+``api.HNSWIndex``).
 
 On top of the scheduler:
 
@@ -252,14 +255,22 @@ class SearchEngine:
             _swap()
 
     def warmup(self, dim: Optional[int] = None,
-               ks: Sequence[int] = (10,)) -> "SearchEngine":
+               ks: Sequence[int] = (10,), seed: int = 0) -> "SearchEngine":
         """Compile the hot path at every padded bucket size (x every k the
         deployment serves) so no real request pays XLA compile latency.
-        Warm-up searches bypass the metrics — stats reflect traffic."""
+        Warm-up queries are seeded random normals, NOT zeros: scan tiers
+        only need the shape, but the batched HNSW frontier loop on an
+        all-zeros batch collapses after one hop (every query ties at the
+        entry point) and would leave the traversal's per-bucket jit cache
+        — the ``graph_beam`` hop kernel compiles per pow2 live-row count —
+        cold for real traffic. Warm-up searches bypass the metrics —
+        stats reflect traffic."""
         dim = dim if dim is not None else self.index.dim
+        rng = np.random.default_rng(seed)
         for k in ks:
             for b in self.buckets:
-                self.index.search(np.zeros((b, dim), np.float32), k)
+                q = rng.standard_normal((b, dim)).astype(np.float32)
+                self.index.search(q, k)
         return self
 
     # ------------------------------------------------------------------

@@ -150,6 +150,133 @@ def test_candidate_distances_fused_matches_np():
 
 
 # ---------------------------------------------------------------------------
+# Batched (array-native) traversal vs the sequential heapq beam
+# ---------------------------------------------------------------------------
+def test_batched_frontier1_matches_sequential_exactly(graph, queries):
+    """At frontier=1 the batched loop expands in the identical best-first
+    order: neighbor sets AND eval counters match the heapq engine
+    query-for-query, at every beam width."""
+    for ef in (10, 40, 128):
+        s_sc, s_id, s_ev = hnsw.search(graph, queries, 10, ef_search=ef)
+        b_sc, b_id, b_ev, hops = hnsw.search_batched(
+            graph, queries, 10, ef_search=ef, impl="np", frontier=1)
+        np.testing.assert_array_equal(s_id, b_id)
+        np.testing.assert_array_equal(s_ev, b_ev)
+        assert hops > 0
+
+
+def test_batched_default_frontier_recall_and_evals_bound(graph, corpus,
+                                                         queries):
+    """The default multi-expansion frontier (E=8): recall at equal
+    efSearch identical to sequential within 0.01, >= 99% of returned
+    neighbor sets identical, eval counters within the documented 10%."""
+    import jax.numpy as jnp
+
+    from repro.core.metrics import knn_indices
+    gt = np.asarray(knn_indices(jnp.asarray(queries), jnp.asarray(corpus),
+                                10))
+    s_sc, s_id, s_ev = hnsw.search(graph, queries, 10, ef_search=80)
+    b_sc, b_id, b_ev, _ = hnsw.search_batched(graph, queries, 10,
+                                              ef_search=80, impl="np")
+    rec = lambda ids: np.mean([len(set(a) & set(b)) / 10
+                               for a, b in zip(gt, ids)])
+    assert abs(rec(s_id) - rec(b_id)) <= 0.01
+    same = np.mean([set(a.tolist()) == set(b.tolist())
+                    for a, b in zip(s_id, b_id)])
+    assert same >= 0.99, same
+    ratio = b_ev.mean() / s_ev.mean()
+    assert 0.9 <= ratio <= 1.1, ratio
+
+
+def test_batched_drivers_agree(graph, queries):
+    """The one-dispatch jitted driver returns the same neighbors and the
+    same eval counters as the host-driven numpy driver (both at the exact
+    best-first order the jit driver always uses)."""
+    n_sc, n_id, n_ev, _ = hnsw.search_batched(graph, queries[:8], 10,
+                                              ef_search=64, impl="np",
+                                              frontier=1)
+    j_sc, j_id, j_ev, _ = hnsw.search_batched(graph, queries[:8], 10,
+                                              ef_search=64, impl="jit")
+    np.testing.assert_array_equal(n_id, j_id)
+    np.testing.assert_array_equal(n_ev, j_ev)
+    np.testing.assert_allclose(n_sc, j_sc, rtol=1e-5, atol=1e-5)
+
+
+def test_batched_deterministic_and_row_independent(graph, queries):
+    """Fixed batch -> bitwise-identical reruns; and every row's answer is
+    independent of its batch-mates (the serving-cache contract: a query
+    answers the same alone and coalesced)."""
+    q = queries[:12]
+    r1 = hnsw.search_batched(graph, q, 10, ef_search=64, impl="np")
+    r2 = hnsw.search_batched(graph, q, 10, ef_search=64, impl="np")
+    for a, b in zip(r1[:3], r2[:3]):
+        np.testing.assert_array_equal(a, b)
+    for i in (0, 5, 11):
+        solo = hnsw.search_batched(graph, q[i:i + 1], 10, ef_search=64,
+                                   impl="np")
+        np.testing.assert_array_equal(solo[0][0], r1[0][i])  # scores bitwise
+        np.testing.assert_array_equal(solo[1][0], r1[1][i])
+
+
+def test_batched_ragged_shapes(corpus):
+    """q=1, q not a power of two, k > efSearch, and k > ntotal all follow
+    the sequential engine's shape/padding contract."""
+    g = hnsw.build(corpus[:300], M=6, ef_construction=40, seed=1)
+    for nq in (1, 5):
+        q = corpus[:nq]
+        s = hnsw.search(g, q, 7, ef_search=3)   # ef < k -> ef = k
+        b = hnsw.search_batched(g, q, 7, ef_search=3, impl="np")
+        assert b[0].shape == (nq, 7) and b[1].shape == (nq, 7)
+        np.testing.assert_array_equal(s[1], b[1])
+    # k beyond the corpus: FAISS pad convention, same as sequential
+    tiny = hnsw.build(corpus[:6], M=4, ef_construction=20, seed=0)
+    sc, ids, ev, _ = hnsw.search_batched(tiny, corpus[:3], 10, impl="np")
+    assert ids.shape == (3, 10)
+    assert np.all(ids[:, 6:] == -1)
+    assert np.all(np.isneginf(sc[:, 6:]))
+    assert np.all(np.isfinite(sc[ids >= 0]))
+
+
+def test_batched_disconnected_node(corpus):
+    """A node unreachable from the entry point is never returned, and the
+    short beam pads instead of crashing (graph hand-mutated: the build
+    path guarantees connectivity, so sever it manually)."""
+    g = hnsw.build(corpus[:8], M=4, ef_construction=20, seed=0)
+    # sever node furthest from entry: drop all its links, both directions
+    victim = max(range(8), key=lambda i: 0 if i == g.entry else
+                 float(((g.vecs[i] - g.vecs[g.entry]) ** 2).sum()))
+    g.links0[victim] = -1
+    g.links0[g.links0 == victim] = -1
+    g.links[g.links == victim] = -1
+    g.packed = None  # graph mutated after pack: recompile
+    sc, ids, ev, _ = hnsw.search_batched(g, corpus[:4], 8, impl="np")
+    assert not np.any(ids == victim)
+    assert np.all(ids[:, 7:] == -1)          # only 7 reachable nodes
+    assert np.all(np.isneginf(sc[:, 7:]))
+
+
+def test_hnsw_index_engine_routing(corpus):
+    """``batched='auto'`` serves lone queries on the sequential engine
+    and batches on the array-native one (``beam_hops`` in stats marks the
+    batched path); True/False pin either engine."""
+    idx = api.HNSWIndex(m=8, ef_construction=40).build(corpus[:500])
+    assert idx._g.packed is not None         # build packs eagerly
+    lone = idx.search(corpus[:1], 5)
+    assert "beam_hops" not in lone.stats
+    batch = idx.search(corpus[:4], 5)
+    assert batch.stats.get("beam_hops", 0) > 0
+    pinned = api.HNSWIndex(m=8, ef_construction=40, batched=True)
+    pinned._g = idx._g
+    assert "beam_hops" in pinned.search(corpus[:1], 5).stats
+    seq = api.HNSWIndex(m=8, ef_construction=40, batched=False)
+    seq._g = idx._g
+    assert "beam_hops" not in seq.search(corpus[:4], 5).stats
+    # both engines return the same neighbors either way
+    np.testing.assert_array_equal(batch.indices,
+                                  seq.search(corpus[:4], 5).indices)
+
+
+# ---------------------------------------------------------------------------
 # distance_evals stats: the sublinearity contract, asserted per tier
 # ---------------------------------------------------------------------------
 def test_distance_evals_flat_is_n(corpus, queries):
@@ -231,6 +358,49 @@ def test_hnsw_save_load_roundtrip_with_upper_layers(tmp_path):
     res2 = idx2.search(x[:16], 5)
     np.testing.assert_array_equal(res2.indices, res.indices)
     check_graph_invariants(idx2._g)
+
+
+def test_packed_saved_and_loaded_without_repack(tmp_path):
+    """Persistence carries the packed dense adjacency + norms: a reloaded
+    index has the packed form in hand (no repack) and answers the batched
+    path bitwise-identically."""
+    x = synthetic.embedding_corpus(400, 16, n_clusters=4, intrinsic=8,
+                                   seed=7)
+    idx = api.HNSWIndex(m=6, ef_construction=40, seed=2).build(x)
+    res = idx.search(x[:8], 5)
+    idx.save(str(tmp_path / "g"))
+    idx2 = api.load_index(str(tmp_path / "g"))
+    p, p2 = idx._g.pack(), idx2._g.packed
+    assert p2 is not None, "load must restore the packed form"
+    np.testing.assert_array_equal(p2.nbrs0, p.nbrs0)
+    np.testing.assert_array_equal(p2.upper, p.upper)
+    np.testing.assert_array_equal(p2.vecs_sq, p.vecs_sq)
+    res2 = idx2.search(x[:8], 5)
+    np.testing.assert_array_equal(res2.indices, res.indices)
+    np.testing.assert_array_equal(res2.scores, res.scores)
+
+
+def test_fingerprint_covers_packed_form_and_engine(corpus):
+    """The serving cache keys on fingerprint(): an index serving the
+    packed/batched path can never alias one pinned to the ragged
+    sequential engine — and packing (a pure derivation of arrays already
+    hashed) can never shift an index's identity as a side effect."""
+    x = corpus[:400]
+    auto = api.HNSWIndex(m=8, ef_construction=40).build(x)
+    seq = api.HNSWIndex(m=8, ef_construction=40, batched=False).build(x)
+    assert auto.fingerprint() != seq.fingerprint()
+    before = seq.fingerprint()
+    seq._g.pack()   # e.g. save() packs a sequential-pinned index
+    assert seq.fingerprint() == before
+
+
+def test_pack_is_idempotent_and_correct(graph):
+    p1 = graph.pack()
+    assert graph.pack() is p1
+    np.testing.assert_array_equal(p1.nbrs0, graph.links0)
+    np.testing.assert_allclose(
+        p1.vecs_sq, (graph.vecs.astype(np.float32) ** 2).sum(1),
+        rtol=1e-6)
 
 
 def test_bytes_per_vector_accounts_links(corpus):

@@ -13,10 +13,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import (embedding_bag, flash_decode, l2_topk, pq_adc,
-                           rae_encode)
+from repro.kernels import (embedding_bag, flash_decode, graph_beam, l2_topk,
+                           pq_adc, rae_encode)
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.flash_decode.ref import flash_decode_ref
+from repro.kernels.graph_beam.ref import NEG_INF, graph_beam_ref
 from repro.kernels.l2_topk.ref import l2_topk_ref
 from repro.kernels.pq_adc.ref import pq_adc_ref
 from repro.kernels.rae_encode.ref import rae_encode_ref
@@ -214,6 +215,56 @@ def test_pq_adc_matches_engine_ivfpq_on_one_cell():
 
 
 # ---------------------------------------------------------------------------
+# graph_beam
+# ---------------------------------------------------------------------------
+def _beam_case(seed, q_n, n, d, w, ef, dtype=jnp.float32, seed_beam=2):
+    """Random hop inputs: queries, db, ids (some masked -1), and a sorted-
+    descending beam with ``seed_beam`` live entries."""
+    rng = np.random.default_rng(seed)
+    qs = jnp.asarray(rng.standard_normal((q_n, d)), dtype)
+    db = jnp.asarray(rng.standard_normal((n, d)), dtype)
+    ids = jnp.asarray(rng.integers(-1, n, (q_n, w)), jnp.int32)
+    bv = np.full((q_n, ef), NEG_INF, np.float32)
+    bi = np.full((q_n, ef), -1, np.int32)
+    for s in range(min(seed_beam, ef)):
+        bv[:, s] = -0.25 * (s + 1)   # sorted descending
+        bi[:, s] = s
+    return qs, db, ids, jnp.asarray(bv), jnp.asarray(bi)
+
+
+@pytest.mark.parametrize("q_n,n,d,w,ef", [
+    (8, 64, 16, 9, 7), (1, 40, 8, 5, 12), (16, 128, 32, 16, 10),
+])
+def test_graph_beam_sweep(q_n, n, d, w, ef):
+    qs, db, ids, bv, bi = _beam_case(q_n + n, q_n, n, d, w, ef)
+    got = graph_beam(qs, db, ids, bv, bi, impl="pallas", interpret=True)
+    want = graph_beam_ref(qs, db, ids, bv, bi)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=2e-4, atol=2e-4)
+    # merged beam stays sorted descending with pads at the tail
+    v = np.asarray(want[0])
+    assert np.all(np.diff(v, axis=1) <= 1e-6)
+    assert np.all(v[np.asarray(want[1]) < 0] == NEG_INF)
+
+
+def test_graph_beam_merge_matches_traversal_semantics():
+    """A full-corpus hop against an empty beam is exact top-ef — pin the
+    merge to l2_topk's ordering (same branchless merge, same tie rule)."""
+    rng = np.random.default_rng(3)
+    qs = jnp.asarray(rng.standard_normal((4, 12)), jnp.float32)
+    db = jnp.asarray(rng.standard_normal((50, 12)), jnp.float32)
+    ids = jnp.tile(jnp.arange(50, dtype=jnp.int32), (4, 1))
+    bv = jnp.full((4, 8), NEG_INF, jnp.float32)
+    bi = jnp.full((4, 8), -1, jnp.int32)
+    v, i = graph_beam(qs, db, ids, bv, bi, impl="np")
+    lv, li = l2_topk(qs, db, 8, impl="ref")
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(li))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(lv), rtol=2e-4,
+                               atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
 # Shared ragged/odd-shape parity harness: every kernel triple, both dtypes
 # ---------------------------------------------------------------------------
 def _tol(dtype):
@@ -286,6 +337,17 @@ def _parity_embedding_bag(case, dtype):
                                rtol=rtol, atol=atol)
 
 
+def _parity_graph_beam(case, dtype):
+    q_n, n, d, w, ef = case
+    qs, db, ids, bv, bi = _beam_case(q_n + n + d, q_n, n, d, w, ef, dtype)
+    got = graph_beam(qs, db, ids, bv, bi, impl="pallas", interpret=True)
+    want = graph_beam_ref(qs, db, ids, bv, bi)
+    rtol, atol, imatch = _tol(dtype)
+    assert float((np.asarray(got[1]) == np.asarray(want[1])).mean()) >= imatch
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=rtol, atol=atol)
+
+
 def _parity_pq_adc(case, dtype):
     q_n, n, m, ksub, dsub, k, bq, bn = case
     rng = np.random.default_rng(q_n + n)
@@ -316,6 +378,12 @@ PARITY_CASES = [
     ("pq_adc", "ragged_n", (17, 337, 4, 16, 4, 5, 32, 128), _parity_pq_adc),
     ("pq_adc", "k_gt_n", (4, 6, 2, 4, 2, 10, 8, 8), _parity_pq_adc),
     ("pq_adc", "d1", (8, 64, 1, 8, 1, 3, 8, 32), _parity_pq_adc),
+    # (q_n, n, d, w, ef): ragged q (pow2 row pad), 1-wide hop (the greedy-
+    # descent shape), ef wider than the candidate pool, d=1
+    ("graph_beam", "ragged_q", (7, 60, 16, 9, 8), _parity_graph_beam),
+    ("graph_beam", "w1", (5, 30, 8, 1, 6), _parity_graph_beam),
+    ("graph_beam", "ef_gt_w", (3, 20, 4, 3, 15), _parity_graph_beam),
+    ("graph_beam", "d1", (4, 25, 1, 5, 4), _parity_graph_beam),
 ]
 
 
