@@ -41,6 +41,9 @@ best-of.
 
 Exit status: 0 = all gates pass, 1 = regression (details on stdout),
 2 = usage/schema error. Wired into scripts/ci.sh behind ``CI_BENCH=1``.
+``--format json`` emits the same verdict machine-readably (one object
+with per-bench row counts and the failure list) under the same exit
+codes — the convention shared with ``scripts/lint.py``.
 
 Baseline hygiene: the gate is one-sided (only drops fail), so commit a
 CONSERVATIVE baseline — the per-metric minimum over a few runs, not one
@@ -171,6 +174,9 @@ def main(argv: Optional[list[str]] = None) -> int:
                     help="max absolute recall drop (default 0.01)")
     ap.add_argument("--qps-tol", type=float, default=0.20,
                     help="max relative QPS drop (default 0.20)")
+    ap.add_argument("--format", choices=("text", "json"), default="text",
+                    help="output format (json: one object with per-bench "
+                         "row counts and the failure list)")
     args = ap.parse_args(argv)
 
     try:
@@ -197,22 +203,35 @@ def main(argv: Optional[list[str]] = None) -> int:
             return 2
 
     all_failures = []
+    report = []
     for name in names:
         try:
             baseline = _load(base_files[name])
             candidate = _load(cand_files[name])
         except (ValueError, json.JSONDecodeError) as e:
+            # schema errors stay plain text in both formats, like argparse
+            # usage errors: exit 2 means "the verdict never happened"
             print(f"FATAL: {e}")
             return 2
         failures = check_bench(name, baseline, candidate,
                                args.recall_tol, args.qps_tol)
-        status = "FAIL" if failures else "ok"
-        print(f"[{status}] {name}: {len(baseline['rows'])} baseline rows "
-              f"vs {len(candidate['rows'])} candidate rows")
-        for f in failures:
-            print(f"  {f}")
+        report.append({"name": name,
+                       "baseline_rows": len(baseline["rows"]),
+                       "candidate_rows": len(candidate["rows"]),
+                       "failures": failures})
         all_failures.extend(failures)
 
+    if args.format == "json":
+        print(json.dumps({"benches": report, "count": len(all_failures),
+                          "failures": all_failures}, indent=1))
+        return 1 if all_failures else 0
+
+    for entry in report:
+        status = "FAIL" if entry["failures"] else "ok"
+        print(f"[{status}] {entry['name']}: {entry['baseline_rows']} "
+              f"baseline rows vs {entry['candidate_rows']} candidate rows")
+        for f in entry["failures"]:
+            print(f"  {f}")
     if all_failures:
         print(f"\nREGRESSION: {len(all_failures)} gate(s) failed")
         return 1

@@ -15,10 +15,25 @@
 #                                 #   committed results/BENCH_*.json via
 #                                 #   scripts/check_bench.py
 #   CI_SKIP_TESTS=1 CI_BENCH=1 scripts/ci.sh   # bench gate only
+#   CI_SKIP_LINT=1 scripts/ci.sh  # skip the static-analysis gate
 #   scripts/ci.sh -k quant        # extra pytest args pass through
+#
+# Every invocation (unless CI_SKIP_LINT=1) starts with the static-analysis
+# gate: scripts/lint.py runs the repro.analysis checkers (jit-purity,
+# kernel-contract, fingerprint) over src/ and fails the build on any
+# finding.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Static analysis first: pure-AST (no jax import), so it verdicts in
+# ~a second — an impure jit function, broken kernel triple, or unhashed
+# index attribute fails CI before a single test runs. CI_SKIP_LINT=1
+# opts out (e.g. the bench-only invocation on a box without the repo's
+# scripts on PATH).
+if [ "${CI_SKIP_LINT:-0}" != "1" ]; then
+    python scripts/lint.py
+fi
 
 # Import errors must fail loudly before any test runs — a module that
 # doesn't collect is a broken build, not 0 skipped tests. pytest writes

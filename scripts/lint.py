@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Static-analysis gate: run the repro.analysis checkers over src/.
+
+Usage:
+    python scripts/lint.py                     # all checkers, text output
+    python scripts/lint.py --format json       # machine-readable
+    python scripts/lint.py --checker fingerprint --checker jit-purity
+
+Exit codes (same convention as scripts/check_bench.py):
+    0  clean
+    1  findings
+    2  usage error
+
+Pure AST analysis — never imports repo code, so it runs in ~a second
+with no jax startup and is safe to gate CI's fast job on.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.analysis import CHECKERS, run_checks  # noqa: E402
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="lint.py",
+        description="jax/Pallas-aware static analysis over src/repro")
+    parser.add_argument("--format", choices=("text", "json"),
+                        default="text", help="output format")
+    parser.add_argument("--checker", action="append", choices=CHECKERS,
+                        metavar="NAME", dest="checkers",
+                        help=f"run only NAME (repeatable); "
+                             f"one of: {', '.join(CHECKERS)}")
+    parser.add_argument("--root", default=REPO, metavar="DIR",
+                        help="repo root to analyze (expects DIR/src/repro; "
+                             "default: this repo)")
+    args = parser.parse_args(argv)
+
+    root = os.path.abspath(args.root)
+    src = os.path.join(root, "src")
+    if not os.path.isdir(src):
+        parser.error(f"no src/ directory under {root}")
+    findings = run_checks(src, repo_root=root, checkers=args.checkers)
+    ran = list(args.checkers) if args.checkers else list(CHECKERS)
+    if args.format == "json":
+        print(json.dumps({"checkers": ran, "count": len(findings),
+                          "findings": [f.to_dict() for f in findings]},
+                         indent=1))
+    else:
+        for f in findings:
+            print(f.format())
+        label = ", ".join(ran)
+        if findings:
+            print(f"lint: {len(findings)} finding(s) [{label}]")
+        else:
+            print(f"lint: clean [{label}]")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

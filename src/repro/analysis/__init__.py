@@ -1,0 +1,58 @@
+"""Static analysis for the repro codebase: jax/Pallas-aware lints.
+
+Three AST checkers (no repo code is imported or executed):
+
+- ``jit-purity``       no host-side constructs reachable from jit /
+                       pallas_call roots (:mod:`.purity`)
+- ``kernel-contract``  every ``kernels/<name>/`` triple is complete,
+                       signature-consistent, pad-canonical and
+                       registered in CI (:mod:`.contracts`)
+- ``fingerprint``      every ``VectorIndex`` attribute is hashed,
+                       exempted, or flagged (:mod:`.fingerprints`)
+
+plus the *runtime* guards in :mod:`.runtime` (compile-count budgets,
+transfer guards) used by the regression tests — imported separately so
+the lint CLI never pays a jax import.
+
+Entry points: ``scripts/lint.py`` (CLI, gates CI) and
+:func:`run_checks` (what the CLI and the pytest bindings call).
+"""
+from __future__ import annotations
+
+import os
+from typing import Iterable, Optional
+
+from .contracts import check_contracts
+from .findings import Finding, apply_suppressions
+from .fingerprints import check_fingerprints
+from .purity import check_purity
+from .pysrc import ModuleIndex
+
+CHECKERS = ("jit-purity", "kernel-contract", "fingerprint")
+DEFAULT_PACKAGES = ("repro",)
+
+__all__ = ["CHECKERS", "DEFAULT_PACKAGES", "Finding", "ModuleIndex",
+           "run_checks"]
+
+
+def run_checks(src_root: str, repo_root: Optional[str] = None,
+               checkers: Optional[Iterable[str]] = None,
+               packages: Iterable[str] = DEFAULT_PACKAGES
+               ) -> list[Finding]:
+    """Run the selected checkers over ``src_root`` and return the
+    surviving (non-suppressed) findings, sorted by location."""
+    repo_root = repo_root or os.path.dirname(os.path.abspath(src_root))
+    selected = set(checkers) if checkers is not None else set(CHECKERS)
+    unknown = selected - set(CHECKERS)
+    if unknown:
+        raise ValueError(f"unknown checker(s) {sorted(unknown)}; "
+                         f"known: {list(CHECKERS)}")
+    index = ModuleIndex.build(src_root, packages, repo_root)
+    findings: list[Finding] = []
+    if "jit-purity" in selected:
+        findings.extend(check_purity(index))
+    if "kernel-contract" in selected:
+        findings.extend(check_contracts(index, repo_root))
+    if "fingerprint" in selected:
+        findings.extend(check_fingerprints(index))
+    return sorted(apply_suppressions(findings, index.sources()))

@@ -1,0 +1,222 @@
+"""Kernel-triple contract checker.
+
+Every kernel under ``src/repro/kernels/<name>/`` is a *triple*:
+
+- ``kernel.py``  — the Pallas kernel, public entry ``<name>_pallas``
+- ``ops.py``     — the jitted public wrapper ``<name>`` (platform
+                   dispatch, padding, k-overflow)
+- ``ref.py``     — the oracle ``<name>_ref`` the parity harness diffs
+                   against
+
+The contract this checker enforces, so a triple can't silently rot:
+
+1. all three files (plus ``__init__.py``) exist and define their symbol;
+2. the ref oracle's signature is the public wrapper's signature minus
+   tuning-only parameters (``impl``, ``interpret``, and block sizes
+   matching ``b[a-z]``) — same names, same order, so the parity harness
+   can call both with one argument dict;
+3. pad sentinels come from ``kernels/common.py``: no local
+   ``NEG_INF``/``PAD_PENALTY`` re-definition and no raw ``±1e30``
+   literal anywhere else under ``kernels/`` (a kernel that drifts to
+   ``-inf`` or its own magic constant breaks bitwise parity of padded
+   slots across impls);
+4. the triple's ``__init__.py`` and the ``repro.kernels`` package both
+   re-export the public wrapper;
+5. the kernel is registered where CI can see it: named in
+   ``tests/test_kernels.py`` (parity harness) and in the
+   ``REQUIRED_KERNELS`` list of ``scripts/ci.sh`` (collect gate) —
+   an unregistered kernel is dead weight CI never exercises.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Optional
+
+from .findings import Finding
+from .pysrc import ModuleIndex, ModuleInfo
+
+CHECKER = "kernel-contract"
+KERNELS_PKG = "repro.kernels"
+#: modules under kernels/ that are shared infrastructure, not triples
+NON_TRIPLE = {"common"}
+_TUNING_RE = re.compile(r"^b[a-z]$")
+TUNING_PARAMS = {"impl", "interpret"}
+#: the only module allowed to define pad sentinels / use the raw literal
+SENTINEL_HOME = f"{KERNELS_PKG}.common"
+SENTINEL_NAMES = {"NEG_INF", "PAD_ID", "PAD_PENALTY"}
+SENTINEL_MAGNITUDE = 1e30
+
+
+def _params(fn: ast.FunctionDef) -> list[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+
+
+def _strip_tuning(params: list[str]) -> list[str]:
+    return [p for p in params
+            if p not in TUNING_PARAMS and not _TUNING_RE.match(p)]
+
+
+def discover_triples(index: ModuleIndex) -> list[str]:
+    names = set()
+    prefix = KERNELS_PKG + "."
+    for dotted in index.modules:
+        if not dotted.startswith(prefix):
+            continue
+        head = dotted[len(prefix):].split(".")[0]
+        mod = index.get(prefix + head)
+        # a triple is a subpackage (has __init__); plain modules like
+        # common.py are shared infrastructure
+        if head not in NON_TRIPLE and (mod is None or mod.is_package):
+            names.add(head)
+    return sorted(names)
+
+
+def _file_finding(name: str, rel: str, rule: str, msg: str) -> Finding:
+    return Finding(path=f"src/repro/kernels/{name}/{rel}", line=0,
+                   checker=CHECKER, rule=rule, message=msg,
+                   detail={"kernel": name})
+
+
+def check_triple(index: ModuleIndex, name: str) -> list[Finding]:
+    findings: list[Finding] = []
+    base = f"{KERNELS_PKG}.{name}"
+    parts: dict[str, Optional[ModuleInfo]] = {
+        "__init__.py": index.get(base),
+        "kernel.py": index.get(f"{base}.kernel"),
+        "ops.py": index.get(f"{base}.ops"),
+        "ref.py": index.get(f"{base}.ref"),
+    }
+    for rel, mod in parts.items():
+        if mod is None:
+            findings.append(_file_finding(
+                name, rel, "missing-file",
+                f"kernel triple `{name}` is missing {rel}"))
+    expected = {"kernel.py": f"{name}_pallas", "ops.py": name,
+                "ref.py": f"{name}_ref"}
+    fns: dict[str, Optional[ast.FunctionDef]] = {}
+    for rel, symbol in expected.items():
+        mod = parts[rel]
+        if mod is None:
+            fns[rel] = None
+            continue
+        fn = mod.functions.get(symbol)
+        fns[rel] = fn
+        if fn is None:
+            findings.append(Finding(
+                path=mod.path, line=0, checker=CHECKER,
+                rule="missing-symbol",
+                message=f"{rel} must define `{symbol}` "
+                        f"(public entry of the `{name}` triple)",
+                detail={"kernel": name, "symbol": symbol}))
+
+    ops_fn, ref_fn = fns["ops.py"], fns["ref.py"]
+    if ops_fn is not None and ref_fn is not None:
+        want = _strip_tuning(_params(ops_fn))
+        got = _params(ref_fn)
+        if want != got:
+            findings.append(Finding(
+                path=parts["ref.py"].path, line=ref_fn.lineno,
+                checker=CHECKER, rule="signature-mismatch",
+                message=f"`{name}_ref{tuple(got)}` must match the public "
+                        f"wrapper minus tuning params: expected "
+                        f"{tuple(want)}",
+                detail={"kernel": name, "expected": want, "actual": got}))
+
+    init = parts["__init__.py"]
+    if init is not None:
+        hit = init.from_imports.get(name)
+        if hit != (f"{base}.ops", name):
+            findings.append(Finding(
+                path=init.path, line=0, checker=CHECKER,
+                rule="missing-reexport",
+                message=f"kernels/{name}/__init__.py must re-export "
+                        f"`{name}` from .ops",
+                detail={"kernel": name}))
+    pkg = index.get(KERNELS_PKG)
+    if pkg is not None and name not in pkg.from_imports:
+        findings.append(Finding(
+            path=pkg.path, line=0, checker=CHECKER,
+            rule="missing-reexport",
+            message=f"repro.kernels/__init__.py must re-export `{name}`",
+            detail={"kernel": name}))
+    return findings
+
+
+def check_sentinels(index: ModuleIndex) -> list[Finding]:
+    """Pad sentinels live in kernels/common.py and nowhere else."""
+    findings = []
+    prefix = KERNELS_PKG + "."
+    for dotted, mod in index.modules.items():
+        if not dotted.startswith(prefix) or dotted == SENTINEL_HOME:
+            continue
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) \
+                            and tgt.id in SENTINEL_NAMES:
+                        findings.append(Finding(
+                            path=mod.path, line=node.lineno,
+                            checker=CHECKER, rule="pad-sentinel",
+                            message=f"`{tgt.id}` re-defined here; import "
+                                    "it from repro.kernels.common so all "
+                                    "triples share one pad convention",
+                            detail={"name": tgt.id}))
+            elif isinstance(node, ast.Constant) \
+                    and isinstance(node.value, float) \
+                    and abs(node.value) == SENTINEL_MAGNITUDE:
+                findings.append(Finding(
+                    path=mod.path, line=node.lineno, checker=CHECKER,
+                    rule="pad-sentinel",
+                    message="raw ±1e30 literal; use "
+                            "NEG_INF/PAD_PENALTY from "
+                            "repro.kernels.common",
+                    detail={"value": node.value}))
+    return findings
+
+
+def check_registration(index: ModuleIndex, repo_root: str
+                       ) -> list[Finding]:
+    findings = []
+    triples = discover_triples(index)
+
+    parity_path = os.path.join(repo_root, "tests", "test_kernels.py")
+    ci_path = os.path.join(repo_root, "scripts", "ci.sh")
+    parity_src = open(parity_path, encoding="utf-8").read() \
+        if os.path.exists(parity_path) else ""
+    ci_src = open(ci_path, encoding="utf-8").read() \
+        if os.path.exists(ci_path) else ""
+    m = re.search(r"REQUIRED_KERNELS=\(([^)]*)\)", ci_src)
+    required_block = m.group(1) if m else ""
+
+    for name in triples:
+        if parity_src and not re.search(rf'"{name}"', parity_src):
+            findings.append(Finding(
+                path="tests/test_kernels.py", line=0, checker=CHECKER,
+                rule="unregistered-parity",
+                message=f"kernel `{name}` has no PARITY_CASES entry in "
+                        "tests/test_kernels.py — the parity harness "
+                        "never diffs it against its ref",
+                detail={"kernel": name}))
+        if ci_src and not re.search(rf"\b{name}\b", required_block):
+            findings.append(Finding(
+                path="scripts/ci.sh", line=0, checker=CHECKER,
+                rule="unregistered-ci",
+                message=f"kernel `{name}` missing from REQUIRED_KERNELS "
+                        "in scripts/ci.sh — CI's collect gate would not "
+                        "notice its tests vanishing",
+                detail={"kernel": name}))
+    return findings
+
+
+def check_contracts(index: ModuleIndex,
+                    repo_root: Optional[str] = None) -> list[Finding]:
+    findings: list[Finding] = []
+    for name in discover_triples(index):
+        findings.extend(check_triple(index, name))
+    findings.extend(check_sentinels(index))
+    if repo_root is not None:
+        findings.extend(check_registration(index, repo_root))
+    return sorted(findings)

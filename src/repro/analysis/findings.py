@@ -1,0 +1,62 @@
+"""Finding model shared by every checker and the ``scripts/lint.py`` CLI.
+
+A finding is one violated invariant at one source location. Checkers
+return ``list[Finding]``; the CLI sorts, prints (text or JSON) and exits
+1 when any survive. Suppression is per-line and explicit: a source line
+whose trailing comment contains ``lint: ignore[<rule>]`` (or a bare
+``lint: ignore``) drops findings anchored to it — the escape hatch for
+the rare construct a static rule can't see through, kept greppable.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Any, Optional
+
+_IGNORE_RE = re.compile(r"#\s*lint:\s*ignore(?:\[(?P<rules>[\w\-, ]+)\])?")
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One violated invariant at one source location."""
+
+    path: str          # repo-relative file path
+    line: int          # 1-indexed; 0 = file-level finding
+    checker: str       # "jit-purity" | "kernel-contract" | "fingerprint"
+    rule: str          # stable machine-readable rule id, e.g. "host-print"
+    message: str       # human-readable explanation
+    detail: dict[str, Any] = field(default_factory=dict, compare=False)
+
+    def to_dict(self) -> dict[str, Any]:
+        return asdict(self)
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.checker}/{self.rule}] " \
+               f"{self.message}"
+
+
+def suppressed(finding: Finding, source_lines: list[str]) -> bool:
+    """True when the finding's source line carries a matching
+    ``# lint: ignore[...]`` pragma."""
+    if not 1 <= finding.line <= len(source_lines):
+        return False
+    m = _IGNORE_RE.search(source_lines[finding.line - 1])
+    if m is None:
+        return False
+    rules = m.group("rules")
+    if rules is None:
+        return True
+    return finding.rule in {r.strip() for r in rules.split(",")}
+
+
+def apply_suppressions(findings: list[Finding],
+                       sources: dict[str, list[str]]) -> list[Finding]:
+    """Drop findings whose source line opts out; ``sources`` maps the
+    finding's ``path`` to its source lines."""
+    out = []
+    for f in findings:
+        lines = sources.get(f.path)
+        if lines is not None and suppressed(f, lines):
+            continue
+        out.append(f)
+    return out

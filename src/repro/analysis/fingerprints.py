@@ -1,0 +1,212 @@
+"""Fingerprint-coverage checker for ``VectorIndex`` subclasses.
+
+The serving cache keys results on ``fingerprint()`` — a content hash of
+``_fingerprint_state()`` — so any instance attribute that can change what
+``search`` answers MUST be hashed. An attribute that is assigned but
+never hashed is a stale-cache bug waiting for a hot swap: two indexes
+that differ only in that attribute hash equal, and the engine serves one
+index's cached answers for the other.
+
+For every (non-private) subclass of ``VectorIndex`` this checker
+statically diffs three attribute sets:
+
+- **assigned**: ``self.X = ...`` anywhere reachable from ``__init__``,
+  ``build`` or ``_load`` — transitively through ``self._helper()`` and
+  ``super().__init__()`` calls across the statically resolved MRO;
+- **covered**: ``self.X`` reads reachable from ``_fingerprint_state``
+  and the ``ntotal`` property (``fingerprint()`` hashes both);
+- **exempt**: the class-level ``_fp_exempt`` dict, ``{attr: reason}``,
+  accumulated over the MRO. An exemption is a *reviewed claim* that the
+  attribute cannot change answers (derived state, build-time hyperparams
+  already materialized in hashed arrays, host-only bookkeeping) — the
+  reason string is mandatory and shows up here in findings.
+
+Rules:
+
+- ``fingerprint-missing``  assigned, not covered, not exempt
+- ``stale-exemption``      exempt but never assigned (typo / dead
+                           entry), or exempt *and* hashed (the claim is
+                           moot — delete it so it can't mask a future
+                           regression)
+- ``unknown-exemption``    ``_fp_exempt`` is not a literal
+                           ``{str: str}`` dict the checker can read
+- ``save-coverage``        hashed but never read in ``save`` — a
+                           saved+loaded index would fingerprint
+                           differently than the live one that wrote it
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from .findings import Finding
+from .purity import _resolve_class
+from .pysrc import ClassInfo, ModuleIndex
+
+CHECKER = "fingerprint"
+ROOT_CLASS = "VectorIndex"
+#: methods whose reachable ``self.X = ...`` stores define the attr set
+ASSIGN_ENTRIES = ("__init__", "build", "_load")
+#: methods whose reachable ``self.X`` reads count as hashed
+COVER_ENTRIES = ("_fingerprint_state", "ntotal")
+
+
+def static_mro(ci: ClassInfo, index: ModuleIndex) -> list[ClassInfo]:
+    """Depth-first base-class linearization over analyzed classes (C3 is
+    overkill for single-inheritance index hierarchies)."""
+    out: list[ClassInfo] = []
+    seen: set[int] = set()
+    stack = [ci]
+    while stack:
+        c = stack.pop(0)
+        if id(c.node) in seen:
+            continue
+        seen.add(id(c.node))
+        out.append(c)
+        for base in c.base_names:
+            bc = _resolve_class(c.module, base, index)
+            if bc is not None:
+                stack.append(bc)
+    return out
+
+
+def _is_vector_index(mro: list[ClassInfo]) -> bool:
+    return any(c.name == ROOT_CLASS for c in mro[1:])
+
+
+def method_attr_flows(mro: list[ClassInfo], entry: str
+                      ) -> tuple[set[str], set[str]]:
+    """(stores, loads) of ``self.X`` reachable from ``entry``, following
+    ``self.m()`` (dispatch from the head of the MRO) and ``super().m()``
+    (dispatch past the defining class)."""
+    stores: set[str] = set()
+    loads: set[str] = set()
+    visited: set[int] = set()
+
+    def dispatch(start_idx: int, name: str) -> None:
+        for i in range(start_idx, len(mro)):
+            if name in mro[i].methods:
+                fn = mro[i].methods[name]
+                if id(fn) not in visited:
+                    visited.add(id(fn))
+                    walk(i, fn)
+                return
+
+    def walk(def_idx: int, fn: ast.FunctionDef) -> None:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Attribute) \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id == "self":
+                if isinstance(node.ctx, ast.Store):
+                    stores.add(node.attr)
+                elif isinstance(node.ctx, ast.Load):
+                    loads.add(node.attr)
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute):
+                f = node.func
+                if isinstance(f.value, ast.Name) and f.value.id == "self":
+                    dispatch(0, f.attr)
+                elif isinstance(f.value, ast.Call) \
+                        and isinstance(f.value.func, ast.Name) \
+                        and f.value.func.id == "super":
+                    dispatch(def_idx + 1, f.attr)
+
+    dispatch(0, entry)
+    return stores, loads
+
+
+def _exemptions(mro: list[ClassInfo]
+                ) -> tuple[dict[str, str], list[Finding]]:
+    """Merge ``_fp_exempt`` over the MRO, subclass entries winning."""
+    merged: dict[str, str] = {}
+    findings: list[Finding] = []
+    for c in reversed(mro):
+        node = c.class_attr("_fp_exempt")
+        if node is None:
+            continue
+        ok = isinstance(node, ast.Dict) and all(
+            isinstance(k, ast.Constant) and isinstance(k.value, str)
+            and isinstance(v, ast.Constant) and isinstance(v.value, str)
+            for k, v in zip(node.keys, node.values))
+        if not ok:
+            findings.append(Finding(
+                path=c.module.path, line=node.lineno, checker=CHECKER,
+                rule="unknown-exemption",
+                message=f"{c.name}._fp_exempt must be a literal "
+                        "{attr: reason} dict of strings so the checker "
+                        "can audit it",
+                detail={"class": c.name}))
+            continue
+        for k, v in zip(node.keys, node.values):
+            merged[k.value] = v.value
+    return merged, findings
+
+
+def check_class(ci: ClassInfo, index: ModuleIndex) -> list[Finding]:
+    mro = static_mro(ci, index)
+    if not _is_vector_index(mro):
+        return []
+    findings: list[Finding] = []
+    line = ci.node.lineno
+
+    assigned: set[str] = set()
+    for entry in ASSIGN_ENTRIES:
+        assigned |= method_attr_flows(mro, entry)[0]
+    covered: set[str] = set()
+    for entry in COVER_ENTRIES:
+        covered |= method_attr_flows(mro, entry)[1]
+    exempt, ex_findings = _exemptions(mro)
+    findings.extend(ex_findings)
+
+    for attr in sorted(assigned - covered - set(exempt)):
+        findings.append(Finding(
+            path=ci.module.path, line=line, checker=CHECKER,
+            rule="fingerprint-missing",
+            message=f"{ci.name}.{attr} is assigned in "
+                    f"{'/'.join(ASSIGN_ENTRIES)} but neither hashed by "
+                    "_fingerprint_state() nor exempted in _fp_exempt — "
+                    "two indexes differing only in it would collide in "
+                    "the serving cache",
+            detail={"class": ci.name, "attr": attr}))
+
+    for attr, reason in sorted(exempt.items()):
+        if attr not in assigned:
+            findings.append(Finding(
+                path=ci.module.path, line=line, checker=CHECKER,
+                rule="stale-exemption",
+                message=f"{ci.name}._fp_exempt[{attr!r}] exempts an "
+                        "attribute this class never assigns "
+                        f"(reason given: {reason!r})",
+                detail={"class": ci.name, "attr": attr}))
+        elif attr in covered:
+            findings.append(Finding(
+                path=ci.module.path, line=line, checker=CHECKER,
+                rule="stale-exemption",
+                message=f"{ci.name}._fp_exempt[{attr!r}] is moot: the "
+                        "attribute IS hashed by _fingerprint_state(); "
+                        "delete the exemption so it can't mask a future "
+                        "coverage regression",
+                detail={"class": ci.name, "attr": attr}))
+
+    saved = method_attr_flows(mro, "save")[1]
+    if saved:
+        for attr in sorted((covered & assigned) - saved - set(exempt)):
+            findings.append(Finding(
+                path=ci.module.path, line=line, checker=CHECKER,
+                rule="save-coverage",
+                message=f"{ci.name}.{attr} is hashed by "
+                        "_fingerprint_state() but never read in save() — "
+                        "a saved+loaded index would fingerprint "
+                        "differently than the instance that wrote it",
+                detail={"class": ci.name, "attr": attr}))
+    return findings
+
+
+def check_fingerprints(index: ModuleIndex) -> list[Finding]:
+    findings: list[Finding] = []
+    for module in index.modules.values():
+        for ci in module.classes.values():
+            if ci.name.startswith("_") or ci.name == ROOT_CLASS:
+                continue
+            findings.extend(check_class(ci, index))
+    return sorted(findings)

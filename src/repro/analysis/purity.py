@@ -1,0 +1,324 @@
+"""jit-purity checker: no host-side constructs in traced code.
+
+Collects every *jit root* — a function decorated with ``@jax.jit`` /
+``@functools.partial(jax.jit, ...)``, passed to a ``jax.jit(...)`` call
+site, or handed to ``pl.pallas_call`` — and walks the static call graph
+reachable from it (module-level calls, imports, ``self.*`` methods with
+statically resolved bases, nested defs, and function-valued arguments).
+Inside that traced region the following are hazards, not style nits:
+
+- ``print(...)``            fires once per *trace*, not per call, and
+                            silently stops firing on cache hits
+- ``time.*`` / ``random.*`` evaluated at trace time — the jitted
+                            computation bakes in one stale value
+- ``numpy.*`` calls         constant-folded at trace time at best; a
+                            tracer crash at worst (np.asarray(tracer))
+- ``.item()/.tolist()``     forces a device sync + transfer inside the
+                            trace, or fails outright under jit
+- ``open``/``os.*``         host I/O inside a trace runs at trace time
+- ``for x in set(...)``     iteration order is hash-seed dependent, so
+                            two processes can trace different programs
+                            from identical inputs
+
+Bare attribute access (``np.float32`` as a dtype) is fine — only *calls*
+on a numpy alias fire. Unresolvable calls are skipped silently; the
+checker only reports positively identified hazards, and a construct it
+can't see through can opt out with ``# lint: ignore[<rule>]``.
+"""
+from __future__ import annotations
+
+import ast
+from collections import deque
+from typing import Optional
+
+from .findings import Finding
+from .pysrc import ClassInfo, ModuleIndex, ModuleInfo, _dotted_attr
+
+CHECKER = "jit-purity"
+
+#: canonical dotted prefix -> rule id (matched on *calls* only)
+_BANNED_PREFIXES = {
+    "time.": "host-time",
+    "numpy.": "host-numpy",
+    "random.": "host-random",
+    "os.": "host-io",
+}
+_BANNED_CALLS = {"print": "host-print", "open": "host-io",
+                 "input": "host-io"}
+_CONCRETIZERS = {"item": ".item()", "tolist": ".tolist()"}
+
+
+def _canon(module: ModuleInfo, dotted: str) -> str:
+    """Expand the leading import alias: ``np.zeros`` -> ``numpy.zeros``."""
+    head, _, rest = dotted.partition(".")
+    if head in module.module_aliases:
+        head = module.module_aliases[head]
+    elif head in module.from_imports:
+        src, orig = module.from_imports[head]
+        head = f"{src}.{orig}"
+    return f"{head}.{rest}" if rest else head
+
+
+def _is_jax_jit(module: ModuleInfo, node: ast.expr) -> bool:
+    dotted = _dotted_attr(node)
+    return dotted is not None and _canon(module, dotted) == "jax.jit"
+
+
+def _is_partial(module: ModuleInfo, node: ast.expr) -> bool:
+    dotted = _dotted_attr(node)
+    return dotted is not None and \
+        _canon(module, dotted) == "functools.partial"
+
+
+def _is_pallas_call(module: ModuleInfo, node: ast.expr) -> bool:
+    dotted = _dotted_attr(node)
+    return dotted is not None and \
+        _canon(module, dotted) == "jax.experimental.pallas.pallas_call"
+
+
+def _jit_target(module: ModuleInfo, expr: ast.expr) -> Optional[ast.expr]:
+    """The function expression inside ``jax.jit(<target>)`` /
+    ``partial(jax.jit, ...)`` -- unwraps one level of functools.partial."""
+    if isinstance(expr, ast.Call) and _is_partial(module, expr.func) \
+            and expr.args:
+        return expr.args[0]
+    return expr
+
+
+class _FnScope:
+    """Local name bindings inside one function: nested defs plus
+    ``name = functools.partial(f, ...)`` / ``name = f`` aliases."""
+
+    def __init__(self, module: ModuleInfo, fn: ast.AST):
+        self.defs: dict[str, ast.FunctionDef] = {}
+        self.aliases: dict[str, ast.expr] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn:
+                self.defs[node.name] = node
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                tgt = node.targets[0].id
+                val = node.value
+                if isinstance(val, ast.Call) and _is_partial(module,
+                                                             val.func) \
+                        and val.args:
+                    self.aliases[tgt] = val.args[0]
+                elif isinstance(val, ast.Name):
+                    self.aliases[tgt] = val
+
+    def resolve(self, expr: ast.expr, depth: int = 0) -> ast.expr:
+        if depth < 4 and isinstance(expr, ast.Name) \
+                and expr.id in self.aliases:
+            return self.resolve(self.aliases[expr.id], depth + 1)
+        return expr
+
+
+def _resolve_method(ci: ClassInfo, name: str, index: ModuleIndex,
+                    _seen: Optional[set] = None
+                    ) -> Optional[tuple[ModuleInfo, ast.FunctionDef,
+                                        ClassInfo]]:
+    """Look up a method through statically resolvable base classes."""
+    _seen = _seen or set()
+    if ci.name in _seen:
+        return None
+    _seen.add(ci.name)
+    if name in ci.methods:
+        return ci.module, ci.methods[name], ci
+    for base in ci.base_names:
+        base_ci = _resolve_class(ci.module, base, index)
+        if base_ci is not None:
+            hit = _resolve_method(base_ci, name, index, _seen)
+            if hit is not None:
+                return hit
+    return None
+
+
+def _resolve_class(module: ModuleInfo, dotted: str,
+                   index: ModuleIndex) -> Optional[ClassInfo]:
+    head, _, rest = dotted.partition(".")
+    if not rest:
+        if head in module.classes:
+            return module.classes[head]
+        if head in module.from_imports:
+            src, orig = module.from_imports[head]
+            target = index.get(src)
+            if target and orig in target.classes:
+                return target.classes[orig]
+        return None
+    # alias.Class
+    target_name = module.module_aliases.get(head)
+    if head in module.from_imports:
+        src, orig = module.from_imports[head]
+        target_name = f"{src}.{orig}"
+    if target_name:
+        target = index.get(target_name)
+        if target and rest in target.classes:
+            return target.classes[rest]
+    return None
+
+
+def collect_roots(index: ModuleIndex
+                  ) -> list[tuple[ModuleInfo, ast.AST,
+                                  Optional[ClassInfo], str]]:
+    """Every function that jax will trace: (module, node, class, why)."""
+    roots = []
+
+    def add_decorated(module, fn, ci):
+        for dec in fn.decorator_list:
+            target = dec
+            if isinstance(dec, ast.Call):
+                if _is_partial(module, dec.func) and dec.args:
+                    target = dec.args[0]
+                else:
+                    target = dec.func
+            if isinstance(target, (ast.Name, ast.Attribute)) \
+                    and _is_jax_jit(module, target):
+                roots.append((module, fn, ci, f"@jit {fn.name}"))
+
+    for module in index.modules.values():
+        for fn in module.functions.values():
+            add_decorated(module, fn, None)
+        for ci in module.classes.values():
+            for fn in ci.methods.values():
+                add_decorated(module, fn, ci)
+
+        # call sites: jax.jit(f) / pl.pallas_call(kernel) anywhere
+        enclosing: dict[int, tuple[ast.AST, Optional[ClassInfo]]] = {}
+
+        def _map_scope(node, fn, ci):
+            for child in ast.iter_child_nodes(node):
+                child_fn, child_ci = fn, ci
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    child_fn = child
+                elif isinstance(child, ast.ClassDef):
+                    child_ci = module.classes.get(child.name, ci)
+                enclosing[id(child)] = (child_fn, child_ci)
+                _map_scope(child, child_fn, child_ci)
+
+        enclosing[id(module.tree)] = (None, None)
+        _map_scope(module.tree, None, None)
+
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            is_jit = _is_jax_jit(module, node.func)
+            is_pc = _is_pallas_call(module, node.func)
+            if not (is_jit or is_pc) or not node.args:
+                continue
+            host_fn, host_ci = enclosing.get(id(node), (None, None))
+            scope = _FnScope(module, host_fn) if host_fn is not None \
+                else _FnScope(module, module.tree)
+            target = scope.resolve(_jit_target(module, node.args[0]))
+            why = "pl.pallas_call" if is_pc else "jax.jit(...)"
+            if isinstance(target, ast.Lambda):
+                roots.append((module, target, host_ci, why))
+            elif isinstance(target, (ast.Name, ast.Attribute)):
+                hit = index.resolve_function(module, target)
+                if hit is not None:
+                    roots.append((hit[0], hit[1], None, why))
+                elif isinstance(target, ast.Name) \
+                        and target.id in scope.defs:
+                    roots.append((module, scope.defs[target.id],
+                                  host_ci, why))
+    return roots
+
+
+def _scan(module: ModuleInfo, fn: ast.AST, ci: Optional[ClassInfo],
+          root_desc: str, index: ModuleIndex, queue: deque,
+          findings: list[Finding]) -> None:
+    scope = _FnScope(module, fn)
+
+    def flag(node, rule, msg):
+        findings.append(Finding(
+            path=module.path, line=node.lineno, checker=CHECKER,
+            rule=rule, message=f"{msg} (traced via {root_desc})",
+            detail={"module": module.dotted, "root": root_desc}))
+
+    def enqueue_expr(expr):
+        expr = scope.resolve(expr)
+        if isinstance(expr, ast.Name) and expr.id in scope.defs:
+            return  # nested def: already inside this subtree walk
+        if isinstance(expr, (ast.Name, ast.Attribute)):
+            hit = index.resolve_function(module, expr)
+            if hit is not None:
+                queue.append((hit[0], hit[1], None, root_desc))
+                return
+        if isinstance(expr, ast.Attribute) \
+                and isinstance(expr.value, ast.Name) \
+                and expr.value.id == "self" and ci is not None:
+            hit = _resolve_method(ci, expr.attr, index)
+            if hit is not None:
+                queue.append((hit[0], hit[1], hit[2], root_desc))
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            dotted = _dotted_attr(node.func)
+            if dotted is not None:
+                canon = _canon(module, dotted)
+                if canon in _BANNED_CALLS:
+                    flag(node, _BANNED_CALLS[canon],
+                         f"host-side `{dotted}(...)` in jit-traced code")
+                    continue
+                matched = False
+                for prefix, rule in _BANNED_PREFIXES.items():
+                    if canon.startswith(prefix) or canon == prefix[:-1]:
+                        flag(node, rule,
+                             f"`{dotted}(...)` resolves to "
+                             f"`{canon}` — host-side in jit-traced code")
+                        matched = True
+                        break
+                if matched:
+                    continue
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _CONCRETIZERS \
+                    and not node.args and not node.keywords:
+                flag(node, "host-concretize",
+                     f"`{_CONCRETIZERS[node.func.attr]}` concretizes a "
+                     "traced value (device sync or TracerError)")
+                continue
+            enqueue_expr(node.func)
+            for arg in node.args:
+                if isinstance(arg, (ast.Name, ast.Attribute)):
+                    enqueue_expr(arg)
+            for kw in node.keywords:
+                if isinstance(kw.value, (ast.Name, ast.Attribute)):
+                    enqueue_expr(kw.value)
+        elif isinstance(node, (ast.For, ast.comprehension)):
+            it = node.iter
+            is_set = isinstance(it, ast.Set) or (
+                isinstance(it, ast.Call)
+                and isinstance(it.func, ast.Name)
+                and it.func.id in ("set", "frozenset"))
+            if is_set:
+                line = getattr(node, "lineno", getattr(it, "lineno", 0))
+                findings.append(Finding(
+                    path=module.path, line=line, checker=CHECKER,
+                    rule="set-iteration",
+                    message="iterating a set in jit-traced code: order is "
+                            f"hash-seed dependent (traced via {root_desc})",
+                    detail={"module": module.dotted, "root": root_desc}))
+
+
+def check_purity(index: ModuleIndex) -> list[Finding]:
+    findings: list[Finding] = []
+    queue: deque = deque(collect_roots(index))
+    visited: set[tuple] = set()
+    while queue:
+        module, fn, ci, root_desc = queue.popleft()
+        key = (module.dotted, fn.lineno, fn.col_offset)
+        if key in visited:
+            continue
+        visited.add(key)
+        _scan(module, fn, ci, root_desc, index, queue, findings)
+    # one construct can be reached from several roots; report it once
+    seen: set[tuple] = set()
+    out = []
+    for f in sorted(findings):
+        k = (f.path, f.line, f.rule)
+        if k in seen:
+            continue
+        seen.add(k)
+        out.append(f)
+    return out

@@ -1,0 +1,221 @@
+"""AST module index shared by the static checkers.
+
+Parses every ``.py`` under the analyzed package roots ONCE into
+:class:`ModuleInfo` records — source lines, import alias maps, function
+and class tables — so the checkers (``purity``, ``fingerprints``) can
+resolve names across modules without importing anything. Static analysis
+must never execute repo code: importing ``repro.serve`` to inspect it
+would spin up jax, and a broken module under lint would crash the linter
+instead of producing a finding.
+
+Name resolution is deliberately *syntactic*: aliases come from import
+statements, relative imports are resolved against the module's dotted
+path, and calls resolve to functions defined in analyzed modules only.
+Anything unresolvable (third-party calls, dynamic dispatch) is skipped,
+not guessed at — the checkers are tuned so that "couldn't resolve" is
+silent and only positively identified hazards fire.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+
+@dataclass
+class ClassInfo:
+    name: str
+    node: ast.ClassDef
+    module: "ModuleInfo"
+    base_names: list[str] = field(default_factory=list)
+    decorator_names: list[str] = field(default_factory=list)
+
+    @property
+    def methods(self) -> dict[str, ast.FunctionDef]:
+        out = {}
+        for stmt in self.node.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out[stmt.name] = stmt
+        return out
+
+    def class_attr(self, name: str) -> Optional[ast.expr]:
+        """Value expression of a class-level ``name = ...`` assignment."""
+        for stmt in self.node.body:
+            if isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id == name:
+                        return stmt.value
+            elif isinstance(stmt, ast.AnnAssign):
+                if (isinstance(stmt.target, ast.Name)
+                        and stmt.target.id == name):
+                    return stmt.value
+        return None
+
+
+@dataclass
+class ModuleInfo:
+    dotted: str                 # e.g. "repro.search.ivf"
+    path: str                   # repo-relative path
+    tree: ast.Module
+    source_lines: list[str]
+    is_package: bool            # True for __init__.py
+    #: ``import x.y as a`` / ``import x`` -> {local name: dotted module}
+    module_aliases: dict[str, str] = field(default_factory=dict)
+    #: ``from M import f as g`` -> {local name: (resolved M, f)}
+    from_imports: dict[str, tuple[str, str]] = field(default_factory=dict)
+    functions: dict[str, ast.FunctionDef] = field(default_factory=dict)
+    classes: dict[str, ClassInfo] = field(default_factory=dict)
+
+    @property
+    def package(self) -> str:
+        """Dotted package this module's relative imports resolve against."""
+        if self.is_package:
+            return self.dotted
+        return self.dotted.rsplit(".", 1)[0] if "." in self.dotted else ""
+
+
+def _dotted_attr(node: ast.expr) -> Optional[str]:
+    """'a.b.c' for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _resolve_relative(package: str, level: int, module: Optional[str]) -> str:
+    """Resolve ``from <level dots><module> import ...`` against ``package``."""
+    parts = package.split(".") if package else []
+    if level > 1:
+        parts = parts[: len(parts) - (level - 1)]
+    base = ".".join(parts)
+    if module:
+        return f"{base}.{module}" if base else module
+    return base
+
+
+def _index_module(dotted: str, path: str, rel_path: str) -> ModuleInfo:
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    tree = ast.parse(source, filename=path)
+    info = ModuleInfo(dotted=dotted, path=rel_path, tree=tree,
+                      source_lines=source.splitlines(),
+                      is_package=os.path.basename(path) == "__init__.py")
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                local = alias.asname or alias.name.split(".")[0]
+                # `import jax.numpy as jnp` binds jnp to the submodule;
+                # bare `import jax.numpy` binds `jax`
+                target = alias.name if alias.asname else \
+                    alias.name.split(".")[0]
+                info.module_aliases[local] = target
+        elif isinstance(node, ast.ImportFrom):
+            src = _resolve_relative(info.package, node.level, node.module) \
+                if node.level else (node.module or "")
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                local = alias.asname or alias.name
+                info.from_imports[local] = (src, alias.name)
+
+    for stmt in tree.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            info.functions[stmt.name] = stmt
+        elif isinstance(stmt, ast.ClassDef):
+            ci = ClassInfo(name=stmt.name, node=stmt, module=info)
+            for b in stmt.bases:
+                name = _dotted_attr(b)
+                if name:
+                    ci.base_names.append(name)
+            for dec in stmt.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                name = _dotted_attr(target)
+                if name:
+                    ci.decorator_names.append(name)
+            info.classes[stmt.name] = ci
+    return info
+
+
+class ModuleIndex:
+    """All analyzed modules, addressable by dotted name."""
+
+    def __init__(self, modules: dict[str, ModuleInfo]):
+        self.modules = modules
+
+    @classmethod
+    def build(cls, src_root: str, packages: Iterable[str],
+              repo_root: Optional[str] = None) -> "ModuleIndex":
+        """Index every module under ``src_root/<pkg_path>`` for each dotted
+        package in ``packages`` (e.g. ``["repro.kernels", "repro.api"]``).
+        Paths in findings are reported relative to ``repo_root``."""
+        repo_root = repo_root or os.path.dirname(src_root)
+        modules: dict[str, ModuleInfo] = {}
+        for pkg in packages:
+            pkg_dir = os.path.join(src_root, *pkg.split("."))
+            if os.path.isfile(pkg_dir + ".py"):  # plain module, not package
+                path = pkg_dir + ".py"
+                modules[pkg] = _index_module(
+                    pkg, path, os.path.relpath(path, repo_root))
+                continue
+            for cur, _dirs, files in os.walk(pkg_dir):
+                for fn in sorted(files):
+                    if not fn.endswith(".py"):
+                        continue
+                    path = os.path.join(cur, fn)
+                    rel_to_pkg = os.path.relpath(path, pkg_dir)
+                    parts = rel_to_pkg[:-len(".py")].split(os.sep)
+                    if parts[-1] == "__init__":
+                        parts = parts[:-1]
+                    dotted = ".".join([pkg] + [p for p in parts if p])
+                    modules[dotted] = _index_module(
+                        dotted, path, os.path.relpath(path, repo_root))
+        return cls(modules)
+
+    def get(self, dotted: str) -> Optional[ModuleInfo]:
+        return self.modules.get(dotted)
+
+    def resolve_function(self, module: ModuleInfo, func: ast.expr
+                         ) -> Optional[tuple[ModuleInfo, ast.FunctionDef]]:
+        """Resolve a call target expression to an analyzed function.
+
+        Handles ``f`` (module-level or from-import) and ``alias.f`` where
+        ``alias`` is an imported analyzed module. Returns None for
+        anything else (builtins, third-party, methods — methods resolve
+        via class context in the purity walker)."""
+        if isinstance(func, ast.Name):
+            name = func.id
+            if name in module.functions:
+                return module, module.functions[name]
+            if name in module.from_imports:
+                src, orig = module.from_imports[name]
+                target = self.get(src)
+                if target and orig in target.functions:
+                    return target, target.functions[orig]
+                # `from pkg import submodule` spelled as a from-import
+                sub = self.get(f"{src}.{orig}")
+                if sub is None:
+                    return None
+            return None
+        if isinstance(func, ast.Attribute) and isinstance(func.value,
+                                                          ast.Name):
+            alias = func.value.id
+            target_name = None
+            if alias in module.module_aliases:
+                target_name = module.module_aliases[alias]
+            elif alias in module.from_imports:
+                src, orig = module.from_imports[alias]
+                target_name = f"{src}.{orig}"
+            if target_name:
+                target = self.get(target_name)
+                if target and func.attr in target.functions:
+                    return target, target.functions[func.attr]
+        return None
+
+    def sources(self) -> dict[str, list[str]]:
+        return {m.path: m.source_lines for m in self.modules.values()}

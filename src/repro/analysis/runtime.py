@@ -1,0 +1,91 @@
+"""Runtime guards: compile-count budgets and host<->device transfer traps.
+
+The static checkers can prove a traced function is *pure*; they cannot
+prove the serving path is *warm* — that a shape storm never triggers a
+retrace, or that the hot path never silently ferries a numpy array to
+device per query. Those are dynamic properties, asserted here:
+
+- :func:`no_retrace` — a context manager that counts XLA backend
+  compiles (via ``jax.monitoring``'s
+  ``/jax/core/compile/backend_compile_duration`` event, which fires per
+  compile — including retraces — and never on a cache hit) and raises
+  :class:`RetraceError` when the block exceeds its budget. Budget 0 is
+  the serving invariant: after ``SearchEngine`` warm-up, a mixed-size
+  query storm must compile nothing.
+
+- :func:`no_host_to_device` — wraps
+  ``jax.transfer_guard_host_to_device("disallow")``. Inside it, passing
+  a numpy array to a jitted function (or mixing a python scalar into a
+  jit call's arguments) raises instead of silently inserting a per-call
+  h2d copy. Explicit transfers (``jnp.asarray`` outside jit) stay
+  legal, so staging inputs is allowed and *implicit* per-call traffic
+  is not.
+
+jax.monitoring has no per-listener unregister (only a global
+``clear_event_listeners``), so the listener is installed once, lazily,
+and counts into a module-global — cheap enough to leave attached for
+the life of the process.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+
+_COMPILE_EVENT_MARKER = "backend_compile"
+_compile_events = 0
+_listener_installed = False
+
+
+class RetraceError(RuntimeError):
+    """A guarded block compiled more than its budget allows."""
+
+
+def _ensure_listener() -> None:
+    global _listener_installed
+    if _listener_installed:
+        return
+
+    def _on_duration(event, duration=0.0, **_kw):
+        global _compile_events
+        if _COMPILE_EVENT_MARKER in event:
+            _compile_events += 1
+
+    jax.monitoring.register_event_duration_secs_listener(_on_duration)
+    _listener_installed = True
+
+
+def compile_count() -> int:
+    """Process-lifetime count of XLA backend compiles observed so far
+    (monotonic; only deltas are meaningful)."""
+    _ensure_listener()
+    return _compile_events
+
+
+@contextmanager
+def no_retrace(budget: int = 0, what: str = "guarded block"):
+    """Assert the block triggers at most ``budget`` backend compiles.
+
+    Yields a zero-arg callable returning the compiles used so far, for
+    mid-block introspection::
+
+        with no_retrace(budget=0, what="warm query storm") as used:
+            for q in storm:
+                engine.search(q, k=10)
+                assert used() == 0
+    """
+    _ensure_listener()
+    start = _compile_events
+    yield lambda: _compile_events - start
+    used = _compile_events - start
+    if used > budget:
+        raise RetraceError(
+            f"{what}: {used} backend compile(s), budget {budget} — "
+            "a shape/dtype/static-arg reached jit that warm-up never saw")
+
+
+@contextmanager
+def no_host_to_device():
+    """Raise on IMPLICIT host->device transfers inside the block."""
+    with jax.transfer_guard_host_to_device("disallow"):
+        yield

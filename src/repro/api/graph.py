@@ -61,6 +61,15 @@ class HNSWIndex(VectorIndex):
 
     stage1_oversample = 2
 
+    _fp_exempt = {
+        "m": "build-time degree cap; materialized in the hashed "
+             "links0/links shapes",
+        "ef_construction": "insert-time beam width; materialized in the "
+                           "hashed adjacency",
+        "seed": "build-time level draw; materialized in the hashed "
+                "levels/adjacency",
+    }
+
     def __init__(self, m: int = 32, ef_construction: int = 100,
                  ef_search: int = 64, seed: int = 0,
                  batched: Union[str, bool] = "auto", frontier: int = 8):

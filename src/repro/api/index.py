@@ -222,6 +222,11 @@ class FlatIndex(VectorIndex):
     """Exact k-NN over the raw corpus via the sharded scan + global top-k
     merge. With a mesh in ``ctx`` the corpus row-shards over ``db_rows``."""
 
+    _fp_exempt = {
+        "ctx": "mesh/sharding topology changes where the scan runs, not "
+               "what it answers",
+    }
+
     def __init__(self, metric: str = "euclidean", ctx: MeshCtx = NULL_CTX):
         self.metric = metric
         self.ctx = ctx
@@ -284,6 +289,19 @@ class IVFFlatIndex(VectorIndex):
     """k-means cells + padded-dense probe scan (``search.ivf``). Euclidean
     only (scores = negative squared distance). ``nprobe`` defaults to
     n_cells/16 (min 8): recall-friendly without scanning everything."""
+
+    _fp_exempt = {
+        "n_cells": "build-time hyperparam; materialized in the hashed "
+                   "centroids/lists arrays",
+        "cell_cap": "build-time hyperparam; materialized in the hashed "
+                    "lists shape",
+        "kmeans_iters": "build-time hyperparam; materialized in the "
+                        "hashed centroids",
+        "seed": "build-time hyperparam; materialized in the hashed "
+                "centroids/lists",
+        "_cell_sizes": "derived from _ivf.list_mask (hashed via lists); "
+                       "feeds host-side stats only",
+    }
 
     def __init__(self, n_cells: int = 256, nprobe: int = 0,
                  cell_cap: Optional[int] = None, kmeans_iters: int = 10,
@@ -442,8 +460,24 @@ class TwoStageIndex(VectorIndex):
         self._require_built()
         return int(self._db_full.shape[1])
 
+    def _reducer_fingerprint(self) -> str:
+        """Content hash of the query-time encoder. The reducer transforms
+        every query before stage 1, so it is part of index identity:
+        without it, two stacks differing only in reducer weights would
+        collide in the serving cache. Reducers that implement
+        ``fingerprint()`` (all built-ins) hash their fitted state;
+        anything else is probed — hash its transform of a fixed input."""
+        fp = getattr(self.reducer, "fingerprint", None)
+        if fp is not None:
+            return fp()
+        probe = np.random.default_rng(0).standard_normal(
+            (4, int(self._db_full.shape[1]))).astype(np.float32)
+        z = np.asarray(self.reducer.transform(probe))
+        return hashlib.sha1(z.tobytes()).hexdigest()[:16]
+
     def _fingerprint_state(self) -> list:
         return [f"rerank={self.rerank_factor}:{self.metric}",
+                f"reducer={self._reducer_fingerprint()}",
                 self.base.fingerprint(), self._db_full]
 
     def build(self, corpus: np.ndarray) -> "TwoStageIndex":

@@ -49,6 +49,11 @@ class SQ8Index(VectorIndex):
     # under a rerank recovers the borderline swaps.
     stage1_oversample = 2
 
+    _fp_exempt = {
+        "_recon_sq": "derived: recomputable from _sq + _codes (both "
+                     "hashed)",
+    }
+
     def __init__(self):
         self._sq: Optional[qz.ScalarQuantizer] = None
         self._codes: Optional[jax.Array] = None
@@ -128,6 +133,17 @@ class PQIndex(VectorIndex):
     # reorder do the same.
     stage1_oversample = 8
 
+    _fp_exempt = {
+        "m": "build-time hyperparam; materialized in the hashed "
+             "codebooks/codes shapes",
+        "bits": "build-time hyperparam; materialized in the hashed "
+                "codebooks shape",
+        "kmeans_iters": "build-time hyperparam; materialized in the "
+                        "hashed codebooks",
+        "seed": "build-time hyperparam; materialized in the hashed "
+                "codebooks",
+    }
+
     def __init__(self, m: int = 8, bits: int = 8, kmeans_iters: int = 15,
                  seed: int = 0):
         self.m = m
@@ -198,6 +214,21 @@ class PQIndex(VectorIndex):
 class _IVFQuantBase(VectorIndex):
     """Shared coarse layer: k-means cells from ``search.ivf`` whose padded
     dense lists store *codes* instead of f32 vectors."""
+
+    _fp_exempt = {
+        "n_cells": "build-time hyperparam; materialized in the hashed "
+                   "centroids/lists arrays",
+        "cell_cap": "build-time hyperparam; materialized in the hashed "
+                    "lists shape",
+        "kmeans_iters": "build-time hyperparam; materialized in the "
+                        "hashed centroids",
+        "seed": "build-time hyperparam; materialized in the hashed "
+                "centroids/lists",
+        "_mask": "derived: exactly (_lists >= 0), and _lists is hashed",
+        "_cell_sizes": "derived from _mask; feeds host-side stats only",
+        "spill": "build diagnostic; spilled membership is materialized "
+                 "in the hashed _lists",
+    }
 
     def __init__(self, n_cells: int = 256, nprobe: int = 0,
                  cell_cap: Optional[int] = None, kmeans_iters: int = 10,
@@ -286,6 +317,11 @@ class IVFSQ8Index(_IVFQuantBase):
 
     stage1_oversample = 2  # same near-exact ordering as SQ8Index
 
+    _fp_exempt = {
+        "_recon_sq": "derived: recomputable from _sq + _codes (both "
+                     "hashed)",
+    }
+
     def __init__(self, n_cells: int = 256, nprobe: int = 0,
                  cell_cap: Optional[int] = None, kmeans_iters: int = 10,
                  seed: int = 0):
@@ -359,6 +395,15 @@ class IVFPQIndex(_IVFQuantBase):
     per probed cell, which keeps the scan a single gather."""
 
     stage1_oversample = 8  # same ADC ordering noise as PQIndex
+
+    _fp_exempt = {
+        "m": "build-time hyperparam; materialized in the hashed "
+             "codebooks/codes shapes",
+        "bits": "build-time hyperparam; materialized in the hashed "
+                "codebooks shape",
+        "pq_iters": "build-time hyperparam; materialized in the hashed "
+                    "codebooks",
+    }
 
     def __init__(self, n_cells: int = 256, m: int = 8, bits: int = 8,
                  nprobe: int = 0, cell_cap: Optional[int] = None,

@@ -16,6 +16,7 @@ Persistence layout (one directory per reducer)::
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
@@ -123,6 +124,26 @@ class _BaselineReducer:
         if not self._fitted:
             raise RuntimeError(f"{self.kind}: transform before fit")
         return np.asarray(self._impl.transform(np.asarray(x, np.float32)))
+
+    def fingerprint(self) -> str:
+        """Content hash of the fitted map — same role as
+        ``VectorIndex.fingerprint``: ``TwoStageIndex`` folds it into the
+        composite hash so swapping reducer weights changes the serving
+        cache key. Hashes every field of the wrapped dataclass with the
+        same scalar/array split ``save`` uses."""
+        if not self._fitted:
+            raise RuntimeError(f"{self.kind}: fingerprint before fit")
+        h = hashlib.sha1(self.kind.encode())
+        for f in dataclasses.fields(self._impl):
+            v = getattr(self._impl, f.name)
+            h.update(f.name.encode())
+            if v is None or isinstance(v, (bool, int, float, str)):
+                h.update(str(v).encode())
+            else:
+                a = np.asarray(v)
+                h.update(f"{a.shape}:{a.dtype}".encode())
+                h.update(a.tobytes())
+        return h.hexdigest()[:16]
 
     def save(self, directory: str) -> None:
         scalars: dict[str, Any] = {}
@@ -251,6 +272,20 @@ class RAEReducer:
 
         return np.asarray(rae.encode(self.params_,
                                      jnp.asarray(x, jnp.float32)))
+
+    def fingerprint(self) -> str:
+        """Content hash of the trained encoder (config + weights)."""
+        if self.params_ is None:
+            raise RuntimeError("rae: fingerprint before fit")
+        h = hashlib.sha1(self.kind.encode())
+        if self.cfg_ is not None:
+            h.update(json.dumps(dataclasses.asdict(self.cfg_),
+                                sort_keys=True).encode())
+        for k in sorted(self.params_):
+            a = np.asarray(self.params_[k])
+            h.update(f"{k}:{a.shape}:{a.dtype}".encode())
+            h.update(a.tobytes())
+        return h.hexdigest()[:16]
 
     def save(self, directory: str) -> None:
         if self.params_ is None:

@@ -7,6 +7,7 @@ embedding_bag — scalar-prefetch gather-reduce (torch EmbeddingBag on TPU)
 pq_adc        — fused PQ ADC scan: LUT build + one-hot code gather + top-k
 graph_beam    — fused neighbor gather + L2 + beam merge (one batched HNSW hop)
 """
+from .common import NEG_INF, PAD_ID, PAD_PENALTY, canonicalize_pads
 from .embedding_bag.ops import embedding_bag
 from .flash_decode.ops import flash_decode
 from .graph_beam.ops import graph_beam
@@ -14,5 +15,6 @@ from .l2_topk.ops import l2_topk
 from .pq_adc.ops import pq_adc
 from .rae_encode.ops import rae_encode
 
-__all__ = ["embedding_bag", "flash_decode", "graph_beam", "l2_topk",
+__all__ = ["NEG_INF", "PAD_ID", "PAD_PENALTY", "canonicalize_pads",
+           "embedding_bag", "flash_decode", "graph_beam", "l2_topk",
            "pq_adc", "rae_encode"]

@@ -1,1 +1,3 @@
-from .ops import *  # noqa
+from .ops import embedding_bag
+
+__all__ = ["embedding_bag"]

@@ -1,1 +1,3 @@
-from .ops import *  # noqa
+from .ops import flash_decode
+
+__all__ = ["flash_decode"]

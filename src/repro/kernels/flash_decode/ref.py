@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..common import NEG_INF
+
 
 def flash_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      cur_len: jax.Array | int) -> jax.Array:
@@ -15,6 +17,6 @@ def flash_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     qs = q.astype(jnp.float32) * scale
     scores = jnp.einsum("bkgd,bskd->bkgs", qs, k_cache.astype(jnp.float32))
     mask = jnp.arange(s)[None, None, None, :] < cur_len
-    scores = jnp.where(mask, scores, -1e30)
+    scores = jnp.where(mask, scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))

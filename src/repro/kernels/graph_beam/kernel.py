@@ -32,7 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..l2_topk.kernel import NEG_INF, _set_col, _topk_update
+from ..common import NEG_INF
+from ..l2_topk.kernel import _set_col, _topk_update
 
 
 def _kernel(safe_ref, raw_ref, q_ref, row_ref, rsq_ref, bv_ref, bi_ref,

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-NEG_INF = -1e30
+from ..common import NEG_INF, canonicalize_pads
 
 
 def graph_beam_ref(queries: np.ndarray, db: np.ndarray, nbr_ids: np.ndarray,
@@ -65,5 +65,4 @@ def graph_beam_ref(queries: np.ndarray, db: np.ndarray, nbr_ids: np.ndarray,
     # canonical pad slots: (NEG_INF, -1) — empty beam slots arrive as -inf
     # and masked candidates as NEG_INF; emitting one sentinel keeps the two
     # impls (and repeated merges of the same beam) bitwise aligned
-    out_v[out_i < 0] = NEG_INF
-    return out_v, out_i
+    return canonicalize_pads(out_v, out_i)

@@ -1,1 +1,3 @@
-from .ops import *  # noqa
+from .ops import l2_topk
+
+__all__ = ["l2_topk"]

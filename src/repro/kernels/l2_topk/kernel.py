@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from ..common import NEG_INF
 
 
 def _topk_update(run_v, run_i, cand_v, cand_i, k: int):

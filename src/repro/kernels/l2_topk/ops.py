@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..common import PAD_PENALTY
 from .kernel import l2_topk_pallas
 from .ref import l2_topk_ref
 
@@ -45,7 +46,7 @@ def l2_topk(queries: jax.Array, db: jax.Array, k: int,
         d_sq = jnp.sum(dp * dp, axis=-1)
     if dpad:  # padded rows must never win
         n_real = d.shape[0]
-        d_sq = jnp.where(jnp.arange(dp.shape[0]) < n_real, d_sq, 1e30)
+        d_sq = jnp.where(jnp.arange(dp.shape[0]) < n_real, d_sq, PAD_PENALTY)
     vals, idx = l2_topk_pallas(qp, dp, d_sq, k, bq=bq, bn=bn,
                                interpret=interpret)
     vals = vals[: q.shape[0]]

@@ -1,1 +1,3 @@
-from .ops import *  # noqa
+from .ops import pq_adc
+
+__all__ = ["pq_adc"]

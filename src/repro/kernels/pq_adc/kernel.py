@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..l2_topk.kernel import NEG_INF, _topk_update
+from ..common import NEG_INF
+from ..l2_topk.kernel import _topk_update
 
 
 def _kernel(q_ref, cb_ref, codes_ref, pen_ref, vals_ref, idx_ref,

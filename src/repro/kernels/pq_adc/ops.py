@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..common import PAD_PENALTY
 from .kernel import pq_adc_pallas
 from .ref import pq_adc_ref
 
@@ -46,7 +47,7 @@ def pq_adc(queries: jax.Array, codebooks: jax.Array, codes: jax.Array,
     else:
         qp, _ = _pad_rows(q, bq)
         cp, npad = _pad_rows(codes.astype(jnp.int32), bn)
-        penalty = jnp.where(jnp.arange(cp.shape[0]) < n, 0.0, 1e30)
+        penalty = jnp.where(jnp.arange(cp.shape[0]) < n, 0.0, PAD_PENALTY)
         vals, idx = pq_adc_pallas(qp, cb.reshape(m * ksub, dsub), cp,
                                   penalty.astype(jnp.float32), k_eff,
                                   m=m, ksub=ksub, dsub=dsub, bq=bq, bn=bn,

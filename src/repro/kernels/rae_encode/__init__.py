@@ -1,1 +1,3 @@
-from .ops import *  # noqa
+from .ops import rae_encode
+
+__all__ = ["rae_encode"]

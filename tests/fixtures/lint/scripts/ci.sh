@@ -1,0 +1,3 @@
+#!/usr/bin/env bash
+# Fixture CI: registers "offkern" only, so `badkern` trips unregistered-ci.
+REQUIRED_KERNELS=(offkern)

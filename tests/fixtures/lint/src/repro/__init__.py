@@ -1,0 +1,3 @@
+# Seeded-violation package for tests/test_analysis.py. Named `repro` so
+# the checkers' package-rooted conventions (repro.kernels.* triples,
+# VectorIndex subclasses) apply verbatim. Never imported — analyzed only.

@@ -1,0 +1,6 @@
+"""Cross-module purity bait: reached from a jit root in impure.py."""
+import numpy as np
+
+
+def to_host(x):
+    return np.array(x)  # host-numpy, two call-graph hops from the root

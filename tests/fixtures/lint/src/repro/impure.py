@@ -1,0 +1,34 @@
+"""Every jit-purity rule, seeded once (plus one suppressed finding)."""
+import functools
+import random
+import time
+
+import jax
+import numpy as np
+
+from . import hostutil
+
+
+@jax.jit
+def impure_decorated(x):
+    print("tracing", x)            # host-print
+    t = time.time()                # host-time
+    r = random.random()            # host-random
+    v = x.sum().item()             # host-concretize
+    for s in {1, 2, 3}:            # set-iteration
+        v += s
+    return hostutil.to_host(x) + t + r + v
+
+
+def _inner(x):
+    return np.asarray(x)           # host-numpy, via the call site below
+
+
+def make_jitted():
+    return jax.jit(functools.partial(_inner))
+
+
+@jax.jit
+def pragma_escape(x):
+    print("dbg")  # lint: ignore[host-print]
+    return x

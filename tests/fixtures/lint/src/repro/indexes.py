@@ -1,0 +1,51 @@
+"""Every fingerprint-coverage rule, seeded once."""
+
+
+class VectorIndex:
+    """Stand-in root: the checker matches base classes by name."""
+
+    kind = "abstract"
+
+    @property
+    def ntotal(self):
+        raise NotImplementedError
+
+    def _fingerprint_state(self):
+        raise NotImplementedError
+
+    def save(self, directory):
+        raise NotImplementedError
+
+
+class BadIndex(VectorIndex):
+    # "ghost" is never assigned anywhere -> stale-exemption
+    _fp_exempt = {"ghost": "left over from a deleted attribute"}
+
+    def __init__(self):
+        self.metric = "euclidean"
+        self.mystery = 3           # never hashed/exempt -> fingerprint-missing
+        self._db = None
+
+    @property
+    def ntotal(self):
+        return 0 if self._db is None else len(self._db)
+
+    def _fingerprint_state(self):
+        return [self.metric, self._db]
+
+    def save(self, directory):
+        return {"db": self._db}    # metric hashed, not saved -> save-coverage
+
+
+class WeirdIndex(VectorIndex):
+    _fp_exempt = ["nope"]          # not {str: str} -> unknown-exemption
+
+    def __init__(self):
+        self.x = 1
+
+    @property
+    def ntotal(self):
+        return 1
+
+    def _fingerprint_state(self):
+        return [self.x]

@@ -1,0 +1,1 @@
+# Deliberately re-exports nothing -> missing-reexport for every triple.

@@ -1,0 +1,1 @@
+# Deliberately empty -> missing-reexport. The triple also ships no ref.py.

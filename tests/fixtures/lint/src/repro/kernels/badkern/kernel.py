@@ -1,0 +1,16 @@
+"""pad-sentinel redefinition + a host construct inside a pallas root."""
+import functools
+
+import jax.experimental.pallas as pl
+
+NEG_INF = -1e30  # local redefinition -> pad-sentinel
+
+
+def _body(x_ref, o_ref):
+    print("kernel trace")  # host-print, reached via the pallas_call root
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def badkern_pallas(x):
+    kern = functools.partial(_body)
+    return pl.pallas_call(kern, out_shape=x)(x)

@@ -1,0 +1,3 @@
+"""The one legal home for pad sentinels (mirrors the real common.py)."""
+NEG_INF = -1e30
+PAD_PENALTY = 1e30

@@ -1,0 +1,3 @@
+from .ops import offkern
+
+__all__ = ["offkern"]

@@ -1,0 +1,2 @@
+def offkern(q, db, k, impl="auto", bq=128, interpret=False):
+    return q, db, k, impl, bq, interpret

@@ -1,0 +1,3 @@
+# Renamed second parameter -> signature-mismatch (ops says `db`).
+def offkern_ref(q, database, k):
+    return q, database, k

@@ -1,0 +1,5 @@
+# Fixture parity harness: registers "offkern" only, so `badkern` trips
+# unregistered-parity. Never collected (tests/fixtures is norecursedirs).
+PARITY_CASES = [
+    ("offkern", "base", {}, None),
+]

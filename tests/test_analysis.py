@@ -1,0 +1,213 @@
+"""The static-analysis suite, tested both ways.
+
+Against ``tests/fixtures/lint`` — a seeded-violation tree where every
+checker rule fires exactly once (twice where the fixture plants two) —
+the checkers must report precisely the planted set: no misses, no
+extras. Against the real repo, they must report *nothing*: that test is
+the pytest binding of the lint gate, so a PR that introduces an impure
+jit function, an incomplete kernel triple, or an unhashed index
+attribute fails the plain test run even before ``scripts/ci.sh`` runs
+``scripts/lint.py``.
+
+The CLI's exit-code contract (0 clean / 1 findings / 2 usage) and
+``--format json`` shape are pinned via subprocess, same style as
+``scripts/check_bench.py``'s tests.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from collections import Counter
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import CHECKERS, run_checks
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURE = REPO / "tests" / "fixtures" / "lint"
+LINT = REPO / "scripts" / "lint.py"
+
+#: every (checker, rule, path) the fixture plants — exact, with counts
+EXPECTED = Counter({
+    ("jit-purity", "host-print", "src/repro/impure.py"): 1,
+    ("jit-purity", "host-time", "src/repro/impure.py"): 1,
+    ("jit-purity", "host-random", "src/repro/impure.py"): 1,
+    ("jit-purity", "host-concretize", "src/repro/impure.py"): 1,
+    ("jit-purity", "set-iteration", "src/repro/impure.py"): 1,
+    # np.asarray in _inner, reached through a jax.jit(partial(...)) site
+    ("jit-purity", "host-numpy", "src/repro/impure.py"): 1,
+    # np.array two call-graph hops away, in another module
+    ("jit-purity", "host-numpy", "src/repro/hostutil.py"): 1,
+    # print inside a pl.pallas_call kernel body
+    ("jit-purity", "host-print", "src/repro/kernels/badkern/kernel.py"): 1,
+    ("fingerprint", "fingerprint-missing", "src/repro/indexes.py"): 1,
+    ("fingerprint", "save-coverage", "src/repro/indexes.py"): 1,
+    ("fingerprint", "stale-exemption", "src/repro/indexes.py"): 1,
+    ("fingerprint", "unknown-exemption", "src/repro/indexes.py"): 1,
+    ("kernel-contract", "missing-file",
+     "src/repro/kernels/badkern/ref.py"): 1,
+    ("kernel-contract", "missing-symbol",
+     "src/repro/kernels/offkern/kernel.py"): 1,
+    ("kernel-contract", "signature-mismatch",
+     "src/repro/kernels/offkern/ref.py"): 1,
+    ("kernel-contract", "missing-reexport",
+     "src/repro/kernels/badkern/__init__.py"): 1,
+    # the kernels package re-exports neither triple
+    ("kernel-contract", "missing-reexport",
+     "src/repro/kernels/__init__.py"): 2,
+    # NEG_INF = -1e30 trips both the redefinition and the raw literal
+    ("kernel-contract", "pad-sentinel",
+     "src/repro/kernels/badkern/kernel.py"): 2,
+    ("kernel-contract", "pad-sentinel",
+     "src/repro/kernels/badkern/ops.py"): 1,
+    ("kernel-contract", "unregistered-parity", "tests/test_kernels.py"): 1,
+    ("kernel-contract", "unregistered-ci", "scripts/ci.sh"): 1,
+})
+
+
+@pytest.fixture(scope="module")
+def fixture_findings():
+    return run_checks(str(FIXTURE / "src"), repo_root=str(FIXTURE))
+
+
+def _lint(*args):
+    return subprocess.run([sys.executable, str(LINT), *args],
+                          capture_output=True, text=True, cwd=REPO)
+
+
+# ---------------------------------------------------------------------------
+# checkers vs the seeded fixture
+# ---------------------------------------------------------------------------
+def test_fixture_findings_exact(fixture_findings):
+    got = Counter((f.checker, f.rule, f.path) for f in fixture_findings)
+    assert got == EXPECTED
+
+
+def test_pragma_suppresses_only_its_line(fixture_findings):
+    prints = [f for f in fixture_findings
+              if f.path == "src/repro/impure.py" and f.rule == "host-print"]
+    # two prints are planted; the one tagged `lint: ignore[host-print]`
+    # (in pragma_escape) must not survive
+    assert len(prints) == 1
+    src = (FIXTURE / "src/repro/impure.py").read_text().splitlines()
+    assert "print" in src[prints[0].line - 1]
+    assert "ignore" not in src[prints[0].line - 1]
+
+
+def test_findings_carry_root_context(fixture_findings):
+    by_line = {(f.path, f.rule): f for f in fixture_findings}
+    deep = by_line[("src/repro/hostutil.py", "host-numpy")]
+    # the report names the jit root, not just the construct, so the
+    # reader knows WHY host code two modules away is traced
+    assert "impure_decorated" in deep.message
+    pallas = by_line[("src/repro/kernels/badkern/kernel.py", "host-print")]
+    assert "pallas_call" in pallas.message
+
+
+def test_checker_selection(fixture_findings):
+    only_fp = run_checks(str(FIXTURE / "src"), repo_root=str(FIXTURE),
+                         checkers=["fingerprint"])
+    assert {f.checker for f in only_fp} == {"fingerprint"}
+    assert len(only_fp) == sum(
+        1 for f in fixture_findings if f.checker == "fingerprint")
+
+
+def test_unknown_checker_rejected():
+    with pytest.raises(ValueError, match="unknown checker"):
+        run_checks(str(FIXTURE / "src"), repo_root=str(FIXTURE),
+                   checkers=["typo"])
+
+
+# ---------------------------------------------------------------------------
+# the gate itself: this repo must lint clean
+# ---------------------------------------------------------------------------
+def test_repo_is_clean():
+    findings = run_checks(str(REPO / "src"), repo_root=str(REPO))
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# CLI contract (exit codes + JSON shape)
+# ---------------------------------------------------------------------------
+def test_cli_clean_repo_exits_0():
+    proc = _lint("--format", "json")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(proc.stdout)
+    assert payload["count"] == 0 and payload["findings"] == []
+    assert payload["checkers"] == list(CHECKERS)
+
+
+def test_cli_findings_exit_1_with_json():
+    proc = _lint("--root", str(FIXTURE), "--format", "json")
+    assert proc.returncode == 1
+    payload = json.loads(proc.stdout)
+    assert payload["count"] == sum(EXPECTED.values()) == \
+        len(payload["findings"])
+    f = payload["findings"][0]
+    assert set(f) >= {"path", "line", "checker", "rule", "message"}
+
+
+def test_cli_text_output_lists_findings():
+    proc = _lint("--root", str(FIXTURE))
+    assert proc.returncode == 1
+    assert "[kernel-contract/missing-file]" in proc.stdout
+    assert proc.stdout.strip().endswith(
+        f"lint: {sum(EXPECTED.values())} finding(s) "
+        "[jit-purity, kernel-contract, fingerprint]")
+
+
+def test_cli_usage_errors_exit_2():
+    assert _lint("--checker", "bogus").returncode == 2
+    assert _lint("--root", "/nonexistent/place").returncode == 2
+
+
+# ---------------------------------------------------------------------------
+# check_bench.py shares the exit-code + --format json convention
+# ---------------------------------------------------------------------------
+CHECK_BENCH = REPO / "scripts" / "check_bench.py"
+
+
+def _bench_dirs(tmp_path, cand_recall):
+    rows = [{"name": "flat", "recall@10": 0.95, "qps": 120.0}]
+    for side, recall in (("base", 0.95), ("cand", cand_recall)):
+        d = tmp_path / side
+        d.mkdir()
+        (d / "BENCH_toy.json").write_text(json.dumps(
+            {"rows": [dict(rows[0], **{"recall@10": recall})]}))
+    return tmp_path / "base", tmp_path / "cand"
+
+
+def _check_bench(*args):
+    return subprocess.run([sys.executable, str(CHECK_BENCH), *args],
+                          capture_output=True, text=True, cwd=REPO)
+
+
+def test_check_bench_json_clean_exits_0(tmp_path):
+    base, cand = _bench_dirs(tmp_path, cand_recall=0.95)
+    proc = _check_bench("--baseline", str(base), "--candidate", str(cand),
+                        "--format", "json")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(proc.stdout)
+    assert payload["count"] == 0 and payload["failures"] == []
+    assert payload["benches"] == [{"name": "toy", "baseline_rows": 1,
+                                   "candidate_rows": 1, "failures": []}]
+
+
+def test_check_bench_json_regression_exits_1(tmp_path):
+    base, cand = _bench_dirs(tmp_path, cand_recall=0.80)
+    proc = _check_bench("--baseline", str(base), "--candidate", str(cand),
+                        "--format", "json")
+    assert proc.returncode == 1
+    payload = json.loads(proc.stdout)
+    assert payload["count"] == 1 == len(payload["failures"])
+    assert "recall@10" in payload["failures"][0]
+
+
+def test_check_bench_usage_errors_exit_2(tmp_path):
+    assert _check_bench("--baseline", str(tmp_path / "nope"),
+                        "--candidate", str(tmp_path / "nope"),
+                        "--format", "json").returncode == 2
+    assert _check_bench("--baseline", ".", "--format", "bogus") \
+        .returncode == 2

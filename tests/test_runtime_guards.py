@@ -1,0 +1,136 @@
+"""Runtime guards: retrace budgets and transfer traps on the hot path.
+
+Two dynamic invariants the static checkers can't prove:
+
+1. **Warm means warm.** After ``SearchEngine.warmup()``, a mixed-size
+   concurrent query storm triggers ZERO additional XLA compiles — the
+   pow2 bucket padding really does confine the jit cache to the warmed
+   shapes. Guarded by :func:`repro.analysis.runtime.no_retrace`, which
+   counts backend-compile monitoring events (fires per compile incl.
+   retraces, never on a cache hit).
+
+2. **No implicit h2d traffic.** Off-TPU, the scan tiers' hot path runs
+   under ``jax.transfer_guard_host_to_device("disallow")``: staging
+   queries via an explicit ``jnp.asarray`` is legal, but a numpy array
+   leaking directly into a jitted call (a silent per-call copy) raises.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.runtime import (RetraceError, compile_count,
+                                    no_host_to_device, no_retrace)
+from repro.api.index import FlatIndex
+from repro.api.quantized import SQ8Index
+from repro.serve.engine import SearchEngine
+
+pytestmark = pytest.mark.timeout(120)
+
+
+def _corpus(n=256, d=16, seed=0):
+    return np.random.default_rng(seed).standard_normal((n, d)) \
+        .astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# no_retrace primitive
+# ---------------------------------------------------------------------------
+def test_counter_observes_compiles():
+    f = jax.jit(lambda x: x * 2 + 1)
+    before = compile_count()
+    f(jnp.ones((3, 7)))
+    assert compile_count() > before
+
+
+def test_no_retrace_passes_warm_and_counts():
+    f = jax.jit(lambda x: x * 3)
+    x = jnp.ones((2, 5))
+    y = x + 1  # eager ops compile tiny executables too — stage outside
+    f(x)  # warm
+    with no_retrace(budget=0) as used:
+        f(x)
+        f(y)  # same shape/dtype: cache hit
+        assert used() == 0
+
+
+def test_no_retrace_raises_over_budget():
+    f = jax.jit(lambda x: x - 1)
+    with pytest.raises(RetraceError, match="budget 0"):
+        with no_retrace(budget=0, what="cold call"):
+            f(jnp.ones((4, 9)))  # first call must compile
+
+
+def test_no_retrace_budget_allows_expected_compiles():
+    f = jax.jit(lambda x: x / 2)
+    x = jnp.ones((5, 11))  # jnp.ones compiles a fill — stage outside
+    with no_retrace(budget=1):
+        f(x)  # exactly the budgeted compile
+
+
+# ---------------------------------------------------------------------------
+# the serving invariant: warmup covers every bucket the storm can hit
+# ---------------------------------------------------------------------------
+def test_engine_storm_zero_compiles_after_warmup():
+    index = FlatIndex().build(_corpus())
+    engine = SearchEngine(index, max_batch=8, max_wait_ms=1.0)
+    engine.start().warmup(ks=(5,))
+    rng = np.random.default_rng(1)
+    queries = rng.standard_normal((40, 16)).astype(np.float32)
+    try:
+        # 8 threads x distinct queries: the scheduler coalesces them into
+        # whatever batch sizes timing produces; every padded bucket (pow2
+        # up to max_batch) must already be compiled
+        with no_retrace(budget=0, what="warm mixed-size storm"):
+            with ThreadPoolExecutor(max_workers=8) as pool:
+                results = list(pool.map(
+                    lambda q: engine.search_one(q, k=5), queries))
+        assert len(results) == 40
+        assert all(r.indices.shape == (1, 5) for r in results)
+    finally:
+        engine.stop()
+
+
+# ---------------------------------------------------------------------------
+# transfer guard: explicit staging legal, implicit per-call copies not
+# ---------------------------------------------------------------------------
+def test_transfer_guard_blocks_implicit_h2d():
+    f = jax.jit(lambda x: x + 0.0)
+    f(jnp.ones(4))  # warm, so the failure below is the transfer, not trace
+    with pytest.raises(Exception, match="[Dd]isallow"):
+        with no_host_to_device():
+            f(np.ones(4, np.float32))
+
+
+@pytest.mark.parametrize("make", [FlatIndex, SQ8Index],
+                         ids=["flat", "sq8"])
+def test_scan_hot_path_clean_under_transfer_guard(make):
+    corpus = _corpus()
+    index = make().build(corpus)
+    q = _corpus(6, 16, seed=2)
+    index.search(q, 5)  # warm outside the guard
+    with no_host_to_device():
+        res = index.search(q, 5)
+    assert res.indices.shape == (6, 5)
+    # exact tier sanity: nearest neighbor of a corpus row is itself
+    if isinstance(index, FlatIndex):
+        with no_host_to_device():
+            self_hit = index.search(corpus[:3], 1)
+        assert list(self_hit.indices[:, 0]) == [0, 1, 2]
+
+
+def test_engine_serving_clean_under_transfer_guard():
+    index = FlatIndex().build(_corpus())
+    engine = SearchEngine(index, max_batch=4, max_wait_ms=1.0)
+    engine.start().warmup(ks=(5,))
+    try:
+        with no_host_to_device():
+            res = engine.search_one(np.asarray(_corpus(1, 16, seed=3)[0]),
+                                    k=5)
+        assert res.indices.shape == (1, 5)
+    finally:
+        engine.stop()
