@@ -1,0 +1,201 @@
+"""Table 6 (beyond paper): sharded million-vector serving — the scale axis.
+
+The corpus the paper's 20k-point tables never touch: >= 1M vectors, RAE
+128->64 reduced, partitioned across IVF shards and served scatter-gather
+through ``ShardedIndex`` + ``SearchEngine``. The deliberately ragged
+default (``n = 1_000_003``, prime) means every shard count hits the
+tail-row path the legacy distributed layer used to drop.
+
+What each row reports (and scripts/check_bench.py gates):
+
+* ``recall_at_k`` vs the exact full-space scan — every ``Shard<S>`` row
+  must stay within 0.01 of its unsharded twin in the SAME file: the
+  deterministic merge is lossless by contract, so sharding may not cost
+  recall beyond IVF's own approximation.
+* ``engine_qps`` / ``latency_ms_p50`` / ``latency_ms_p99`` through the
+  micro-batching engine; p99 must stay under ``config["p99_budget_ms"]``.
+* ``bytes_per_shard`` — the largest single-shard payload, the number
+  that must fit one worker; gated under ``config["shard_bytes_budget"]``.
+
+The committed ``results/BENCH_sharded.json`` is the full-scale run (this
+bench is NOT rerun by ``CI_BENCH=1``'s quick gate — at 1M rows it is a
+release-cadence bench; reruns compare equal to their own snapshot).
+
+CPU-budget smoke: ``python -m benchmarks.table6_sharded --quick``
+(n=20003, a few hundred RAE steps) finishes in minutes.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core.metrics import recall_at_k
+from repro.data import synthetic
+from repro.serve import SearchEngine
+
+from .run import write_bench
+from .table5_serve import _client_pool
+
+
+def _build_stack(reducer, spec: str, rerank_factor: int,
+                 index_kw: dict) -> api.VectorIndex:
+    """Materialize ``RAE..,{Shard<S>,}IVF..,Rerank..`` around the shared
+    pre-fitted reducer (index_factory would refit RAE per spec)."""
+    parsed = api.parse_index_spec(spec)
+    if parsed.shards:
+        base: api.VectorIndex = api.ShardedIndex(
+            n_shards=parsed.shards, child_spec=f"IVF{parsed.n_cells}",
+            index_kw=dict(index_kw))
+    else:
+        base = api.IVFFlatIndex(n_cells=parsed.n_cells, **index_kw)
+    return api.TwoStageIndex(reducer, base, rerank_factor=rerank_factor)
+
+
+def run(n: int = 1_000_003, dim: int = 128, m_reduce: int = 64,
+        n_cells: int = 256, shard_counts: tuple = (2, 8),
+        n_requests: int = 256, n_clients: int = 32, k: int = 10,
+        max_batch: int = 16, max_wait_ms: float = 4.0,
+        rae_steps: int = 600, fit_rows: int = 100_000,
+        rerank_factor: int = 4, kmeans_iters: int = 6, seed: int = 0,
+        repeats: int = 2, p99_budget_ms: float = 0.0,
+        shard_bytes_budget: float = 0.0, quick: bool = False) -> list[dict]:
+    if quick:
+        n, rae_steps, n_cells = 20_003, 300, 64
+        fit_rows = min(fit_rows, n)
+        repeats = max(repeats, 3)
+    t0 = time.perf_counter()
+    corpus = synthetic.embedding_corpus(n, dim, n_clusters=64,
+                                        intrinsic=dim // 4, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    queries = corpus[rng.integers(0, n, n_requests)] + \
+        0.01 * rng.standard_normal((n_requests, dim)).astype(np.float32)
+    print(f"corpus [{n}, {dim}] in {time.perf_counter() - t0:.1f}s "
+          f"({corpus.nbytes / 2**20:.0f} MiB)")
+
+    t0 = time.perf_counter()
+    gt = api.FlatIndex().build(corpus).search(queries, k).indices
+    print(f"exact ground truth in {time.perf_counter() - t0:.1f}s")
+
+    print(f"fitting RAE {dim}->{m_reduce} ({rae_steps} steps on "
+          f"{min(fit_rows, n)} rows) once, shared across stacks")
+    reducer = api.make_reducer("rae", m_reduce, steps=rae_steps, seed=seed)
+    reducer.fit(corpus[:fit_rows])
+
+    specs = [f"RAE{m_reduce},IVF{n_cells},Rerank{rerank_factor}"] + \
+        [f"RAE{m_reduce},Shard{s},IVF{n_cells},Rerank{rerank_factor}"
+         for s in shard_counts]
+    index_kw = {"kmeans_iters": kmeans_iters}
+    rows = []
+    for spec in specs:
+        index = _build_stack(reducer, spec, rerank_factor, index_kw)
+        t0 = time.perf_counter()
+        index.build(corpus)
+        build_s = time.perf_counter() - t0
+        sharded = getattr(index, "base", None)
+        if isinstance(sharded, api.ShardedIndex):
+            bytes_per_shard = float(sharded.bytes_per_shard)
+            shard_count = sharded.shard_count
+        else:  # unsharded twin: the whole reduced corpus is one "shard"
+            bytes_per_shard = float(index.base.ntotal
+                                    * index.base.bytes_per_vector)
+            shard_count = 1
+
+        engine = SearchEngine(index, max_batch=max_batch,
+                              max_wait_ms=max_wait_ms, cache_size=0)
+        with engine:
+            engine.warmup(dim=dim, ks=(k,))
+            eng_s, eng_idx = min((_client_pool(engine, queries, k,
+                                               n_clients)
+                                  for _ in range(repeats)),
+                                 key=lambda r: r[0])
+            stats = engine.stats()
+        eng_qps = n_requests / eng_s
+        recall = recall_at_k(eng_idx, gt)
+
+        row = {"spec": spec, "k": k, "n": n,
+               "recall_at_k": round(recall, 4),
+               "engine_qps": round(eng_qps, 1),
+               "latency_ms_p50": stats["latency_ms"]["p50"],
+               "latency_ms_p99": stats["latency_ms"]["p99"],
+               "bytes_per_shard": bytes_per_shard,
+               "shard_count": shard_count,
+               "build_s": round(build_s, 1)}
+        rows.append(row)
+        print(f"{spec:34s} recall@{k}={recall:.4f} "
+              f"engine={eng_qps:7.1f} qps  p99={row['latency_ms_p99']:.1f} ms"
+              f"  {bytes_per_shard / 2**20:.0f} MiB/shard "
+              f"(S={shard_count}, build {build_s:.0f}s)")
+
+    # budgets default to measured-with-headroom so the committed snapshot
+    # gates itself: 3x p99 absorbs runner noise, 1.5x bytes catches a
+    # partitioner that silently stops balancing
+    shard_rows = [r for r in rows if r["shard_count"] > 1]
+    if not p99_budget_ms:
+        p99_budget_ms = round(3.0 * max(r["latency_ms_p99"]
+                                        for r in shard_rows), 1)
+    if not shard_bytes_budget:
+        shard_bytes_budget = float(int(1.5 * max(r["bytes_per_shard"]
+                                                 for r in shard_rows)))
+    print(f"budgets: p99 <= {p99_budget_ms} ms, "
+          f"<= {shard_bytes_budget / 2**20:.0f} MiB/shard")
+    write_bench("sharded", rows,
+                config={"n": n, "dim": dim, "m_reduce": m_reduce,
+                        "n_cells": n_cells,
+                        "shard_counts": list(shard_counts),
+                        "n_requests": n_requests, "n_clients": n_clients,
+                        "k": k, "max_batch": max_batch,
+                        "max_wait_ms": max_wait_ms,
+                        "rae_steps": rae_steps, "fit_rows": fit_rows,
+                        "rerank_factor": rerank_factor,
+                        "kmeans_iters": kmeans_iters, "seed": seed,
+                        "repeats": repeats,
+                        "p99_budget_ms": p99_budget_ms,
+                        "shard_bytes_budget": shard_bytes_budget,
+                        "quick": quick})
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1_000_003,
+                    help="corpus rows (prime default: always ragged)")
+    ap.add_argument("--dim", type=int, default=128)
+    ap.add_argument("--m-reduce", type=int, default=64)
+    ap.add_argument("--n-cells", type=int, default=256)
+    ap.add_argument("--shards", type=str, default="2,8",
+                    help="comma-separated shard counts to bench")
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=4.0)
+    ap.add_argument("--rae-steps", type=int, default=600)
+    ap.add_argument("--fit-rows", type=int, default=100_000,
+                    help="corpus subsample the RAE fits on")
+    ap.add_argument("--rerank-factor", type=int, default=4)
+    ap.add_argument("--kmeans-iters", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--p99-budget-ms", type=float, default=0.0,
+                    help="0 = derive 3x measured p99")
+    ap.add_argument("--shard-bytes-budget", type=float, default=0.0,
+                    help="0 = derive 1.5x measured bytes_per_shard")
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU-budget smoke: n=20003, 300 RAE steps")
+    a = ap.parse_args(argv)
+    run(n=a.n, dim=a.dim, m_reduce=a.m_reduce, n_cells=a.n_cells,
+        shard_counts=tuple(int(s) for s in a.shards.split(",")),
+        n_requests=a.requests, n_clients=a.clients, k=a.k,
+        max_batch=a.max_batch, max_wait_ms=a.max_wait_ms,
+        rae_steps=a.rae_steps, fit_rows=a.fit_rows,
+        rerank_factor=a.rerank_factor, kmeans_iters=a.kmeans_iters,
+        seed=a.seed, repeats=a.repeats, p99_budget_ms=a.p99_budget_ms,
+        shard_bytes_budget=a.shard_bytes_budget, quick=a.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -39,6 +39,15 @@ on its own: the graph tier is the paper's flagship reduce-then-graph
 deployment and is gated per-tier, not sheltered by the scan tiers'
 best-of.
 
+Sharded-specific gates: when ``BENCH_sharded`` is checked, every
+``Shard<S>`` row must (a) stay within ``SHARDED_RECALL_TOL`` (absolute)
+of its unsharded twin's ``recall_at_k`` IN THE SAME candidate file — the
+scatter-gather merge is supposed to be lossless, so cross-spec drift is
+a correctness bug, not noise; (b) keep ``latency_ms_p99`` under the
+file's ``config["p99_budget_ms"]``; and (c) keep ``bytes_per_shard``
+under ``config["shard_bytes_budget"]`` — the whole point of sharding a
+million-vector corpus is bounding per-worker memory.
+
 Exit status: 0 = all gates pass, 1 = regression (details on stdout),
 2 = usage/schema error. Wired into scripts/ci.sh behind ``CI_BENCH=1``.
 ``--format json`` emits the same verdict machine-readably (one object
@@ -67,6 +76,9 @@ SERVE_SPEEDUP_FLOOR = 3.0
 # per-tier floor for the graph stack: the batched traversal must keep
 # paying for itself on ITS row, not hide behind the scan tiers' best-of
 HNSW_SPEEDUP_FLOOR = 2.5
+# sharded vs unsharded twin-spec recall drift: the merge is lossless by
+# contract, so this is tighter than runner noise would ever need
+SHARDED_RECALL_TOL = 0.01
 
 
 def _load(path: str) -> dict:
@@ -108,6 +120,13 @@ def _gated_metrics(row: dict) -> dict[str, tuple[float, str]]:
         elif key in QPS_KEYS:
             out[key] = (float(val), "qps")
     return out
+
+
+def _unsharded_twin(spec: str) -> str:
+    """Factory spec with the Shard<S> stage stripped — the row it must
+    match recall against."""
+    return ",".join(t for t in spec.split(",")
+                    if not t.strip().lower().startswith("shard"))
 
 
 def check_bench(name: str, baseline: dict, candidate: dict,
@@ -157,6 +176,45 @@ def check_bench(name: str, baseline: dict, candidate: dict,
                     f"serve/{r['spec']}: batched-traversal speedup "
                     f"{float(r['speedup']):.2f}x is below the per-tier "
                     f"{HNSW_SPEEDUP_FLOOR}x floor")
+    if name == "sharded":
+        cfg = candidate.get("config", {})
+        by_spec = {str(r.get("spec", "")): r for r in candidate["rows"]}
+        shard_rows = [r for r in candidate["rows"]
+                      if "shard" in str(r.get("spec", "")).lower()]
+        if not shard_rows:
+            failures.append(
+                "sharded: no Shard<S> row — the lossless-merge and "
+                "budget gates have nothing to read")
+        for r in shard_rows:
+            spec = str(r["spec"])
+            twin = by_spec.get(_unsharded_twin(spec))
+            if twin is None or "recall_at_k" not in twin:
+                failures.append(
+                    f"sharded/{spec}: unsharded twin row "
+                    f"{_unsharded_twin(spec)!r} missing — the "
+                    "lossless-merge gate has nothing to diff against")
+            elif float(r.get("recall_at_k", 0.0)) \
+                    < float(twin["recall_at_k"]) - SHARDED_RECALL_TOL:
+                failures.append(
+                    f"sharded/{spec}: recall_at_k "
+                    f"{float(r.get('recall_at_k', 0.0)):g} fell more than "
+                    f"{SHARDED_RECALL_TOL} below its unsharded twin's "
+                    f"{float(twin['recall_at_k']):g} — the scatter-gather "
+                    "merge is dropping candidates")
+            p99_budget = cfg.get("p99_budget_ms")
+            if p99_budget is not None and float(
+                    r.get("latency_ms_p99", float("inf"))) > float(p99_budget):
+                failures.append(
+                    f"sharded/{spec}: latency_ms_p99 "
+                    f"{float(r.get('latency_ms_p99', float('inf'))):g} "
+                    f"exceeds the {float(p99_budget):g} ms budget")
+            byte_budget = cfg.get("shard_bytes_budget")
+            if byte_budget is not None and float(
+                    r.get("bytes_per_shard", float("inf"))) > float(byte_budget):
+                failures.append(
+                    f"sharded/{spec}: bytes_per_shard "
+                    f"{float(r.get('bytes_per_shard', float('inf'))):g} "
+                    f"exceeds the {float(byte_budget):g}-byte budget")
     return failures
 
 

@@ -48,7 +48,7 @@ fi
 # Every suite that guards a subsystem contract must stay collected: a
 # rename/deselection that silently drops one is a coverage regression,
 # not a green build.
-REQUIRED_SUITES=(api properties kernels quantized graph serve)
+REQUIRED_SUITES=(api properties kernels quantized graph serve sharded)
 for suite in "${REQUIRED_SUITES[@]}"; do
     if ! grep -q "test_${suite}" <<<"$collect_out"; then
         echo "FATAL: tests/test_${suite}.py not collected" >&2
@@ -60,7 +60,7 @@ done
 # shared harness parametrizes test ids by kernel name) — dropping one
 # silently un-gates that kernel's pad/edge paths.
 REQUIRED_KERNELS=(l2_topk rae_encode flash_decode embedding_bag pq_adc
-                  graph_beam)
+                  graph_beam topk_merge)
 for kern in "${REQUIRED_KERNELS[@]}"; do
     if ! grep -q "${kern}" <<<"$collect_out"; then
         echo "FATAL: kernel-parity cases for ${kern} not collected" >&2
@@ -70,6 +70,12 @@ done
 
 if [ "${CI_SKIP_TESTS:-0}" != "1" ]; then
     MARKERS="${CI_MARKERS-not slow}"
+    # The slow (nightly) split exercises the device-parallel sharded path:
+    # force 8 host devices so mesh tests run on CPU-only runners. Exact
+    # match on purpose — the default "not slow" must NOT trip this.
+    if [ "${CI_MARKERS-}" = "slow" ]; then
+        export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+    fi
     if [ -n "$MARKERS" ]; then
         python -m pytest -x -q -m "$MARKERS" "$@"
     else

@@ -33,6 +33,13 @@ Rules:
 - ``save-coverage``        hashed but never read in ``save`` — a
                            saved+loaded index would fingerprint
                            differently than the live one that wrote it
+- ``child-fingerprint``    composite indexes: ``search`` delegates to
+                           child indexes held in ``self.X`` (directly,
+                           via ``self.X[i]``, or via a loop alias) but
+                           ``_fingerprint_state`` never folds the
+                           children's ``fingerprint()`` in — swapping a
+                           child would not invalidate the serving cache
+                           even though the attribute itself is "read"
 """
 from __future__ import annotations
 
@@ -115,6 +122,81 @@ def method_attr_flows(mro: list[ClassInfo], entry: str
     return stores, loads
 
 
+def delegated_attrs(mro: list[ClassInfo], entry: str, method: str
+                    ) -> set[str]:
+    """Attributes ``self.X`` that ``entry`` delegates ``method`` to,
+    reachable through the same ``self.m()`` / ``super().m()`` dispatch as
+    :func:`method_attr_flows`. Three shapes count, and a bare
+    ``obj.method`` reference (no call) counts too, so handing
+    ``child.search`` to an executor is still delegation:
+
+    - ``self.X.method``       direct child
+    - ``self.X[i].method``    child container, subscripted
+    - ``for c in self.X: c.method`` / ``[c.method() for c in self.X]``
+      loop or comprehension alias (plain ``Name`` targets; ``zip`` args
+      are matched positionally against tuple targets)
+    """
+    out: set[str] = set()
+    visited: set[int] = set()
+
+    def self_attr(node: ast.expr) -> Optional[str]:
+        if isinstance(node, ast.Subscript):
+            node = node.value
+        if isinstance(node, ast.Attribute) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == "self":
+            return node.attr
+        return None
+
+    def dispatch(start_idx: int, name: str) -> None:
+        for i in range(start_idx, len(mro)):
+            if name in mro[i].methods:
+                fn = mro[i].methods[name]
+                if id(fn) not in visited:
+                    visited.add(id(fn))
+                    walk(i, fn)
+                return
+
+    def walk(def_idx: int, fn: ast.FunctionDef) -> None:
+        aliases: dict[str, str] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.For, ast.comprehension)):
+                tgt, it = node.target, node.iter
+                iters = list(it.args) if isinstance(it, ast.Call) else [it]
+                if isinstance(tgt, ast.Name):
+                    for i2 in iters:
+                        a = self_attr(i2)
+                        if a:
+                            aliases[tgt.id] = a
+                elif isinstance(tgt, ast.Tuple) \
+                        and len(tgt.elts) == len(iters):
+                    for e, i2 in zip(tgt.elts, iters):
+                        a = self_attr(i2)
+                        if isinstance(e, ast.Name) and a:
+                            aliases[e.id] = a
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Attribute) and node.attr == method \
+                    and isinstance(node.ctx, ast.Load):
+                a = self_attr(node.value)
+                if a:
+                    out.add(a)
+                elif isinstance(node.value, ast.Name) \
+                        and node.value.id in aliases:
+                    out.add(aliases[node.value.id])
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute):
+                f = node.func
+                if isinstance(f.value, ast.Name) and f.value.id == "self":
+                    dispatch(0, f.attr)
+                elif isinstance(f.value, ast.Call) \
+                        and isinstance(f.value.func, ast.Name) \
+                        and f.value.func.id == "super":
+                    dispatch(def_idx + 1, f.attr)
+
+    dispatch(0, entry)
+    return out
+
+
 def _exemptions(mro: list[ClassInfo]
                 ) -> tuple[dict[str, str], list[Finding]]:
     """Merge ``_fp_exempt`` over the MRO, subclass entries winning."""
@@ -187,6 +269,20 @@ def check_class(ci: ClassInfo, index: ModuleIndex) -> list[Finding]:
                         "delete the exemption so it can't mask a future "
                         "coverage regression",
                 detail={"class": ci.name, "attr": attr}))
+
+    children = delegated_attrs(mro, "search", "search")
+    fp_children: set[str] = set()
+    for entry in COVER_ENTRIES:
+        fp_children |= delegated_attrs(mro, entry, "fingerprint")
+    for attr in sorted(children - fp_children - set(exempt)):
+        findings.append(Finding(
+            path=ci.module.path, line=line, checker=CHECKER,
+            rule="child-fingerprint",
+            message=f"{ci.name}.{attr} holds child index(es) search() "
+                    "delegates to, but _fingerprint_state() never folds "
+                    "their fingerprint() in — swapping a child would not "
+                    "invalidate the serving cache",
+            detail={"class": ci.name, "attr": attr}))
 
     saved = method_attr_flows(mro, "save")[1]
     if saved:

@@ -11,9 +11,11 @@ the reduced space") and every baseline/search tier the repo grew around it:
   ``IVFFlatIndex`` (coarse-quantized), ``HNSWIndex`` (graph beam search —
   sublinear per-query work, reported via ``stats["distance_evals"]``),
   the quantized storage tiers (``SQ8Index`` / ``PQIndex`` / ``IVFSQ8Index``
-  / ``IVFPQIndex`` — int8 and product codes searched with ADC), and the
+  / ``IVFPQIndex`` — int8 and product codes searched with ADC), the
   composable ``TwoStageIndex(reducer, base_index)`` that unlocks
-  RAE -> IVF/HNSW -> rerank.
+  RAE -> IVF/HNSW -> rerank, and ``ShardedIndex`` — the corpus
+  partitioned across N child indexes, searched scatter-gather with a
+  deterministic (shard-count-invariant) top-k merge.
 * :func:`index_factory` — ``index_factory("RAE64,IVF256,PQ8x8,Rerank4")``
   builds the whole stack from a spec string; ``parse_index_spec`` exposes
   the parsed form, and ``str(spec)`` renders it back canonically.
@@ -41,6 +43,7 @@ from .index import (
 )
 from .quantized import IVFPQIndex, IVFSQ8Index, PQIndex, SQ8Index
 from .graph import HNSWIndex
+from .sharded import ShardedIndex
 from .factory import IndexSpec, index_factory, parse_index_spec
 
 __all__ = [
@@ -55,6 +58,7 @@ __all__ = [
     "RAEReducer",
     "Reducer",
     "SearchResult",
+    "ShardedIndex",
     "TwoStageIndex",
     "VectorIndex",
     "get_reducer",

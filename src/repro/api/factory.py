@@ -2,9 +2,10 @@
 
 Grammar (comma-separated stages, case-insensitive)::
 
-    spec     := [reducer ","] stack ["," rerank]
+    spec     := [reducer ","] [shard ","] stack ["," rerank]
     stack    := base | quant | base "," quant
     reducer  := ("RAE" | "PCA" | "RP" | "MDS" | "ISOMAP" | "UMAP") out_dim
+    shard    := "Shard" n_shards            # partition the stack N ways
     base     := "Flat" | "IVF" n_cells | "HNSW" M
     quant    := "SQ8" | "PQ" m "x" bits     # bits in 1..8; scan bases only
     rerank   := "Rerank" factor             # requires a reducer stage
@@ -18,6 +19,10 @@ Stage semantics:
   coarse cells probed ``nprobe`` at a time (``IVF``), or hierarchical
   graph beam search (``HNSW``, degree cap ``M`` — sublinear per-query
   work; stores raw f32 vectors, so no quant stage composes with it).
+* ``shard`` — partitions the corpus across ``n_shards`` copies of the
+  storage stack (``ShardedIndex``); per-shard top-k merges through the
+  deterministic scatter-gather kernel, so results are bitwise invariant
+  to the shard count. ``"Shard8"`` alone shards a flat scan 8 ways.
 * ``quant`` — how vectors are *stored*: f32 (absent), per-dim int8
   scalar codes (``SQ8``), or m-subspace product codes searched with ADC
   (``PQ8x8`` = 8 subspaces x 8 bits = 8 bytes/vector). A quant stage with
@@ -38,12 +43,14 @@ Examples::
     index_factory("RAE64,IVF256,Rerank4")       # the full paper stack
     index_factory("RAE64,HNSW32,Rerank4")       # graph over reduced space
     index_factory("RAE64,IVF256,PQ8x8,Rerank4") # + PQ list payloads
+    index_factory("RAE64,Shard8,IVF256,Rerank4")# sharded serving tier
 
 ``parse_index_spec`` exposes the parsed form for callers that need to
 inspect a spec (serving flags, benchmarks) without building anything.
 """
 from __future__ import annotations
 
+import dataclasses
 import re
 from dataclasses import dataclass
 from typing import Any, Optional
@@ -53,6 +60,7 @@ from .graph import HNSWIndex
 from .index import FlatIndex, IVFFlatIndex, TwoStageIndex, VectorIndex
 from .quantized import IVFPQIndex, IVFSQ8Index, PQIndex, SQ8Index
 from .reducer import list_reducers, make_reducer
+from .sharded import ShardedIndex
 
 _TOKEN = re.compile(r"^([A-Za-z_]+?)(\d+)?$")
 _PQ = re.compile(r"^pq(\d+)x(\d+)$", re.IGNORECASE)
@@ -73,11 +81,14 @@ class IndexSpec:
     pq_bits: int = 0                  # pq only: bits per code
     rerank_factor: int = 1
     hnsw_m: int = 0                   # hnsw only: degree cap M
+    shards: int = 0                   # 0 = unsharded
 
     def __str__(self) -> str:
         parts = []
         if self.reducer is not None:
             parts.append(f"{self.reducer.upper()}{self.out_dim}")
+        if self.shards:
+            parts.append(f"Shard{self.shards}")
         if self.base == "ivf":
             parts.append(f"IVF{self.n_cells}")
         elif self.base == "hnsw":
@@ -109,6 +120,7 @@ def parse_index_spec(spec: str) -> IndexSpec:
     pq_m = pq_bits = 0
     rerank = 0
     hnsw_m = 0
+    shards = 0
 
     def check_order(stage):
         if rerank:
@@ -159,6 +171,18 @@ def parse_index_spec(spec: str) -> IndexSpec:
                 _fail(spec, "multiple base stages")
             check_order("base")
             base, hnsw_m = "hnsw", int(num)
+        elif name == "shard":
+            if num is None:
+                _fail(spec, "Shard needs a shard count, e.g. Shard8")
+            if int(num) < 1:
+                _fail(spec, f"Shard needs at least one shard, got {tok!r}")
+            if shards:
+                _fail(spec, "multiple Shard stages")
+            if base is not None or quant is not None:
+                _fail(spec, "Shard must come before the base stage "
+                            "(it partitions the storage stack)")
+            check_order("base")
+            shards = int(num)
         elif name == "rerank":
             if num is None:
                 _fail(spec, "Rerank needs a factor, e.g. Rerank4")
@@ -171,14 +195,14 @@ def parse_index_spec(spec: str) -> IndexSpec:
                             f"e.g. {name.upper()}64")
             if reducer is not None:
                 _fail(spec, "multiple reducer stages")
-            if base is not None or quant is not None:
+            if base is not None or quant is not None or shards:
                 _fail(spec, "reducer must come before the base stage")
             reducer, out_dim = name, int(num)
         else:
             _fail(spec, f"unknown stage {tok!r} "
                         f"(reducers: {list_reducers()}; bases: flat, ivf, "
                         f"hnsw; quantizers: sq8, pq<m>x<bits>)")
-    if base is None and quant is None:
+    if base is None and quant is None and not shards:
         _fail(spec, "no base stage (Flat, IVF<n>, HNSW<M>, SQ8 or "
                     "PQ<m>x<bits>)")
     if base == "hnsw" and quant is not None:
@@ -191,7 +215,7 @@ def parse_index_spec(spec: str) -> IndexSpec:
     return IndexSpec(reducer=reducer, out_dim=out_dim, base=base or "flat",
                      n_cells=n_cells, quant=quant, pq_m=pq_m,
                      pq_bits=pq_bits, rerank_factor=rerank or 1,
-                     hnsw_m=hnsw_m)
+                     hnsw_m=hnsw_m, shards=shards)
 
 
 def _make_base(parsed: IndexSpec, metric: str, ctx: MeshCtx,
@@ -231,7 +255,19 @@ def index_factory(spec: str, *, metric: str = "euclidean",
     on the result.
     """
     parsed = parse_index_spec(spec)
-    base = _make_base(parsed, metric, ctx, dict(index_kw or {}))
+    if parsed.shards:
+        child_spec = str(dataclasses.replace(
+            parsed, reducer=None, out_dim=0, shards=0, rerank_factor=1))
+        # device-parallel fan-out only covers the flat f32 scan; anything
+        # fancier gets independent per-shard children on the thread pool
+        mesh_ok = (ctx.mesh is not None and parsed.base == "flat"
+                   and parsed.quant is None)
+        base: VectorIndex = ShardedIndex(
+            n_shards=parsed.shards, child_spec=child_spec, metric=metric,
+            ctx=ctx, workers="mesh" if mesh_ok else "threads",
+            index_kw=dict(index_kw or {}))
+    else:
+        base = _make_base(parsed, metric, ctx, dict(index_kw or {}))
     if parsed.reducer is None:
         return base
     reducer = make_reducer(parsed.reducer, parsed.out_dim,

@@ -229,6 +229,59 @@ def zlib_crc(s: str) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Corpus partitioning (sharded serving)
+# ---------------------------------------------------------------------------
+
+def partition_rows(n: int, n_shards: int) -> list[np.ndarray]:
+    """Contiguous, balanced row ranges: shard i gets ``n // n_shards`` rows
+    (+1 for the first ``n % n_shards`` shards), so a ragged corpus never
+    drops its tail. Returns int32 global-row-id arrays, ascending within
+    each shard (the merge tie-break contract relies on this)."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    n_shards = min(n_shards, max(n, 1))
+    base, rem = divmod(n, n_shards)
+    parts, start = [], 0
+    for i in range(n_shards):
+        size = base + (1 if i < rem else 0)
+        parts.append(np.arange(start, start + size, dtype=np.int32))
+        start += size
+    return parts
+
+
+def partition_ivf_cells(corpus: np.ndarray, n_shards: int, n_cells: int = 0,
+                        kmeans_iters: int = 10, seed: int = 0
+                        ) -> list[np.ndarray]:
+    """Cluster the corpus into k-means cells and bin-pack whole cells onto
+    shards (largest cell first, onto the lightest shard) so co-located
+    vectors land on the same shard while shard sizes stay balanced.
+    Row ids ascend within each shard; every row lands on exactly one
+    shard (disjoint cover, validated by tests)."""
+    from ..search.ivf import kmeans  # local: search imports this package
+
+    n = int(corpus.shape[0])
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    n_shards = min(n_shards, max(n, 1))
+    if n_shards == 1:
+        return [np.arange(n, dtype=np.int32)]
+    n_cells = min(n_cells or 8 * n_shards, n)
+    _, assign = kmeans(jnp.asarray(corpus, jnp.float32), n_cells,
+                       iters=kmeans_iters, seed=seed)
+    assign = np.asarray(assign)
+    members = [np.flatnonzero(assign == c) for c in range(n_cells)]
+    order = np.argsort([-len(m) for m in members], kind="stable")
+    loads = np.zeros(n_shards, np.int64)
+    buckets: list[list[np.ndarray]] = [[] for _ in range(n_shards)]
+    for c in order:
+        s = int(np.argmin(loads))
+        buckets[s].append(members[c])
+        loads[s] += len(members[c])
+    return [np.sort(np.concatenate(b)).astype(np.int32) if b
+            else np.empty(0, np.int32) for b in buckets]
+
+
+# ---------------------------------------------------------------------------
 # Activation sharding helpers
 # ---------------------------------------------------------------------------
 

@@ -6,6 +6,7 @@ flash_decode  — split-KV online-softmax decode attention
 embedding_bag — scalar-prefetch gather-reduce (torch EmbeddingBag on TPU)
 pq_adc        — fused PQ ADC scan: LUT build + one-hot code gather + top-k
 graph_beam    — fused neighbor gather + L2 + beam merge (one batched HNSW hop)
+topk_merge    — deterministic scatter-gather top-k merge (sharded search)
 """
 from .common import NEG_INF, PAD_ID, PAD_PENALTY, canonicalize_pads
 from .embedding_bag.ops import embedding_bag
@@ -14,7 +15,8 @@ from .graph_beam.ops import graph_beam
 from .l2_topk.ops import l2_topk
 from .pq_adc.ops import pq_adc
 from .rae_encode.ops import rae_encode
+from .topk_merge.ops import topk_merge
 
 __all__ = ["NEG_INF", "PAD_ID", "PAD_PENALTY", "canonicalize_pads",
            "embedding_bag", "flash_decode", "graph_beam", "l2_topk",
-           "pq_adc", "rae_encode"]
+           "pq_adc", "rae_encode", "topk_merge"]

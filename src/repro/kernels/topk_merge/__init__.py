@@ -1,0 +1,3 @@
+from .ops import topk_merge
+
+__all__ = ["topk_merge"]

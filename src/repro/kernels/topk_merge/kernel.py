@@ -1,0 +1,95 @@
+"""Fused scatter-gather top-k merge Pallas TPU kernel.
+
+The global merge of sharded search: each of S shards contributes its local
+top-k ``(values, global ids)``; this kernel reduces the gathered [Q, S*k]
+candidate slab to the global [Q, k] *deterministically* — ties broken by
+the smaller global id, never by gather order — so the answer is invariant
+to the shard count (the serving-layer contract, docs/sharded_serving.md).
+
+Same branchless structure as ``l2_topk``'s ``_topk_update`` (k sweeps of
+max/select/mask on the VPU — heaps don't vectorize, k reductions do), with
+one extra min-reduction per sweep for the id tie-break: the sweep first
+takes the max value m, then the smallest id among candidates at m, then
+masks exactly that entry. Pad slots (id < 0) are pinned to ``NEG_INF`` /
+``_ID_MAX`` up front so they lose both reductions.
+
+Grid: (Q/bq,) — the candidate width S*k is small (hundreds), so each block
+holds its whole row slab in VMEM; no streaming axis needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import NEG_INF, PAD_ID
+from ..l2_topk.kernel import _set_col
+
+#: selected/pad tie-break id: loses every "smaller id wins" min-reduction
+_ID_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _merge_rows(v, tb, k: int):
+    """[bq, C] candidates -> ([bq, k] vals, [bq, k] tie-break ids).
+    ``tb`` must already have pads pinned to ``_ID_MAX`` (and their values
+    to ``NEG_INF``); live ids unique per row."""
+    bq = v.shape[0]
+    outv = jnp.full((bq, k), NEG_INF, jnp.float32)
+    outi = jnp.full((bq, k), _ID_MAX, jnp.int32)
+
+    def body(j, carry):
+        v, tb, outv, outi = carry
+        m = jnp.max(v, axis=1)                              # [bq]
+        cand = jnp.where(v == m[:, None], tb, _ID_MAX)
+        sel = jnp.min(cand, axis=1)                         # smallest id at m
+        outv = _set_col(outv, j, m)
+        outi = _set_col(outi, j, sel)
+        hit = (v == m[:, None]) & (tb == sel[:, None])      # exactly one live
+        v = jnp.where(hit, NEG_INF, v)
+        tb = jnp.where(hit, _ID_MAX, tb)
+        return v, tb, outv, outi
+
+    _, _, outv, outi = jax.lax.fori_loop(0, k, body, (v, tb, outv, outi))
+    return outv, outi
+
+
+def _kernel(v_ref, i_ref, out_v_ref, out_i_ref, *, k: int):
+    v = v_ref[...]
+    i = i_ref[...]
+    pad = i < 0
+    v = jnp.where(pad, NEG_INF, v)
+    tb = jnp.where(pad, _ID_MAX, i)
+    outv, outi = _merge_rows(v, tb, k)
+    # a sweep that drained the live pool emits the canonical pad sentinel
+    exhausted = outi == _ID_MAX
+    out_v_ref[...] = jnp.where(exhausted, NEG_INF, outv)
+    out_i_ref[...] = jnp.where(exhausted, PAD_ID, outi)
+
+
+def topk_merge_pallas(vals: jax.Array, ids: jax.Array, k: int, *,
+                      bq: int = 128, interpret: bool = False
+                      ) -> tuple[jax.Array, jax.Array]:
+    """vals [Q, C] f32, ids [Q, C] int32 (C >= k; ops.py pads), Q % bq == 0.
+    Returns ([Q, k] vals, [Q, k] global ids) in deterministic order."""
+    qn, c = vals.shape
+    grid = (qn // bq,)
+    kernel = functools.partial(_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, c), lambda i: (i, 0)),
+            pl.BlockSpec((bq, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, k), jnp.float32),
+            jax.ShapeDtypeStruct((qn, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(vals, ids)

@@ -1,0 +1,41 @@
+"""Jit'd public wrapper: platform dispatch + row/width padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import NEG_INF, PAD_ID
+from .kernel import topk_merge_pallas
+from .ref import topk_merge_ref
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl", "bq", "interpret"))
+def topk_merge(vals: jax.Array, ids: jax.Array, k: int, impl: str = "auto",
+               bq: int = 128, interpret: bool = False
+               ) -> tuple[jax.Array, jax.Array]:
+    """Deterministic scatter-gather top-k merge.
+
+    ``vals``/``ids`` are the [Q, C] gathered per-shard candidates (C is
+    typically k * n_shards; ``ids < 0`` = pad; live ids unique per row —
+    shards are disjoint). Returns (vals [Q, k], ids [Q, k]) ordered by
+    (value desc, global id asc); exhausted slots are ``(NEG_INF, PAD_ID)``.
+    The id tie-break makes the result invariant to how candidates were
+    scattered across shards — see docs/sharded_serving.md.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    v = vals.astype(jnp.float32)
+    i = ids.astype(jnp.int32)
+    if impl == "ref":
+        return topk_merge_ref(v, i, k)
+
+    qn, c = v.shape
+    qpad = (-qn) % bq
+    cpad = (-max(c, k)) % 128 + max(0, k - c)  # lane multiple AND >= k wide
+    if qpad or cpad:
+        v = jnp.pad(v, ((0, qpad), (0, cpad)), constant_values=NEG_INF)
+        i = jnp.pad(i, ((0, qpad), (0, cpad)), constant_values=PAD_ID)
+    out_v, out_i = topk_merge_pallas(v, i, k, bq=bq, interpret=interpret)
+    return out_v[:qn], out_i[:qn]

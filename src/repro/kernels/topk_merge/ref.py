@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the scatter-gather top-k merge.
+
+The deterministic order is lexicographic: value descending, then global id
+ascending. A per-row ``lexsort`` over ``(tie-break id, -value)`` realizes
+exactly that, so the oracle is independent of ``lax.top_k``'s (unspecified
+across backends) tie behavior.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..common import NEG_INF, PAD_ID
+
+#: tie-break id for pad slots: loses every "smaller id wins" comparison
+_ID_MAX = jnp.iinfo(jnp.int32).max
+
+
+def topk_merge_ref(vals: jnp.ndarray, ids: jnp.ndarray, k: int
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge per-shard candidates into the global top-k.
+
+    ``vals``/``ids`` are [Q, C] (C = k * n_shards candidates per query);
+    ``ids < 0`` marks pad slots. Live ids must be unique per row (shards
+    are disjoint). Returns (vals [Q, k], ids [Q, k]) sorted by
+    (value desc, id asc); slots past the live candidates come back as
+    ``(NEG_INF, PAD_ID)``.
+    """
+    v = jnp.asarray(vals, jnp.float32)
+    i = jnp.asarray(ids, jnp.int32)
+    pad = i < 0
+    v = jnp.where(pad, NEG_INF, v)
+    tb = jnp.where(pad, _ID_MAX, i)
+    if v.shape[1] < k:  # fewer candidates than requested: pad the pool
+        extra = k - v.shape[1]
+        v = jnp.pad(v, ((0, 0), (0, extra)), constant_values=NEG_INF)
+        tb = jnp.pad(tb, ((0, 0), (0, extra)), constant_values=_ID_MAX)
+    order = jnp.lexsort((tb, -v), axis=1)[:, :k]
+    out_v = jnp.take_along_axis(v, order, axis=1)
+    out_tb = jnp.take_along_axis(tb, order, axis=1)
+    out_i = jnp.where(out_tb == _ID_MAX, PAD_ID, out_tb)
+    out_v = jnp.where(out_tb == _ID_MAX, NEG_INF, out_v)
+    return out_v, out_i

@@ -3,50 +3,106 @@
 The corpus is row-sharded over every mesh axis ("db_rows"). Each shard runs
 the fused distance+top-k kernel (Pallas on TPU; jnp oracle elsewhere) over
 its slab; the global merge all-gathers only the per-shard (k values,
-k global indices) — k * n_shards scalars — and reduces with one final top_k.
+k global indices) — k * n_shards scalars — and reduces them with the
+deterministic ``topk_merge`` kernel.
+
+Three invariants (regression-tested in tests/test_sharded.py) that the
+original version of this module violated:
+
+* **ragged corpora** — when ``n % n_shards != 0`` the corpus is padded up
+  to ``n_shards * ceil(n / n_shards)`` rows and pad rows are pinned to
+  ``NEG_INF`` / ``PAD_ID`` before they can reach the merge; global ids are
+  mapped with the padded slab size, so no tail row is dropped or mislabeled.
+* **small shards** — per-shard ``top_k`` is clamped to the slab size and
+  padded back to ``k`` with ``(NEG_INF, PAD_ID)`` (the ``l2_topk``
+  convention), so ``k > n_loc`` cannot crash ``lax.top_k``.
+* **deterministic merge** — score ties break by the smaller global index
+  (``topk_merge``), never by gather order, so the result is bitwise
+  invariant to the shard count.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 
+from ..distributed.partitioning import _flat_axes
+from ..kernels.common import NEG_INF, PAD_ID
+from ..kernels.topk_merge.ops import topk_merge
 from ..models.common import MeshCtx
 
 
+def _padded_topk(s: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """``lax.top_k`` along the last axis, clamped to the axis size and
+    padded back to ``k`` with ``(NEG_INF, PAD_ID)`` when k overflows it."""
+    n = s.shape[-1]
+    kl = min(k, n)
+    v, i = jax.lax.top_k(s, kl)
+    if kl < k:
+        pad = k - kl
+        v = jnp.concatenate(
+            [v, jnp.full((*v.shape[:-1], pad), NEG_INF, v.dtype)], -1)
+        i = jnp.concatenate(
+            [i, jnp.full((*i.shape[:-1], pad), PAD_ID, i.dtype)], -1)
+    return v, i
+
+
 def local_topk_scores(scores: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
-    return jax.lax.top_k(scores, k)
+    return _padded_topk(scores, k)
+
+
+def _shard_axes(ctx: MeshCtx, logical: str) -> tuple[tuple[str, ...], int]:
+    """Mesh axes a logical name shards over, WITHOUT the divisibility
+    filter of ``usable_axes`` — ragged sizes are handled by padding the
+    slab, not by silently degrading to replication."""
+    if ctx.mesh is None:
+        return (), 1
+    axes = tuple(a for a in _flat_axes(ctx.rules.get(logical))
+                 if a in ctx.mesh.shape and ctx.mesh.shape[a] > 1)
+    return axes, math.prod(ctx.mesh.shape[a] for a in axes) if axes else 1
+
+
+def _linear_shard_index(mesh, axes) -> jax.Array:
+    shard = jnp.zeros((), jnp.int32)
+    for a in axes:
+        shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
+    return shard
 
 
 def distributed_topk(scores: jax.Array, k: int, ctx: MeshCtx,
                      logical: str = "db_rows") -> tuple[jax.Array, jax.Array]:
     """scores [N] (higher=better), row-sharded -> (vals [k], global idx [k])."""
     n = scores.shape[0]
-    if ctx.mesh is None or ctx.shards_for(n, logical) == 1:
-        return jax.lax.top_k(scores, k)
+    axes, n_shards = _shard_axes(ctx, logical)
+    if n_shards == 1:
+        return _padded_topk(scores, k)
 
     mesh = ctx.mesh
-    axes = ctx.used_axes(n, logical)
-    n_shards = 1
-    for a in axes:
-        n_shards *= mesh.shape[a]
-    n_loc = n // n_shards
-    s_spec = ctx.pspec((n,), logical)
+    n_loc = -(-n // n_shards)           # ceil: last shard may be ragged
+    n_pad = n_loc * n_shards
+    if n_pad > n:
+        scores = jnp.pad(scores, (0, n_pad - n), constant_values=NEG_INF)
+    kl = min(k, n_loc)
+    s_spec = ctx.pspec((n_pad,), logical)
     r_spec = ctx.pspec((k,))
 
     def f(s_l):
-        v, i = jax.lax.top_k(s_l, k)
-        shard = jnp.zeros((), jnp.int32)
-        for a in axes:
-            shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
+        v, i = jax.lax.top_k(s_l, kl)
+        shard = _linear_shard_index(mesh, axes)
         gi = i + shard * n_loc
+        v = jnp.where(gi < n, v, NEG_INF)       # pad rows never win
+        gi = jnp.where(gi < n, gi, PAD_ID)
+        if kl < k:
+            v = jnp.concatenate(
+                [v, jnp.full((k - kl,), NEG_INF, v.dtype)])
+            gi = jnp.concatenate(
+                [gi, jnp.full((k - kl,), PAD_ID, gi.dtype)])
         vs = jax.lax.all_gather(v, axes, axis=0, tiled=True)   # [k*n_shards]
         gis = jax.lax.all_gather(gi, axes, axis=0, tiled=True)
-        vg, sel = jax.lax.top_k(vs, k)
-        return vg, jnp.take(gis, sel)
+        vg, ig = topk_merge(vs[None, :], gis[None, :], k)
+        return vg[0], ig[0]
 
     fn = shard_map(f, mesh=mesh, in_specs=(s_spec,),
                    out_specs=(r_spec, r_spec), check_rep=False)
@@ -76,31 +132,41 @@ def search(queries: jax.Array, db: jax.Array, k: int, ctx: MeshCtx,
            metric: str = "euclidean") -> tuple[jax.Array, jax.Array]:
     """Exact k-NN: returns (scores [Q, k], indices [Q, k])."""
     n = db.shape[0]
-    if ctx.mesh is None or ctx.shards_for(n, "db_rows") == 1:
+    axes, n_shards = _shard_axes(ctx, "db_rows")
+    if n_shards == 1:
         s = sharded_scores(queries, db, metric, ctx)
-        return jax.lax.top_k(s, k)
+        return _padded_topk(s, k)
 
     mesh = ctx.mesh
-    axes = ctx.used_axes(n, "db_rows")
-    n_shards = 1
-    for a in axes:
-        n_shards *= mesh.shape[a]
-    n_loc = n // n_shards
+    n_loc = -(-n // n_shards)           # ceil: last shard may be ragged
+    n_pad = n_loc * n_shards
+    if n_pad > n:
+        db = jnp.pad(db, ((0, n_pad - n), (0, 0)))
+    kl = min(k, n_loc)
     q_spec = ctx.pspec(queries.shape)          # queries replicated
-    db_spec = ctx.pspec(db.shape, "db_rows", None)
+    db_spec = ctx.pspec((n_pad, db.shape[1]), "db_rows", None)
     out_spec = ctx.pspec((queries.shape[0], k))
 
     def f(q_l, db_l):
         s = sharded_scores(q_l, db_l, metric, MeshCtx(mesh=None))
-        v, i = jax.lax.top_k(s, k)  # [Q, k] local
-        shard = jnp.zeros((), jnp.int32)
-        for a in axes:
-            shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
-        gi = i + shard * n_loc
+        shard = _linear_shard_index(mesh, axes)
+        # pin pad rows BEFORE the local top-k: a padded (zero) row must
+        # not displace a real candidate inside the shard
+        grow = shard * n_loc + jnp.arange(s.shape[1], dtype=jnp.int32)
+        s = jnp.where(grow[None, :] < n, s, NEG_INF)
+        v, i = jax.lax.top_k(s, kl)             # [Q, kl] local
+        gi = shard * n_loc + i
+        v = jnp.where(gi < n, v, NEG_INF)
+        gi = jnp.where(gi < n, gi, PAD_ID)
+        if kl < k:
+            pad = k - kl
+            v = jnp.concatenate(
+                [v, jnp.full((v.shape[0], pad), NEG_INF, v.dtype)], 1)
+            gi = jnp.concatenate(
+                [gi, jnp.full((gi.shape[0], pad), PAD_ID, gi.dtype)], 1)
         vs = jax.lax.all_gather(v, axes, axis=1, tiled=True)   # [Q, k*S]
         gis = jax.lax.all_gather(gi, axes, axis=1, tiled=True)
-        vg, sel = jax.lax.top_k(vs, k)
-        return vg, jnp.take_along_axis(gis, sel, axis=1)
+        return topk_merge(vs, gis, k)
 
     fn = shard_map(f, mesh=mesh, in_specs=(q_spec, db_spec),
                    out_specs=(out_spec, out_spec), check_rep=False)

@@ -382,7 +382,8 @@ class SearchEngine:
         out["index"] = {"kind": self.index.kind,
                         "ntotal": self.index.ntotal,
                         "fingerprint": self._fingerprint,
-                        "bytes_per_vector": self.index.bytes_per_vector}
+                        "bytes_per_vector": self.index.bytes_per_vector,
+                        "shards": getattr(self.index, "shard_count", None)}
         out["scheduler"] = {"max_batch": self.max_batch,
                             "max_wait_ms": self.max_wait_ms,
                             "buckets": self.buckets,

@@ -49,3 +49,30 @@ class WeirdIndex(VectorIndex):
 
     def _fingerprint_state(self):
         return [self.x]
+
+
+class ShardyIndex(VectorIndex):
+    """Composite that reads its children but never hashes their
+    fingerprints -> child-fingerprint (and nothing else: the attribute
+    itself IS read by ntotal, so fingerprint-missing stays quiet)."""
+
+    def __init__(self):
+        self.children = []
+
+    def build(self, corpus):
+        self.children = [BadIndex() for _ in range(2)]
+        return self
+
+    @property
+    def ntotal(self):
+        return sum(c.ntotal for c in self.children)
+
+    def search(self, queries, k):
+        # loop-alias delegation: child.search handed off uncalled
+        return [child.search for child in self.children]
+
+    def _fingerprint_state(self):
+        return [len(self.children)]   # counts shards, not their content
+
+    def save(self, directory):
+        return {"n": len(self.children)}

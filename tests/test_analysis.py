@@ -42,6 +42,7 @@ EXPECTED = Counter({
     ("jit-purity", "host-numpy", "src/repro/hostutil.py"): 1,
     # print inside a pl.pallas_call kernel body
     ("jit-purity", "host-print", "src/repro/kernels/badkern/kernel.py"): 1,
+    ("fingerprint", "child-fingerprint", "src/repro/indexes.py"): 1,
     ("fingerprint", "fingerprint-missing", "src/repro/indexes.py"): 1,
     ("fingerprint", "save-coverage", "src/repro/indexes.py"): 1,
     ("fingerprint", "stale-exemption", "src/repro/indexes.py"): 1,

@@ -14,13 +14,14 @@ import numpy as np
 import pytest
 
 from repro.kernels import (embedding_bag, flash_decode, graph_beam, l2_topk,
-                           pq_adc, rae_encode)
+                           pq_adc, rae_encode, topk_merge)
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.flash_decode.ref import flash_decode_ref
 from repro.kernels.graph_beam.ref import NEG_INF, graph_beam_ref
 from repro.kernels.l2_topk.ref import l2_topk_ref
 from repro.kernels.pq_adc.ref import pq_adc_ref
 from repro.kernels.rae_encode.ref import rae_encode_ref
+from repro.kernels.topk_merge.ref import topk_merge_ref
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -360,6 +361,28 @@ def _parity_pq_adc(case, dtype):
     _topk_parity(got, want, dtype, k_valid=min(k, n) if k > n else None)
 
 
+def _parity_topk_merge(case, dtype):
+    q_n, c, k, bq = case
+    rng = np.random.default_rng(q_n + c + k)
+    vals = jnp.asarray(rng.integers(-4, 4, (q_n, c)), dtype)  # dense ties
+    ids = np.stack([rng.permutation(4 * c)[:c].astype(np.int32)
+                    for _ in range(q_n)])  # unique per row (merge contract)
+    ids[rng.random((q_n, c)) < 0.15] = -1  # scattered pad slots
+    ids[0] = -1                            # fully drained row
+    ids = jnp.asarray(ids)
+    got = topk_merge(vals, ids, k, impl="pallas", bq=bq, interpret=True)
+    want = topk_merge_ref(jnp.asarray(vals, jnp.float32), ids, k)
+    # the id tie-break makes the merge a total order: bitwise, not
+    # tolerance, parity — and exactly the shard-count-invariance contract
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    v, i = np.asarray(got[0]), np.asarray(got[1])
+    kv = min(k, c)  # the k > c tail (and drained rows) is canonical padding
+    assert np.all(v[:, kv:] == NEG_INF) and np.all(i[:, kv:] == -1)
+    assert np.all(i[0] == -1) and np.all(v[0] == NEG_INF)
+    assert np.all(v[i >= 0] > NEG_INF)  # live slots never carry pad scores
+
+
 # case ids name the edge they exercise; every kernel gets n-not-divisible-
 # by-block, a k/cur overflow variant where meaningful, and d=1.
 PARITY_CASES = [
@@ -384,6 +407,11 @@ PARITY_CASES = [
     ("graph_beam", "w1", (5, 30, 8, 1, 6), _parity_graph_beam),
     ("graph_beam", "ef_gt_w", (3, 20, 4, 3, 15), _parity_graph_beam),
     ("graph_beam", "d1", (4, 25, 1, 5, 4), _parity_graph_beam),
+    # (q_n, c, k, bq): q not divisible by bq + non-lane-aligned pool,
+    # k wider than the candidate pool, single-candidate pool
+    ("topk_merge", "ragged_q", (19, 96, 8, 16), _parity_topk_merge),
+    ("topk_merge", "k_gt_c", (4, 6, 10, 8), _parity_topk_merge),
+    ("topk_merge", "c1", (5, 1, 3, 8), _parity_topk_merge),
 ]
 
 
