@@ -7,7 +7,11 @@ tier: beam search visits a few hundred nodes where Flat touches all N and
 IVF still scans nprobe full cells. The RAE space runs every base behind a
 ``TwoStageIndex`` with full-space rerank (the paper's deployment story,
 told on graph indexes like GleanVec's), reusing ONE fitted reducer so
-differences are purely the candidate-generation tier.
+differences are purely the candidate-generation tier. The RAE space also
+carries the quantized graph stacks (``...,HNSW<M>,SQ8,...`` /
+``...,HNSW<M>,PQ8x8,...``) whose hops gather codes instead of f32 rows;
+their ``traversal_gather_bytes_per_hop`` column vs the f32 twin's is the
+bandwidth win ``scripts/check_bench.py`` gates (>= 3x SQ8, >= 4x PQ).
 
 Writes ``results/BENCH_graph.json`` (schema: ``benchmarks.run.write_bench``)
 so the recall/QPS/visited-fraction trajectory is tracked across PRs.
@@ -61,10 +65,15 @@ def run(n: int = 20000, dim: int = 256, m_reduce: int = 64,
     reducer.fit(corpus)
 
     bases = ["Flat", f"IVF{n_cells}", f"HNSW{hnsw_m}"]
+    # quantized graph payloads ride the full deployment stack (reduce ->
+    # quantized traversal -> exact rerank): the Rerank stage is what makes
+    # the within-0.01-of-f32 recall gate meaningful for PQ
+    quant_bases = [f"HNSW{hnsw_m},SQ8", f"HNSW{hnsw_m},PQ8x8"]
     index_kw = {"ef_construction": ef_construction, "ef_search": ef_search}
     rows = []
     for space in ("raw", f"rae{m_reduce}"):
-        for base in bases:
+        specs = bases if space == "raw" else bases + quant_bases
+        for base in specs:
             kw = index_kw if base.startswith("HNSW") else None
             if space == "raw":
                 spec = base
@@ -89,8 +98,13 @@ def run(n: int = 20000, dim: int = 256, m_reduce: int = 64,
                    "bytes_per_vector": index.bytes_per_vector,
                    "qps": round(qps, 1), "latency_ms_p50": round(p50_ms, 3),
                    "build_s": round(build_s, 2)}
+            if "gather_bytes_per_hop" in res.stats:
+                # payload bytes each fused hop streams (codes vs f32 rows)
+                # — the bandwidth axis check_bench's graph block gates
+                row["traversal_gather_bytes_per_hop"] = round(
+                    res.stats["gather_bytes_per_hop"], 1)
             rows.append(row)
-            print(f"{space:8s} {spec:24s} recall@{k}={rec:.4f} "
+            print(f"{space:8s} {spec:28s} recall@{k}={rec:.4f} "
                   f"evals/q={evals:8.1f} ({row['visited_frac']:.1%}) "
                   f"qps={qps:8.1f} build={build_s:.1f}s")
     write_bench("graph", rows,

@@ -27,8 +27,12 @@ the batched graph traversal amortizes a fixed per-hop cost across the
 whole batch and keeps gaining — so the HNSW stack serves with
 ``2 * max_batch`` (and twice the clients), recorded per row.
 
-Sweeps {Flat, RAE<m>,IVF<c>,Rerank4, RAE<m>,HNSW<M>,Rerank4} and writes
-``results/BENCH_serve.json`` (schema: ``benchmarks.run.write_bench``).
+Sweeps {Flat, RAE<m>,IVF<c>,Rerank4, RAE<m>,HNSW<M>,Rerank4,
+RAE<m>,HNSW<M>,SQ8,Rerank4} and writes ``results/BENCH_serve.json``
+(schema: ``benchmarks.run.write_bench``). The SQ8-graph stack serves
+every request — including q=1 — on the batched traversal (quantized
+hops have no sequential engine), so its ``seq`` column measures the
+q=1-batched loop the engine replaces.
 
 CPU-budget default: ``python -m benchmarks.table5_serve --quick`` finishes
 in a few minutes at n=4096.
@@ -122,13 +126,19 @@ def run(n: int = 20000, dim: int = 256, m_reduce: int = 64,
 
     specs = ["Flat",
              f"RAE{m_reduce},IVF{n_cells},Rerank{rerank_factor}",
-             f"RAE{m_reduce},HNSW{hnsw_m},Rerank{rerank_factor}"]
+             f"RAE{m_reduce},HNSW{hnsw_m},Rerank{rerank_factor}",
+             # the quantized graph stack (ISSUE 8): hops gather SQ8 codes;
+             # q=1 requests ride the batched engine too (sequential heapq
+             # scores f32 — see api.graph), so serving parity holds
+             f"RAE{m_reduce},HNSW{hnsw_m},SQ8,Rerank{rerank_factor}"]
     rows = []
     for spec in specs:
         if spec == "Flat":
             index = api.FlatIndex()
         else:
-            base = api.index_factory(spec.split(",")[1])
+            # base = everything between the reducer and the Rerank stage
+            # (possibly multi-token, e.g. "HNSW32,SQ8")
+            base = api.index_factory(",".join(spec.split(",")[1:-1]))
             index = api.TwoStageIndex(reducer, base,
                                       rerank_factor=rerank_factor)
         t0 = time.perf_counter()

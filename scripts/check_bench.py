@@ -39,6 +39,15 @@ on its own: the graph tier is the paper's flagship reduce-then-graph
 deployment and is gated per-tier, not sheltered by the scan tiers'
 best-of.
 
+Graph-specific gates (ISSUE 8): when ``BENCH_graph`` is checked, every
+quantized HNSW row (spec carrying an ``SQ8`` / ``PQ<m>x<b>`` stage) must
+(a) report ``traversal_gather_bytes_per_hop`` at least 3x (SQ8) / 4x (PQ)
+below its f32 twin's — the same spec with the quant stage stripped, IN
+THE SAME candidate file — and (b) when the spec also carries a ``Rerank``
+stage, keep ``recall_at_k`` within 0.01 of that twin: the codes shrink
+hop traffic, the exact rerank restores ordering, and both halves of that
+bargain are gated.
+
 Sharded-specific gates: when ``BENCH_sharded`` is checked, every
 ``Shard<S>`` row must (a) stay within ``SHARDED_RECALL_TOL`` (absolute)
 of its unsharded twin's ``recall_at_k`` IN THE SAME candidate file — the
@@ -79,6 +88,12 @@ HNSW_SPEEDUP_FLOOR = 2.5
 # sharded vs unsharded twin-spec recall drift: the merge is lossless by
 # contract, so this is tighter than runner noise would ever need
 SHARDED_RECALL_TOL = 0.01
+# quantized graph tier (ISSUE 8): each quantized HNSW row must beat its
+# f32 twin's traversal gather traffic by its codec's floor, and — when a
+# Rerank stage restores exact ordering — match the twin's recall within
+# the same 0.01 the rest of the gate uses
+GRAPH_QUANT_BYTES_FLOORS = {"sq8": 3.0, "pq": 4.0}
+GRAPH_QUANT_RECALL_TOL = 0.01
 
 
 def _load(path: str) -> dict:
@@ -129,6 +144,24 @@ def _unsharded_twin(spec: str) -> str:
                     if not t.strip().lower().startswith("shard"))
 
 
+def _quant_token(spec: str) -> Optional[str]:
+    """'sq8' / 'pq' when the spec carries a quantizer stage, else None."""
+    for t in spec.split(","):
+        t = t.strip().lower()
+        if t == "sq8":
+            return "sq8"
+        if t.startswith("pq"):
+            return "pq"
+    return None
+
+
+def _unquant_twin(spec: str) -> str:
+    """Factory spec with the SQ8/PQ<m>x<b> stage stripped — the f32 graph
+    row a quantized row is gated against."""
+    return ",".join(t for t in spec.split(",")
+                    if _quant_token(t) is None)
+
+
 def check_bench(name: str, baseline: dict, candidate: dict,
                 recall_tol: float, qps_tol: float) -> list[str]:
     """Returns human-readable failure strings (empty = pass)."""
@@ -176,6 +209,47 @@ def check_bench(name: str, baseline: dict, candidate: dict,
                     f"serve/{r['spec']}: batched-traversal speedup "
                     f"{float(r['speedup']):.2f}x is below the per-tier "
                     f"{HNSW_SPEEDUP_FLOOR}x floor")
+    if name == "graph":
+        by_spec = {str(r.get("spec", "")): r for r in candidate["rows"]}
+        quant_rows = [r for r in candidate["rows"]
+                      if "HNSW" in str(r.get("spec", ""))
+                      and _quant_token(str(r.get("spec", "")))]
+        if not quant_rows:
+            failures.append(
+                "graph: no quantized HNSW row — the gather-bytes and "
+                "rerank-recall gates have nothing to read")
+        for r in quant_rows:
+            spec = str(r["spec"])
+            codec = _quant_token(spec)
+            floor = GRAPH_QUANT_BYTES_FLOORS[codec]
+            twin = by_spec.get(_unquant_twin(spec))
+            if twin is None:
+                failures.append(
+                    f"graph/{spec}: f32 twin row {_unquant_twin(spec)!r} "
+                    "missing — the quantized gates have nothing to diff "
+                    "against")
+                continue
+            mine = float(r.get("traversal_gather_bytes_per_hop", 0.0))
+            theirs = float(twin.get("traversal_gather_bytes_per_hop", 0.0))
+            if mine <= 0 or theirs <= 0:
+                failures.append(
+                    f"graph/{spec}: traversal_gather_bytes_per_hop missing "
+                    "on the quantized row or its f32 twin")
+            elif theirs / mine < floor:
+                failures.append(
+                    f"graph/{spec}: gather traffic only "
+                    f"{theirs / mine:.2f}x below the f32 twin "
+                    f"({theirs:g} -> {mine:g} bytes/hop); the {codec} "
+                    f"payload must save >= {floor}x")
+            if "rerank" in spec.lower():
+                rec, twin_rec = (float(r.get("recall_at_k", 0.0)),
+                                 float(twin.get("recall_at_k", 0.0)))
+                if rec < twin_rec - GRAPH_QUANT_RECALL_TOL:
+                    failures.append(
+                        f"graph/{spec}: post-rerank recall_at_k {rec:g} "
+                        f"fell more than {GRAPH_QUANT_RECALL_TOL} below "
+                        f"the f32 twin's {twin_rec:g} — the codec noise "
+                        "is leaking past the exact rerank")
     if name == "sharded":
         cfg = candidate.get("config", {})
         by_spec = {str(r.get("spec", "")): r for r in candidate["rows"]}

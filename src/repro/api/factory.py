@@ -7,7 +7,7 @@ Grammar (comma-separated stages, case-insensitive)::
     reducer  := ("RAE" | "PCA" | "RP" | "MDS" | "ISOMAP" | "UMAP") out_dim
     shard    := "Shard" n_shards            # partition the stack N ways
     base     := "Flat" | "IVF" n_cells | "HNSW" M
-    quant    := "SQ8" | "PQ" m "x" bits     # bits in 1..8; scan bases only
+    quant    := "SQ8" | "PQ" m "x" bits     # bits in 1..8; any base
     rerank   := "Rerank" factor             # requires a reducer stage
 
 Stage semantics:
@@ -18,16 +18,21 @@ Stage semantics:
 * ``base`` — how candidates are *found*: exact scan (``Flat``), k-means
   coarse cells probed ``nprobe`` at a time (``IVF``), or hierarchical
   graph beam search (``HNSW``, degree cap ``M`` — sublinear per-query
-  work; stores raw f32 vectors, so no quant stage composes with it).
+  work).
 * ``shard`` — partitions the corpus across ``n_shards`` copies of the
   storage stack (``ShardedIndex``); per-shard top-k merges through the
   deterministic scatter-gather kernel, so results are bitwise invariant
   to the shard count. ``"Shard8"`` alone shards a flat scan 8 ways.
 * ``quant`` — how vectors are *stored*: f32 (absent), per-dim int8
   scalar codes (``SQ8``), or m-subspace product codes searched with ADC
-  (``PQ8x8`` = 8 subspaces x 8 bits = 8 bytes/vector). A quant stage with
-  no explicit base implies ``Flat`` storage, so ``"SQ8"`` alone is a flat
-  SQ8 scan. Quantized tiers are euclidean-only.
+  (``PQ8x8`` = 8 subspaces x 8 bits = 8 bytes/vector). Composes with
+  every base: scan bases gather codes in their fused scans, and an HNSW
+  base gathers codes inside the batched beam hop (``graph_beam_q`` —
+  dequant-free asymmetric L2 for SQ8, a per-query ADC LUT for PQ), so
+  ``"RAE64,HNSW32,SQ8,Rerank4"`` cuts traversal gather bandwidth ~4x at
+  rerank-recovered recall. A quant stage with no explicit base implies
+  ``Flat`` storage, so ``"SQ8"`` alone is a flat SQ8 scan. Quantized
+  tiers are euclidean-only.
 * ``rerank`` — re-scores ``factor * k`` stage-1 candidates with exact
   full-space distances; needs a reducer (that is what defines the "full
   space" to return to).
@@ -42,6 +47,7 @@ Examples::
     index_factory("IVF256,PQ8x8")               # FAISS-style IVF-PQ (ADC)
     index_factory("RAE64,IVF256,Rerank4")       # the full paper stack
     index_factory("RAE64,HNSW32,Rerank4")       # graph over reduced space
+    index_factory("RAE64,HNSW32,SQ8,Rerank4")   # + SQ8 traversal payload
     index_factory("RAE64,IVF256,PQ8x8,Rerank4") # + PQ list payloads
     index_factory("RAE64,Shard8,IVF256,Rerank4")# sharded serving tier
 
@@ -205,9 +211,6 @@ def parse_index_spec(spec: str) -> IndexSpec:
     if base is None and quant is None and not shards:
         _fail(spec, "no base stage (Flat, IVF<n>, HNSW<M>, SQ8 or "
                     "PQ<m>x<bits>)")
-    if base == "hnsw" and quant is not None:
-        _fail(spec, "HNSW stores raw f32 vectors; quantized payloads do "
-                    "not compose with it")
     if rerank and reducer is None:
         _fail(spec, "Rerank requires a reducer stage to rerank against")
     if out_dim <= 0 and reducer is not None:
@@ -226,6 +229,12 @@ def _make_base(parsed: IndexSpec, metric: str, ctx: MeshCtx,
     if parsed.base == "hnsw":
         if metric != "euclidean":
             raise ValueError("HNSW base supports euclidean only")
+        if parsed.quant == "sq8":
+            index_kw.setdefault("quant", "sq8")
+        elif parsed.quant == "pq":
+            index_kw.setdefault("quant", "pq")
+            index_kw.setdefault("pq_m", parsed.pq_m)
+            index_kw.setdefault("pq_bits", parsed.pq_bits)
         return HNSWIndex(m=parsed.hnsw_m, **index_kw)
     if parsed.base == "ivf":
         if metric != "euclidean":

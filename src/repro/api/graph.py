@@ -39,9 +39,25 @@ returns exact reduced-space distances but can *miss* neighbors near the
 beam boundary, so ``TwoStageIndex`` widens k1 (which also widens the beam)
 and lets the full-space rerank absorb the ordering noise.
 
+**Quantized payloads** (``quant="sq8"`` / ``"pq"``; the factory's
+``"RAE64,HNSW32,SQ8,Rerank4"``): the graph is built in f32 as usual, then
+a code payload (:func:`repro.search.hnsw.make_graph_codes`) is trained
+over the same corpus and attached, and every batched hop gathers *codes*
+instead of f32 rows — 68 bytes per gathered neighbor for SQ8 at d=64, 12
+for PQ8x8, versus 260 for the f32 row+norm (the
+``stats["gather_bytes_per_hop"]`` metric the benches gate). Quantized
+scores are approximations, so a quantized index inherits its codec's
+oversample (2 for SQ8, 8 for PQ) and leans on the ``Rerank`` stage to
+recover exact ordering. All queries — including q=1 — are pinned to the
+batched engine: the sequential heapq beam scores f32 and would answer
+differently, which the serving cache's row-independence contract forbids.
+The codec state is fingerprinted (a quantized graph can never alias its
+f32 twin in the serve cache) and persisted, so a reloaded index serves
+codes without re-training.
+
 Persistence follows the house layout: ``meta.json`` + ``arrays.npz``
 holding the corpus vectors, per-node levels, the padded-dense adjacency of
-every layer, and the packed form's precomputed norms.
+every layer, the packed form's precomputed norms, and the code payload.
 """
 from __future__ import annotations
 
@@ -68,11 +84,21 @@ class HNSWIndex(VectorIndex):
                            "hashed adjacency",
         "seed": "build-time level draw; materialized in the hashed "
                 "levels/adjacency",
+        "pq_m": "codec train knob; materialized in the hashed codebook "
+                "and code-payload shapes",
+        "pq_bits": "codec train knob; materialized in the hashed "
+                   "codebook width",
+        "kmeans_iters": "codec train knob; materialized in the hashed "
+                        "codebooks",
+        "stage1_oversample": "stage-composition hint derived from quant "
+                             "(hashed); not traversal state",
     }
 
     def __init__(self, m: int = 32, ef_construction: int = 100,
                  ef_search: int = 64, seed: int = 0,
-                 batched: Union[str, bool] = "auto", frontier: int = 8):
+                 batched: Union[str, bool] = "auto", frontier: int = 8,
+                 quant: Optional[str] = None, pq_m: int = 8,
+                 pq_bits: int = 8, kmeans_iters: int = 15):
         if m < 2:
             raise ValueError(f"HNSW needs M >= 2, got {m}")
         if batched not in ("auto", True, False):
@@ -80,12 +106,30 @@ class HNSWIndex(VectorIndex):
                              f"got {batched!r}")
         if frontier < 1:
             raise ValueError(f"frontier must be >= 1, got {frontier}")
+        if quant not in (None, "sq8", "pq"):
+            raise ValueError(f"quant must be None, 'sq8' or 'pq', "
+                             f"got {quant!r}")
+        if quant == "pq":
+            if pq_m < 1:
+                raise ValueError(f"PQ needs at least one subspace, "
+                                 f"got pq_m={pq_m}")
+            if not 1 <= pq_bits <= 8:
+                raise ValueError(f"PQ bits must be in 1..8, got {pq_bits}")
+            # approximate ADC hops miss more boundary neighbors than SQ8;
+            # inherit the PQ codec's wider oversample so the Rerank stage
+            # sees enough candidates (instance override — the class attr
+            # stays 2 for f32/SQ8 graphs)
+            self.stage1_oversample = 8
         self.m = m
         self.ef_construction = ef_construction
         self.ef_search = ef_search
         self.seed = seed
         self.batched = batched
         self.frontier = frontier
+        self.quant = quant
+        self.pq_m = pq_m
+        self.pq_bits = pq_bits
+        self.kmeans_iters = kmeans_iters
         self._g: Optional[hnsw_lib.HNSWGraph] = None
 
     @property
@@ -100,12 +144,16 @@ class HNSWIndex(VectorIndex):
     def bytes_per_vector(self) -> float:
         """f32 vector + int32 link slots in every layer the node occupies
         (2M at layer 0, M per upper layer — averaged over the geometric
-        level distribution) + int32 level."""
+        level distribution) + int32 level; a quantized payload adds its
+        per-node code row + f32 bias on top (the f32 vectors stay — they
+        serve build, the sequential engine, and connectivity repair; the
+        payload shrinks what the *hop gather* streams, not total RAM)."""
         self._require_built()
         g = self._g
         upper_slots = g.M * float(g.levels.mean())
+        codec = 0.0 if g.codec is None else float(g.codec.gather_bytes)
         return float(g.vecs.shape[1] * 4
-                     + 4 * (g.links0.shape[1] + upper_slots) + 4)
+                     + 4 * (g.links0.shape[1] + upper_slots) + 4 + codec)
 
     @property
     def dim(self) -> int:
@@ -125,19 +173,42 @@ class HNSWIndex(VectorIndex):
         # the ragged sequential engine — and packing later (load, save)
         # can't shift the hash.
         g = self._g
-        return [f"ef={self.ef_search}:entry={g.entry}"
-                f":batched={self.batched}:frontier={self.frontier}",
-                g.vecs, g.links0, g.links, g.levels]
+        state = [f"ef={self.ef_search}:entry={g.entry}"
+                 f":batched={self.batched}:frontier={self.frontier}"
+                 f":quant={self.quant}",
+                 g.vecs, g.links0, g.links, g.levels]
+        if g.codec is not None:
+            # codec state is identity: two graphs differing only in their
+            # code payload answer differently, so the serve cache must
+            # never alias them (nor a quantized graph with its f32 twin)
+            c = g.codec
+            state += [c.codes, c.node_bias]
+            state += [a for a in (c.vmin, c.step, c.codebooks)
+                      if a is not None]
+        return state
 
     def build(self, corpus: np.ndarray) -> "HNSWIndex":
         self._g = hnsw_lib.build(corpus, M=self.m,
                                  ef_construction=self.ef_construction,
                                  seed=self.seed)
-        if self.batched is not False:
+        if self.quant is not None:
+            # graph construction stays f32 (insertion quality); the code
+            # payload is trained over the same corpus and swaps what the
+            # batched hop gather reads. Raises at build for impossible
+            # codecs (e.g. PQ with d % m != 0) — never a broken index.
+            self._g.codec = hnsw_lib.make_graph_codes(
+                self._g.vecs, self.quant, m=self.pq_m, bits=self.pq_bits,
+                iters=self.kmeans_iters, seed=self.seed)
+        if self.batched is not False or self.quant is not None:
             self._g.pack()  # compile the dense form once, at build time
         return self
 
     def _use_batched(self, nq: int) -> bool:
+        if self.quant is not None:
+            # code payloads only exist on the batched path; routing q=1 to
+            # the f32 heapq beam would answer differently lone vs
+            # coalesced, which the serving cache contract forbids
+            return True
         if self.batched == "auto":
             # the batched frontier loop amortizes per-hop work across the
             # batch; with nothing to amortize (q=1) the heapq beam wins
@@ -156,8 +227,17 @@ class HNSWIndex(VectorIndex):
         if self._use_batched(q.shape[0]):
             scores, idx, evals, hops = hnsw_lib.search_batched(
                 self._g, q, k_req, ef_search=ef, frontier=self.frontier)
+            g = self._g
+            row_bytes = (g.codec.gather_bytes if g.codec is not None
+                         else 4 * g.vecs.shape[1] + 4)
             stats = {"distance_evals": float(evals.mean()),
-                     "beam_hops": float(hops)}
+                     "beam_hops": float(hops),
+                     # payload bytes the traversal streamed per fused hop
+                     # (each eval gathers one row: codes+bias when
+                     # quantized, f32 row+norm otherwise) — the bandwidth
+                     # axis the graph bench gates
+                     "gather_bytes_per_hop":
+                         float(evals.sum() * row_bytes) / max(hops, 1)}
         else:
             scores, idx, evals = hnsw_lib.search(self._g, q, k_req,
                                                  ef_search=ef)
@@ -170,26 +250,44 @@ class HNSWIndex(VectorIndex):
         self._require_built()
         g = self._g
         p = g.pack()  # always persist the packed form alongside the graph
+        arrays = {"vecs": g.vecs, "levels": g.levels,
+                  "links0": g.links0, "links": g.links,
+                  "packed_vecs_sq": p.vecs_sq}
+        if g.codec is not None:
+            # trained codec state rides along so a reloaded index serves
+            # codes without re-training (k-means is seed-stable but slow)
+            arrays["codec_codes"] = g.codec.codes
+            arrays["codec_node_bias"] = g.codec.node_bias
+            if g.codec.kind == "sq8":
+                arrays["codec_vmin"] = g.codec.vmin
+                arrays["codec_step"] = g.codec.step
+            else:
+                arrays["codec_codebooks"] = g.codec.codebooks
         _save_dir(directory,
                   {"kind": self.kind, "m": self.m,
                    "ef_construction": self.ef_construction,
                    "ef_search": self.ef_search, "seed": self.seed,
                    "entry": int(g.entry), "packed": True,
-                   "batched": self.batched, "frontier": self.frontier},
+                   "batched": self.batched, "frontier": self.frontier,
+                   "quant": self.quant, "pq_m": self.pq_m,
+                   "pq_bits": self.pq_bits,
+                   "kmeans_iters": self.kmeans_iters},
                   # the packed adjacency is byte-identical to links0/links
                   # (pack() only makes them contiguous), so persisting it
                   # "alongside" means sharing their bytes: only the
-                  # packed-exclusive norms are written in addition
-                  {"vecs": g.vecs, "levels": g.levels,
-                   "links0": g.links0, "links": g.links,
-                   "packed_vecs_sq": p.vecs_sq})
+                  # packed-exclusive norms (and codec) are written extra
+                  arrays)
 
     @classmethod
     def _load(cls, directory: str, meta: dict[str, Any]) -> "HNSWIndex":
         self = cls(m=meta["m"], ef_construction=meta["ef_construction"],
                    ef_search=meta["ef_search"], seed=meta["seed"],
                    batched=meta.get("batched", "auto"),
-                   frontier=int(meta.get("frontier", 8)))
+                   frontier=int(meta.get("frontier", 8)),
+                   quant=meta.get("quant"),
+                   pq_m=int(meta.get("pq_m", 8)),
+                   pq_bits=int(meta.get("pq_bits", 8)),
+                   kmeans_iters=int(meta.get("kmeans_iters", 15)))
         a = _load_arrays(directory)
         links = a["links"]
         if links.size == 0:  # single-layer graph round-trips as [0, N, M]
@@ -204,4 +302,10 @@ class HNSWIndex(VectorIndex):
             self._g.packed = hnsw_lib.PackedHNSW(
                 nbrs0=self._g.links0, upper=self._g.links,
                 vecs_sq=a["packed_vecs_sq"])
+        if self.quant is not None:
+            self._g.codec = hnsw_lib.GraphCodes(
+                kind=self.quant, codes=a["codec_codes"],
+                node_bias=a["codec_node_bias"],
+                vmin=a.get("codec_vmin"), step=a.get("codec_step"),
+                codebooks=a.get("codec_codebooks"))
         return self

@@ -1,0 +1,127 @@
+"""Quantized gather + asymmetric-score + beam-merge Pallas TPU kernel.
+
+The quantized twin of ``graph_beam/kernel.py``: one HNSW hop whose
+neighbor gather reads stored *codes* (SQ8 or PQ payloads) instead of f32
+corpus rows — at d=64 that is 68 gathered bytes per neighbor for SQ8 and
+12 for PQ8x8 versus 260 for the f32 row+norm, which is the whole point:
+at million-vector scale the hop is bandwidth-bound on exactly this DMA.
+
+Same house idioms as the f32 hop, plus the codec algebra:
+
+* *scalar-prefetch gather*: neighbor ids prefetched into SMEM drive the
+  code-row BlockSpec index map, so each grid step DMAs exactly one code
+  row HBM->VMEM — the [Q, W, C] gather never exists;
+* scoring is the unified affine form ``contract(q_op, code_row) +
+  q_bias - node_bias`` (see ``ref.py``): SQ8 contracts the pre-scaled
+  query against the raw codes (dequant-free asymmetric L2, the
+  ``sq8_scan`` rearrangement); PQ contracts the per-query negated ADC
+  LUT against a one-hot expansion of the code row — the same
+  iota-compare one-hot-matmul gather as ``pq_adc`` (TPUs have no fast
+  arbitrary gather; they do have an MXU);
+* the beam merge reuses ``l2_topk``'s branchless ``_topk_update``;
+  masked slots (id -1) score ``NEG_INF`` and keep their -1 id.
+
+``mode``/``ksub`` are static: the sq8/pq branch is resolved at trace
+time, so each compiled kernel contains exactly one scoring form.
+
+Grid (Q, W), neighbor-slot axis innermost: TPU grids iterate
+sequentially, so the per-query candidate scratch accumulates across the
+W sweep and the merge runs once per query on the last slot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import NEG_INF
+from ..l2_topk.kernel import _set_col, _topk_update
+
+
+def _kernel(safe_ref, raw_ref, qop_ref, qb_ref, code_ref, nb_ref, bv_ref,
+            bi_ref, vout_ref, iout_ref, cv_ref, ci_ref, *, w_slots: int,
+            ef: int, mode: str, ksub: int):
+    i = pl.program_id(0)
+    w = pl.program_id(1)
+    raw = raw_ref[i * w_slots + w]
+    qop = qop_ref[...].astype(jnp.float32)               # [1, Dop]
+    c = code_ref[...]                                    # [1, C] int32
+    if mode == "sq8":
+        contrib = jnp.sum(qop * c.astype(jnp.float32))
+    else:
+        # one-hot row [m, ksub]: oh[mm, j] = (codes[mm] == j); contracting
+        # it against the flat LUT operand IS the per-subspace LUT gather
+        m = c.shape[1]
+        oh = (c.reshape(m, 1)
+              == jax.lax.broadcasted_iota(jnp.int32, (m, ksub), 1))
+        contrib = jnp.sum(qop * oh.astype(jnp.float32).reshape(1, m * ksub))
+    s = contrib + qb_ref[0] - nb_ref[0]
+    s = jnp.where(raw < 0, NEG_INF, s)
+    cv_ref[...] = _set_col(cv_ref[...], w, s.reshape(1))
+    ci_ref[...] = _set_col(ci_ref[...], w, raw.reshape(1))
+
+    @pl.when(w == w_slots - 1)
+    def _():
+        nv, ni = _topk_update(bv_ref[...].astype(jnp.float32), bi_ref[...],
+                              cv_ref[...], ci_ref[...], ef)
+        # exhausted slots re-pick the first NEG_INF tie; canonicalize them
+        # to (NEG_INF, -1) exactly like the ref
+        ni = jnp.where(nv <= NEG_INF, -1, ni)
+        nv = jnp.where(ni >= 0, nv, NEG_INF)
+        vout_ref[...] = nv
+        iout_ref[...] = ni
+
+
+def graph_beam_q_pallas(q_op: jax.Array, q_bias: jax.Array, codes: jax.Array,
+                        node_bias: jax.Array, nbr_ids: jax.Array,
+                        beam_v: jax.Array, beam_i: jax.Array, *, mode: str,
+                        ksub: int = 0, interpret: bool = False
+                        ) -> tuple[jax.Array, jax.Array]:
+    """q_op [Q, Dop] f32, q_bias [Q] f32, codes [N, C] int32 (ops.py
+    widens the stored uint8 — TPU tiling), node_bias [N] f32, nbr_ids
+    [Q, W] int32 (-1 = masked), beam_v/beam_i [Q, ef]. Returns the merged
+    beam, sorted descending. ``ops.py`` pads Q; W and ef ride as-is
+    (sub-tile blocks, same as the f32 hop)."""
+    qn, dop = q_op.shape
+    cw = codes.shape[1]
+    w_slots = nbr_ids.shape[1]
+    ef = beam_v.shape[1]
+    ids = nbr_ids.reshape(-1)
+    safe = jnp.clip(ids, 0, codes.shape[0] - 1)
+    kernel = functools.partial(_kernel, w_slots=w_slots, ef=ef, mode=mode,
+                               ksub=ksub)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # clamped ids (drive the DMA) + raw ids
+        grid=(qn, w_slots),
+        in_specs=[
+            pl.BlockSpec((1, dop), lambda i, w, safe, raw: (i, 0)),
+            pl.BlockSpec((1,), lambda i, w, safe, raw: (i,)),
+            # one code row + its bias per grid step, id-selected
+            pl.BlockSpec((1, cw),
+                         lambda i, w, safe, raw: (safe[i * w_slots + w], 0)),
+            pl.BlockSpec((1,),
+                         lambda i, w, safe, raw: (safe[i * w_slots + w],)),
+            pl.BlockSpec((1, ef), lambda i, w, safe, raw: (i, 0)),
+            pl.BlockSpec((1, ef), lambda i, w, safe, raw: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ef), lambda i, w, safe, raw: (i, 0)),
+            pl.BlockSpec((1, ef), lambda i, w, safe, raw: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, w_slots), jnp.float32),
+            pltpu.VMEM((1, w_slots), jnp.int32),
+        ],
+    )
+    vals, idx = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, ef), jnp.float32),
+            jax.ShapeDtypeStruct((qn, ef), jnp.int32),
+        ],
+        interpret=interpret,
+    )(safe, ids, q_op, q_bias, codes, node_bias, beam_v, beam_i)
+    return vals, idx

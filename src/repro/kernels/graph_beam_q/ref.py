@@ -1,0 +1,91 @@
+"""Vectorized numpy oracle for the quantized gather+score+beam-merge hop.
+
+Like ``graph_beam/ref.py`` this is deliberately numpy, not jnp: off-TPU
+the quantized batched HNSW traversal is a host-driven hop loop and this
+ref IS the production path — a jitted jnp ref would pay one dispatch per
+hop. Per-row determinism matters for the serving cache (a query answers
+identically at q=1 and inside a coalesced batch): gather, contraction and
+stable argsort all reduce row-by-row with no cross-row reassociation.
+
+The hop is codec-agnostic by design. Both supported payloads reduce to
+"contract a per-query operand against the gathered code row, then shift
+by per-query / per-node constants"::
+
+    score[q, w] = contract(q_op[q], codes[id]) + q_bias[q] - node_bias[id]
+
+* ``mode="sq8"`` — dequant-free asymmetric L2 (the ``sq8_scan`` form from
+  ``repro.search.quantize``): callers pass ``q_op = 2 q * step``,
+  ``q_bias = 2 q . vmin - ||q||^2`` and ``node_bias = ||decode(c)||^2``,
+  so the contraction is a plain dot against the raw uint8 codes and the
+  score comes out as ``-||q - decode(c)||^2`` without ever materializing
+  a dequantized row.
+* ``mode="pq"`` — ADC: callers pass ``q_op`` = the NEGATED per-query LUT
+  (``-adc_lut(codebooks, q)`` flattened to ``[Q, m*ksub]``) and zero
+  biases; the contraction sums ``m`` LUT entries selected by the code
+  row, yielding ``-ADC distance``. ``ksub`` names the LUT stride (the
+  codebook width, which may be < 2**bits on tiny corpora).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..common import NEG_INF, canonicalize_pads
+
+
+def graph_beam_q_ref(q_op: np.ndarray, q_bias: np.ndarray,
+                     codes: np.ndarray, node_bias: np.ndarray,
+                     nbr_ids: np.ndarray, beam_v: np.ndarray,
+                     beam_i: np.ndarray, mode: str = "sq8", ksub: int = 0
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """One batched quantized beam hop: score candidate ids against code
+    payloads and merge into the beam.
+
+    q_op [Q, Dop] f32 per-query operand (sq8: Dop = d; pq: Dop = m*ksub);
+    q_bias [Q] f32; codes [N, C] uint8 stored payload (sq8: C = d; pq:
+    C = m); node_bias [N] f32 per-node constant (sq8: recon ||.||^2; pq:
+    zeros); nbr_ids [Q, W] int32 with -1 = masked slot; beam_v/beam_i
+    [Q, ef] the running beam, sorted descending. Returns the merged
+    (values, ids), ef wide, sorted descending, pads canonicalized to
+    (NEG_INF, -1) — identical merge semantics (stable ties toward the
+    beam, then lower candidate slot) to ``graph_beam_ref``, so the f32
+    and quantized hops are drop-in interchangeable for the traversal.
+    """
+    if mode not in ("sq8", "pq"):
+        raise ValueError(f"graph_beam_q: mode must be 'sq8' or 'pq', "
+                         f"got {mode!r}")
+    if mode == "pq" and ksub < 1:
+        raise ValueError("graph_beam_q: pq mode needs ksub >= 1 (the LUT "
+                         "stride)")
+    q_op = np.asarray(q_op, np.float32)
+    q_bias = np.asarray(q_bias, np.float32)
+    codes = np.asarray(codes)
+    nb = np.asarray(node_bias, np.float32)
+    ids = np.asarray(nbr_ids, np.int32)
+    bv = np.asarray(beam_v, np.float32)
+    bi = np.asarray(beam_i, np.int32)
+    ef = bv.shape[1]
+    valid = ids >= 0
+    safe = np.where(valid, ids, 0)
+    g = codes[safe]                                      # [Q, W, C]
+    if mode == "sq8":
+        if q_op.shape[1] != codes.shape[1]:
+            raise ValueError(f"graph_beam_q: sq8 operand dim "
+                             f"{q_op.shape[1]} != code dim {codes.shape[1]}")
+        s = np.einsum("qwd,qd->qw", g.astype(np.float32), q_op)
+    else:
+        m = codes.shape[1]
+        if q_op.shape[1] != m * ksub:
+            raise ValueError(f"graph_beam_q: pq operand dim {q_op.shape[1]}"
+                             f" != m*ksub = {m * ksub}")
+        offs = g.astype(np.int64) + np.arange(m, dtype=np.int64) * ksub
+        rq = np.arange(q_op.shape[0])[:, None, None]
+        s = q_op[rq, offs].sum(-1)                       # [Q, W]
+    s = (s + q_bias[:, None] - nb[safe]).astype(np.float32, copy=False)
+    s[~valid] = NEG_INF
+    allv = np.concatenate([bv, s], axis=1)
+    alli = np.concatenate([bi, np.where(valid, ids, -1)], axis=1)
+    order = np.argsort(-allv, axis=1, kind="stable")[:, :ef]
+    rr = np.arange(bv.shape[0])[:, None]
+    out_v = allv[rr, order]
+    out_i = alli[rr, order]
+    return canonicalize_pads(out_v, out_i)

@@ -32,6 +32,13 @@ engines share those semantics:
   are bitwise-deterministic and row-independent (a query answers the same
   at q=1 and inside any batch, which the serving cache relies on).
 
+The batched engine optionally traverses *quantized* payloads: attach a
+:class:`GraphCodes` (SQ8 or PQ codes trained by :func:`make_graph_codes`)
+as ``graph.codec`` and every hop gathers code rows instead of f32 vectors,
+scoring via dequant-free asymmetric L2 / a per-query ADC LUT through the
+``graph_beam_q`` kernel triple — a 4–20x cut in gather bytes per hop, with
+the exact ``Rerank`` stage above recovering full-precision ordering.
+
 Every distance evaluation is counted — both engines return per-query eval
 totals, the sublinearity axis the benchmarks report next to recall.
 
@@ -125,10 +132,126 @@ class PackedHNSW:
 
 
 @dataclass
+class GraphCodes:
+    """Quantized traversal payload riding alongside the packed graph:
+    per-node SQ8 or PQ codes plus the codec state needed to score them.
+    When attached (:func:`make_graph_codes` / ``HNSWGraph.codec``), every
+    batched driver's hop gathers *codes* instead of f32 rows — at d=64
+    that is 68 bytes per gathered neighbor for SQ8 and 12 for PQ8x8
+    versus 260 for the f32 row+norm, which is the bandwidth the graph
+    tier pays per hop at scale. Scores stay comparable across the whole
+    traversal (entry seed, greedy descent, layer-0 beam all score codes),
+    and the exact ``Rerank`` stage on top recovers full-precision
+    ordering. Codecs live in :mod:`repro.search.quantize`; this class
+    only carries their trained state and builds the per-query hop
+    operands (see ``kernels/graph_beam_q`` for the unified affine score
+    form)."""
+
+    kind: str                 # "sq8" | "pq"
+    codes: np.ndarray         # [N, C] uint8 (sq8: C = d; pq: C = m)
+    node_bias: np.ndarray     # [N] f32 (sq8: ||decode(c)||^2; pq: zeros)
+    vmin: Optional[np.ndarray] = None        # sq8 [d] f32
+    step: Optional[np.ndarray] = None        # sq8 [d] f32
+    codebooks: Optional[np.ndarray] = None   # pq [m, ksub, dsub] f32
+    _dev: Optional[tuple] = field(default=None, repr=False, compare=False)
+
+    @property
+    def ksub(self) -> int:
+        """LUT stride (pq codebook width; may be < 2**bits on tiny
+        corpora — the actual trained width, never the nominal one)."""
+        return 0 if self.codebooks is None else int(self.codebooks.shape[1])
+
+    @property
+    def gather_bytes(self) -> int:
+        """Bytes the hop streams per gathered neighbor: the uint8 code
+        row plus its f32 bias term. The f32 hop's equivalent is
+        ``4 d + 4`` (row + norm) — the ratio is the tier's bandwidth
+        win, reported by the benches as traversal gather bytes/hop."""
+        return int(self.codes.shape[1]) + 4
+
+    def query_operands(self, q: np.ndarray, q_sq: np.ndarray
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-query hop operands ``(q_op [Q, Dop], q_bias [Q])`` (numpy,
+        hoisted once per search batch). SQ8: the dequant-free asymmetric
+        L2 rearrangement (``q_op = 2 q * step``, ``q_bias = 2 q.vmin -
+        ||q||^2``) so the hop scores ``-||q - decode(c)||^2``. PQ: the
+        NEGATED flattened ADC LUT, zero bias, so the hop scores
+        ``-ADC distance``.
+
+        Every reduction here is per-row (elementwise products + axis
+        sums, plain un-optimized einsum) on purpose: a BLAS matvec or
+        XLA dot picks its blocking from the BATCH shape, so row i's
+        operand would differ in the last ulp between a solo and a
+        coalesced dispatch — breaking the serving cache's bitwise
+        row-independence contract."""
+        if self.kind == "sq8":
+            q_op = (2.0 * q * self.step[None, :]).astype(np.float32)
+            q_bias = (2.0 * (q * self.vmin[None, :]).sum(axis=1)
+                      - q_sq).astype(np.float32)
+            return q_op, q_bias
+        # the same expanded LUT algebra as quantize.adc_lut (which is
+        # jnp, hence batch-blocked — see docstring), term for term
+        cb = np.asarray(self.codebooks, np.float32)
+        m, ksub, dsub = cb.shape
+        qs = q.reshape(q.shape[0], m, dsub)
+        lut = ((qs * qs).sum(-1)[:, :, None]
+               - 2.0 * np.einsum("qms,mjs->qmj", qs, cb)
+               + (cb * cb).sum(-1)[None, :, :]).astype(np.float32)
+        return -lut.reshape(q.shape[0], -1), np.zeros(q.shape[0],
+                                                      np.float32)
+
+    def device_arrays(self) -> tuple:
+        """(codes int32, node_bias, c0, c1) as device arrays, uploaded
+        once; c0/c1 = (vmin, step) for sq8, (codebooks, None) for pq.
+        Codes are widened to int32 here rather than per dispatch (TPU
+        tiling — same convention as ``pq_adc``'s ops layer)."""
+        if self._dev is None:
+            import jax.numpy as jnp
+
+            if self.kind == "sq8":
+                c0, c1 = jnp.asarray(self.vmin), jnp.asarray(self.step)
+            else:
+                c0, c1 = jnp.asarray(self.codebooks), None
+            self._dev = (jnp.asarray(self.codes.astype(np.int32)),
+                         jnp.asarray(self.node_bias, jnp.float32), c0, c1)
+        return self._dev
+
+
+def make_graph_codes(vecs: np.ndarray, kind: str, m: int = 8, bits: int = 8,
+                     iters: int = 15, seed: int = 0) -> GraphCodes:
+    """Train a quantized traversal payload over the (already reduced)
+    corpus the graph was built on. ``kind`` = "sq8" | "pq"; ``m``/
+    ``bits``/``iters``/``seed`` are the PQ training knobs (ignored for
+    SQ8). Attach the result as ``graph.codec`` — the f32 vectors stay
+    (build, the sequential engine, and connectivity repair still use
+    them); the payload changes what the *batched hop gather* reads."""
+    from . import quantize as qz
+
+    v = np.asarray(vecs, np.float32)
+    if kind == "sq8":
+        sq = qz.sq8_train(v)
+        codes = np.asarray(qz.sq8_encode(sq, v))
+        nb = np.asarray(qz.sq8_recon_sq_norms(sq, codes), np.float32)
+        return GraphCodes(kind="sq8", codes=codes, node_bias=nb,
+                          vmin=np.asarray(sq.vmin, np.float32),
+                          step=np.asarray(sq.step, np.float32))
+    if kind != "pq":
+        raise ValueError(f"graph codec kind must be 'sq8' or 'pq', "
+                         f"got {kind!r}")
+    pq = qz.pq_train(v, m, bits=bits, iters=iters, seed=seed)
+    codes = np.asarray(qz.pq_encode(pq, v))
+    return GraphCodes(kind="pq", codes=codes,
+                      node_bias=np.zeros(v.shape[0], np.float32),
+                      codebooks=np.asarray(pq.codebooks, np.float32))
+
+
+@dataclass
 class HNSWGraph:
     """Padded-dense adjacency: ``links0`` [N, 2M] is layer 0, ``links``
     [L, N, M] are layers 1..L (-1 = empty slot; rows of nodes absent from
-    a layer are all -1)."""
+    a layer are all -1). ``codec``, when set, makes every batched driver
+    score quantized code payloads instead of f32 rows (see
+    :class:`GraphCodes`); the sequential engine always scores f32."""
 
     vecs: np.ndarray     # [N, d] float32
     levels: np.ndarray   # [N] int32: top layer of each node
@@ -138,6 +261,8 @@ class HNSWGraph:
     M: int
     packed: Optional[PackedHNSW] = field(default=None, repr=False,
                                          compare=False)
+    codec: Optional[GraphCodes] = field(default=None, repr=False,
+                                        compare=False)
 
     @property
     def ntotal(self) -> int:
@@ -474,10 +599,17 @@ def search_batched(graph: HNSWGraph, queries: np.ndarray, k: int,
 
         p = graph.pack()
         dv, dsq, dn0, dup = p.device_arrays(graph.vecs)
+        cdx = graph.codec
+        if cdx is None:
+            codes = node_bias = c0 = c1 = None
+            mode, ksub = "f32", 0
+        else:
+            codes, node_bias, c0, c1 = cdx.device_arrays()
+            mode, ksub = cdx.kind, cdx.ksub
         scores, ids, evals, hops = _traverse_jit_fn()(
             jnp.asarray(q), dv, dsq, dn0, dup,
-            jnp.asarray(graph.entry, jnp.int32), ef=ef, k=k,
-            use_pallas=(impl == "fused"))
+            jnp.asarray(graph.entry, jnp.int32), codes, node_bias, c0, c1,
+            ef=ef, k=k, use_pallas=(impl == "fused"), mode=mode, ksub=ksub)
         jax.block_until_ready((scores, ids, evals, hops))
         return (np.asarray(scores), np.asarray(ids),
                 np.asarray(evals, np.int64), int(hops))
@@ -513,6 +645,7 @@ def _search_batched_np(graph: HNSWGraph, q: np.ndarray, k: int, ef: int,
       masked slots.
     """
     from ..kernels.graph_beam.ops import NEG_INF, graph_beam
+    from ..kernels.graph_beam_q.ops import graph_beam_q
 
     nq = q.shape[0]
     n = graph.ntotal
@@ -520,14 +653,27 @@ def _search_batched_np(graph: HNSWGraph, q: np.ndarray, k: int, ef: int,
     vecs = graph.vecs
     evals = np.zeros(nq, np.int64)
     q_sq = np.einsum("qd,qd->q", q, q)  # hoisted out of the hop loop
+    cdx = graph.codec
+    if cdx is None:
+        # per-row hop operands: the query rows + their norms
+        op_a, op_b = q, q_sq
 
-    def hop(hq, hq_sq, ids, bv, bi):
-        return graph_beam(hq, vecs, ids, bv, bi, db_sq=p.vecs_sq,
-                          q_sq=hq_sq, impl="np")
+        def hop(ha, hb, ids, bv, bi):
+            return graph_beam(ha, vecs, ids, bv, bi, db_sq=p.vecs_sq,
+                              q_sq=hb, impl="np")
+    else:
+        # quantized payload: per-query affine operands hoisted once per
+        # search; every hop (seed, descent, layer 0) scores codes
+        op_a, op_b = cdx.query_operands(q, q_sq)
+
+        def hop(ha, hb, ids, bv, bi):
+            return graph_beam_q(ha, hb, cdx.codes, cdx.node_bias, ids, bv,
+                                bi, mode=cdx.kind, ksub=cdx.ksub,
+                                impl="np")
 
     # entry seed: a 1-wide merge against the lone entry candidate yields
     # (score, id) of the entry point for every query in one dispatch
-    sv, si = hop(q, q_sq, np.full((nq, 1), graph.entry, np.int32),
+    sv, si = hop(op_a, op_b, np.full((nq, 1), graph.entry, np.int32),
                  np.full((nq, 1), NEG_INF, np.float32),
                  np.full((nq, 1), -1, np.int32))
     s_cur = sv[:, 0].copy()
@@ -543,7 +689,7 @@ def _search_batched_np(graph: HNSWGraph, q: np.ndarray, k: int, ef: int,
         while live.size:
             ids = adj[cur[live]]                             # [R, M]
             evals[live] += (ids >= 0).sum(axis=1)
-            nv, ni = hop(q[live], q_sq[live], ids, s_cur[live][:, None],
+            nv, ni = hop(op_a[live], op_b[live], ids, s_cur[live][:, None],
                          cur[live][:, None])
             moved = ni[:, 0] != cur[live]
             s_cur[live] = nv[:, 0]
@@ -572,12 +718,12 @@ def _search_batched_np(graph: HNSWGraph, q: np.ndarray, k: int, ef: int,
             break
         if live.all():
             rows, rcol = rows_all, col_rows
-            hq, hq_sq, ue = q, q_sq, unexp
+            hq, hq_sq, ue = op_a, op_b, unexp
             bv, bi = beam_v, beam_i
         else:
             rows = np.flatnonzero(live)
             rcol = rows[:, None]
-            hq, hq_sq, ue = q[rows], q_sq[rows], unexp[rows]
+            hq, hq_sq, ue = op_a[rows], op_b[rows], unexp[rows]
             bv, bi = beam_v[rows], beam_i[rows]
         nr = rows.size
         if frontier == 1:
@@ -641,13 +787,22 @@ def _search_batched_np(graph: HNSWGraph, q: np.ndarray, k: int, ef: int,
     return scores, ids, evals, hops
 
 
-def _traverse_impl(q, vecs, vecs_sq, nbrs0, upper, entry, *, ef: int,
-                   k: int, use_pallas: bool):
+def _traverse_impl(q, vecs, vecs_sq, nbrs0, upper, entry, codes, node_bias,
+                   c0, c1, *, ef: int, k: int, use_pallas: bool,
+                   mode: str = "f32", ksub: int = 0):
     """The whole batched traversal as ONE traceable function: greedy
     descent (one ``lax.while_loop`` per upper layer) then the layer-0
     frontier loop (a single ``lax.while_loop`` whose body is one fused
     hop). Jitted via :func:`_traverse_jit_fn`; a search is one XLA
     dispatch, so per-hop cost is pure compute — no host round-trips.
+
+    ``mode`` (static) selects what the hop scores: ``"f32"`` gathers
+    corpus rows (``codes``/``node_bias``/``c0``/``c1`` are None);
+    ``"sq8"``/``"pq"`` gather the ``codes`` payload and score via the
+    unified affine form (c0/c1 = vmin/step for sq8, codebooks/None for
+    pq — see :class:`GraphCodes`). The whole traversal switches space
+    uniformly — entry seed, greedy descent, and the layer-0 beam all
+    score the same payload, so beam ordering is self-consistent.
 
     Dead rows (queries whose beam is fully expanded) keep looping with
     all-masked candidates until the whole batch converges; every masked
@@ -657,6 +812,7 @@ def _traverse_impl(q, vecs, vecs_sq, nbrs0, upper, entry, *, ef: int,
     import jax.numpy as jnp
 
     from ..kernels.graph_beam.kernel import NEG_INF, graph_beam_pallas
+    from ..kernels.graph_beam_q.kernel import graph_beam_q_pallas
 
     nq = q.shape[0]
     n = vecs.shape[0]
@@ -664,12 +820,35 @@ def _traverse_impl(q, vecs, vecs_sq, nbrs0, upper, entry, *, ef: int,
     rr = rows[:, None]
     q_sq = jnp.einsum("qd,qd->q", q, q)
 
+    if mode == "sq8":
+        q_op = (2.0 * q * c1[None, :]).astype(jnp.float32)
+        q_bias = (2.0 * (q @ c0) - q_sq).astype(jnp.float32)
+    elif mode == "pq":
+        from ..search.quantize import adc_lut  # the ONE LUT formula home
+
+        q_op = -adc_lut(c0, q).reshape(nq, -1)
+        q_bias = jnp.zeros((nq,), jnp.float32)
+
     def score(cand):
-        """[Q, W] -squared-L2 of candidate ids; -1 slots -> NEG_INF."""
+        """[Q, W] score of candidate ids; -1 slots -> NEG_INF. f32 mode
+        scores -squared-L2 on corpus rows; quantized modes score the
+        code payload (same algebra as ``graph_beam_q``)."""
         safe = jnp.where(cand >= 0, cand, 0)
-        g = vecs[safe]                                       # [Q, W, d]
-        s = (2.0 * jnp.einsum("qwd,qd->qw", g, q) - vecs_sq[safe]
-             - q_sq[:, None])
+        if mode == "f32":
+            g = vecs[safe]                                   # [Q, W, d]
+            s = (2.0 * jnp.einsum("qwd,qd->qw", g, q) - vecs_sq[safe]
+                 - q_sq[:, None])
+        elif mode == "sq8":
+            g = codes[safe].astype(jnp.float32)              # [Q, W, d]
+            s = (jnp.einsum("qwd,qd->qw", g, q_op) + q_bias[:, None]
+                 - node_bias[safe])
+        else:
+            m = codes.shape[1]
+            offs = codes[safe] + jnp.arange(m, dtype=jnp.int32) * ksub
+            w = cand.shape[1]
+            g = jnp.take_along_axis(q_op, offs.reshape(nq, w * m), axis=1)
+            s = (g.reshape(nq, w, m).sum(-1) + q_bias[:, None]
+                 - node_bias[safe])
         return jnp.where(cand >= 0, s, NEG_INF)
 
     def merge_jnp(bv, bi, cand, out_w):
@@ -683,8 +862,8 @@ def _traverse_impl(q, vecs, vecs_sq, nbrs0, upper, entry, *, ef: int,
         nv = jnp.where(ni >= 0, nv, NEG_INF)
         return nv, ni
 
-    # entry seed
-    s_cur = (2.0 * q @ vecs[entry] - vecs_sq[entry] - q_sq).astype(
+    # entry seed (scored in whatever space the traversal runs in)
+    s_cur = score(jnp.full((nq, 1), entry, jnp.int32))[:, 0].astype(
         jnp.float32)
     cur = jnp.full((nq,), entry, jnp.int32)
     evals = jnp.ones((nq,), jnp.int32)
@@ -738,11 +917,15 @@ def _traverse_impl(q, vecs, vecs_sq, nbrs0, upper, entry, *, ef: int,
         state = state.at[rr, safe].max(fresh.astype(jnp.uint8))
         evals = evals + fresh.sum(axis=1, dtype=jnp.int32)
         cand = jnp.where(fresh, nbrs, -1)
-        if use_pallas:
+        if not use_pallas:
+            nv, ni = merge_jnp(beam_v, beam_i, cand, ef)
+        elif mode == "f32":
             nv, ni = graph_beam_pallas(q, vecs, vecs_sq, cand,
                                        beam_v, beam_i)
         else:
-            nv, ni = merge_jnp(beam_v, beam_i, cand, ef)
+            nv, ni = graph_beam_q_pallas(q_op, q_bias, codes, node_bias,
+                                         cand, beam_v, beam_i, mode=mode,
+                                         ksub=ksub)
         return nv, ni, state, evals, hops + 1
 
     beam_v, beam_i, _, evals, hops = jax.lax.while_loop(
@@ -766,7 +949,8 @@ def _traverse_jit_fn():
         import jax
 
         _TRAVERSE_JIT = jax.jit(_traverse_impl,
-                                static_argnames=("ef", "k", "use_pallas"))
+                                static_argnames=("ef", "k", "use_pallas",
+                                                 "mode", "ksub"))
     return _TRAVERSE_JIT
 
 

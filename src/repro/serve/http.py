@@ -69,6 +69,24 @@ class _Handler(BaseHTTPRequestHandler):
             self._reply(404, {"error": f"unknown path {self.path!r}; "
                                        "try /search /stats /healthz"})
 
+    def _validate(self, q: np.ndarray, ndim: int) -> None:
+        """Reject malformed query payloads BEFORE they reach the engine:
+        a NaN/inf query would poison the fingerprint-keyed result cache
+        (the cache keys on query bytes, so the poisoned entry keeps
+        serving), and a wrong-dim or ragged vector would surface as an
+        opaque 500 from deep inside a kernel. Raises ValueError — the
+        handler's 400 net."""
+        if q.ndim != ndim:
+            what = "query (one vector)" if ndim == 1 else \
+                "queries (a batch of vectors)"
+            raise ValueError(f"{what} must have {ndim} dimension(s), got "
+                             f"shape {list(q.shape)}")
+        want = self.engine.index.dim if self.engine.index.built else None
+        if want is not None and q.shape[-1] != want:
+            raise ValueError(f"query dim {q.shape[-1]} != index dim {want}")
+        if not np.isfinite(q).all():
+            raise ValueError("query contains NaN or infinite values")
+
     def do_POST(self):  # noqa: N802
         if self.path != "/search":
             self._reply(404, {"error": f"unknown path {self.path!r}"})
@@ -77,13 +95,17 @@ class _Handler(BaseHTTPRequestHandler):
             length = int(self.headers.get("Content-Length", 0))
             req = json.loads(self.rfile.read(length) or b"{}")
             k = int(req.get("k", 10))
+            if k < 1:
+                raise ValueError(f"k must be >= 1, got {k}")
             if "query" in req:
                 q = np.asarray(req["query"], np.float32)
+                self._validate(q, 1)
                 res = self.engine.search_one(q, k)
                 payload = {"indices": res.indices[0].tolist(),
                            "scores": _json_safe(res.scores)[0]}
             elif "queries" in req:
                 q = np.asarray(req["queries"], np.float32)
+                self._validate(q, 2)
                 res = self.engine.search(q, k)
                 payload = {"indices": res.indices.tolist(),
                            "scores": _json_safe(res.scores)}

@@ -1,0 +1,3 @@
+from .ops import quantkern
+
+__all__ = ["quantkern"]

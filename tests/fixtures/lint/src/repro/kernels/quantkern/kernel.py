@@ -1,0 +1,4 @@
+# Correct public symbol: the planted violations live in ref.py (dropped
+# codec params) and the registration files (parity/ci lists).
+def quantkern_pallas(q_op, codes, mode, ksub):
+    return q_op, codes, mode, ksub

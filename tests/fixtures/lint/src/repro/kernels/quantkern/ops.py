@@ -1,0 +1,3 @@
+def quantkern(q_op, codes, mode="sq8", ksub=0, impl="auto", bq=128,
+              interpret=False):
+    return q_op, codes, mode, ksub, impl, bq, interpret

@@ -1,0 +1,6 @@
+# Drops `mode`/`ksub` as if they were tuning knobs -> signature-mismatch:
+# codec-algebra params select WHICH function the kernel computes, so the
+# oracle must take them (only impl/interpret and b<letter> block sizes
+# are strippable).
+def quantkern_ref(q_op, codes):
+    return q_op, codes

@@ -53,18 +53,22 @@ EXPECTED = Counter({
      "src/repro/kernels/offkern/kernel.py"): 1,
     ("kernel-contract", "signature-mismatch",
      "src/repro/kernels/offkern/ref.py"): 1,
+    # quantkern's ref drops mode/ksub — codec-algebra params are not
+    # tuning knobs (the quantized-hop contract)
+    ("kernel-contract", "signature-mismatch",
+     "src/repro/kernels/quantkern/ref.py"): 1,
     ("kernel-contract", "missing-reexport",
      "src/repro/kernels/badkern/__init__.py"): 1,
-    # the kernels package re-exports neither triple
+    # the kernels package re-exports none of the three triples
     ("kernel-contract", "missing-reexport",
-     "src/repro/kernels/__init__.py"): 2,
+     "src/repro/kernels/__init__.py"): 3,
     # NEG_INF = -1e30 trips both the redefinition and the raw literal
     ("kernel-contract", "pad-sentinel",
      "src/repro/kernels/badkern/kernel.py"): 2,
     ("kernel-contract", "pad-sentinel",
      "src/repro/kernels/badkern/ops.py"): 1,
-    ("kernel-contract", "unregistered-parity", "tests/test_kernels.py"): 1,
-    ("kernel-contract", "unregistered-ci", "scripts/ci.sh"): 1,
+    ("kernel-contract", "unregistered-parity", "tests/test_kernels.py"): 2,
+    ("kernel-contract", "unregistered-ci", "scripts/ci.sh"): 2,
 })
 
 
@@ -204,6 +208,40 @@ def test_check_bench_json_regression_exits_1(tmp_path):
     payload = json.loads(proc.stdout)
     assert payload["count"] == 1 == len(payload["failures"])
     assert "recall@10" in payload["failures"][0]
+
+
+def _graph_bench_dirs(tmp_path, ratio, quant_recall):
+    """Identical base/cand BENCH_graph.json: isolates the candidate-side
+    quantized-graph gates from the baseline-diff gates."""
+    rows = [{"spec": "RAE64,HNSW32,Rerank4", "space": "rae64",
+             "recall_at_k": 0.99,
+             "traversal_gather_bytes_per_hop": 400000.0},
+            {"spec": "RAE64,HNSW32,SQ8,Rerank4", "space": "rae64",
+             "recall_at_k": quant_recall,
+             "traversal_gather_bytes_per_hop": 400000.0 / ratio}]
+    for side in ("base", "cand"):
+        d = tmp_path / side
+        d.mkdir(parents=True)
+        (d / "BENCH_graph.json").write_text(json.dumps({"rows": rows}))
+    return tmp_path / "base", tmp_path / "cand"
+
+
+def test_check_bench_graph_quant_gates(tmp_path):
+    """The quantized-graph block: a healthy SQ8 row passes; too little
+    gather-bytes saving or post-rerank recall leakage each fail on their
+    own message."""
+    base, cand = _graph_bench_dirs(tmp_path / "ok", ratio=4.0,
+                                   quant_recall=0.99)
+    assert _check_bench("--baseline", str(base), "--candidate",
+                        str(cand)).returncode == 0
+    base, cand = _graph_bench_dirs(tmp_path / "bytes", ratio=2.0,
+                                   quant_recall=0.99)
+    proc = _check_bench("--baseline", str(base), "--candidate", str(cand))
+    assert proc.returncode == 1 and "gather traffic" in proc.stdout
+    base, cand = _graph_bench_dirs(tmp_path / "recall", ratio=4.0,
+                                   quant_recall=0.90)
+    proc = _check_bench("--baseline", str(base), "--candidate", str(cand))
+    assert proc.returncode == 1 and "rerank" in proc.stdout
 
 
 def test_check_bench_usage_errors_exit_2(tmp_path):

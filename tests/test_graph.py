@@ -277,6 +277,153 @@ def test_hnsw_index_engine_routing(corpus):
 
 
 # ---------------------------------------------------------------------------
+# Quantized graph payloads: SQ8/PQ codes inside the batched traversal
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module", params=["sq8", "pq"])
+def quant_graph(request, corpus):
+    kw = {"quant": request.param}
+    if request.param == "pq":
+        kw.update(pq_m=8, pq_bits=8)
+    idx = api.HNSWIndex(m=8, ef_construction=60, seed=0, **kw)
+    return idx.build(corpus[:800])
+
+
+def test_quant_graph_drivers_agree(quant_graph, queries):
+    """np and jit drivers score the same code payload: identical neighbor
+    ids and eval counters at frontier=1, scores allclose."""
+    g = quant_graph._g
+    assert g.codec is not None and g.codec.kind == quant_graph.quant
+    n_sc, n_id, n_ev, _ = hnsw.search_batched(g, queries[:8], 10,
+                                              ef_search=64, impl="np",
+                                              frontier=1)
+    j_sc, j_id, j_ev, _ = hnsw.search_batched(g, queries[:8], 10,
+                                              ef_search=64, impl="jit")
+    np.testing.assert_array_equal(n_id, j_id)
+    np.testing.assert_array_equal(n_ev, j_ev)
+    np.testing.assert_allclose(n_sc, j_sc, rtol=1e-4, atol=1e-4)
+
+
+def test_quant_graph_deterministic_and_row_independent(quant_graph, queries):
+    """The serving-cache contract holds over codes too: bitwise-stable
+    reruns, and each row answers the same alone and coalesced."""
+    g = quant_graph._g
+    q = queries[:12]
+    r1 = hnsw.search_batched(g, q, 10, ef_search=64, impl="np")
+    r2 = hnsw.search_batched(g, q, 10, ef_search=64, impl="np")
+    for a, b in zip(r1[:3], r2[:3]):
+        np.testing.assert_array_equal(a, b)
+    for i in (0, 11):
+        solo = hnsw.search_batched(g, q[i:i + 1], 10, ef_search=64,
+                                   impl="np")
+        np.testing.assert_array_equal(solo[0][0], r1[0][i])
+        np.testing.assert_array_equal(solo[1][0], r1[1][i])
+
+
+def test_quant_graph_ragged_shapes(corpus):
+    """q=1, ef < k, and k > ntotal keep the sequential engine's
+    shape/padding contract when the hop reads codes."""
+    for quant in ("sq8", "pq"):
+        kw = {"pq_m": 8} if quant == "pq" else {}
+        idx = api.HNSWIndex(m=6, ef_construction=40, seed=1, quant=quant,
+                            **kw).build(corpus[:300])
+        for nq in (1, 5):
+            sc, ids, ev, _ = hnsw.search_batched(idx._g, corpus[:nq], 7,
+                                                 ef_search=3, impl="np")
+            assert sc.shape == (nq, 7) and ids.shape == (nq, 7)
+            assert np.all(ids >= 0)
+        tiny = api.HNSWIndex(m=4, ef_construction=20, seed=0,
+                             quant=quant, **kw).build(corpus[:6])
+        sc, ids, ev, _ = hnsw.search_batched(tiny._g, corpus[:3], 10,
+                                             impl="np")
+        assert ids.shape == (3, 10)
+        assert np.all(ids[:, 6:] == -1)
+        assert np.all(np.isneginf(sc[:, 6:]))
+        assert np.all(np.isfinite(sc[ids >= 0]))
+
+
+def test_quant_graph_recall_close_to_f32(quant_graph, corpus, queries):
+    """Pre-rerank neighbor quality over codes tracks the f32 traversal:
+    recall@10 vs exact within the codec's documented slack (SQ8 is
+    near-exact; raw PQ8x8 ordering is noisy — the Rerank stage recovers
+    it, see the acceptance test)."""
+    import jax.numpy as jnp
+
+    from repro.core.metrics import knn_indices
+    x = corpus[:800]
+    gt = np.asarray(knn_indices(jnp.asarray(queries), jnp.asarray(x), 10))
+    f32 = api.HNSWIndex(m=8, ef_construction=60, seed=0).build(x)
+    rec = lambda idx: np.mean([len(set(a) & set(b)) / 10 for a, b in zip(
+        gt, idx.search(queries, 10).indices)])
+    slack = 0.02 if quant_graph.quant == "sq8" else 0.35
+    assert rec(quant_graph) >= rec(f32) - slack
+
+
+def test_quant_graph_lone_query_pins_batched(quant_graph, queries):
+    """quant pins ALL queries to the batched engine — the sequential heapq
+    scores f32 rows, which would break row-independent caching."""
+    res = quant_graph.search(queries[:1], 5)
+    assert res.stats.get("beam_hops", 0) > 0
+    assert "gather_bytes_per_hop" in res.stats
+
+
+def test_quant_graph_gather_bytes_stat(corpus, queries):
+    """The traversal-traffic accounting: bytes/hop scales with the codec's
+    per-row gather width (f32: 4d+4, sq8: d+4, pq: m+4)."""
+    x = corpus[:500]
+    d = x.shape[1]
+    widths = {}
+    for quant, width in ((None, 4 * d + 4), ("sq8", d + 4), ("pq", 8 + 4)):
+        kw = {"pq_m": 8} if quant == "pq" else {}
+        idx = api.HNSWIndex(m=8, ef_construction=40, seed=0, quant=quant,
+                            **kw).build(x)
+        res = idx.search(queries[:8], 10)
+        per_eval = res.stats["gather_bytes_per_hop"] * \
+            res.stats["beam_hops"] / res.distance_evals / 8
+        widths[quant] = per_eval
+        np.testing.assert_allclose(per_eval, width, rtol=1e-6)
+    assert widths[None] / widths["sq8"] >= 3.0
+    assert widths[None] / widths["pq"] >= 4.0
+
+
+def test_quant_graph_save_load_and_fingerprints(quant_graph, corpus,
+                                                queries, tmp_path):
+    """Codec state round-trips (same neighbors, same fingerprint after
+    reload), and the fingerprint separates f32 / SQ8 / PQ builds of the
+    same graph — the serving cache must never alias them."""
+    res = quant_graph.search(queries[:8], 10)
+    quant_graph.save(str(tmp_path / "qg"))
+    idx2 = api.load_index(str(tmp_path / "qg"))
+    assert isinstance(idx2, api.HNSWIndex)
+    assert idx2.quant == quant_graph.quant
+    assert idx2._g.codec is not None
+    assert idx2.fingerprint() == quant_graph.fingerprint()
+    res2 = idx2.search(queries[:8], 10)
+    np.testing.assert_array_equal(res2.indices, res.indices)
+    np.testing.assert_allclose(res2.scores, res.scores, rtol=1e-5)
+    f32 = api.HNSWIndex(m=8, ef_construction=60, seed=0).build(corpus[:800])
+    assert f32.fingerprint() != quant_graph.fingerprint()
+
+
+def test_quant_graph_fingerprints_distinct_across_codecs(corpus):
+    x = corpus[:300]
+    fps = {q: api.HNSWIndex(m=6, ef_construction=40, seed=0, quant=q)
+           .build(x).fingerprint() for q in (None, "sq8", "pq")}
+    assert len(set(fps.values())) == 3
+
+
+def test_quant_graph_bytes_per_vector_accounts_codec(corpus):
+    x = corpus[:300]
+    d = x.shape[1]
+    base = api.HNSWIndex(m=6, ef_construction=40, seed=0).build(x)
+    sq8 = api.HNSWIndex(m=6, ef_construction=40, seed=0,
+                        quant="sq8").build(x)
+    pq = api.HNSWIndex(m=6, ef_construction=40, seed=0, quant="pq",
+                       pq_m=8).build(x)
+    assert sq8.bytes_per_vector == base.bytes_per_vector + d + 4
+    assert pq.bytes_per_vector == base.bytes_per_vector + 8 + 4
+
+
+# ---------------------------------------------------------------------------
 # distance_evals stats: the sublinearity contract, asserted per tier
 # ---------------------------------------------------------------------------
 def test_distance_evals_flat_is_n(corpus, queries):
@@ -333,11 +480,32 @@ def test_factory_hnsw_knobs_flow_through():
     assert stack.rerank_factor == 4
 
 
-def test_factory_hnsw_rejects_cosine_and_quant():
+def test_factory_hnsw_rejects_cosine():
     with pytest.raises(ValueError, match="euclidean only"):
         api.index_factory("HNSW32", metric="cosine")
-    with pytest.raises(ValueError, match="bad index spec"):
-        api.parse_index_spec("HNSW32,SQ8")
+
+
+@pytest.mark.parametrize("spec", ["HNSW32,SQ8", "HNSW16,PQ8x8",
+                                  "RAE64,HNSW32,SQ8,Rerank4",
+                                  "RAE64,HNSW32,PQ8x8,Rerank4"])
+def test_factory_quant_graph_specs_parse_and_roundtrip(spec):
+    """Quantized payloads compose with the graph base (the ISSUE 8 grammar
+    opening), and parse(str(spec)) round-trips."""
+    parsed = api.parse_index_spec(spec)
+    assert parsed.base == "hnsw"
+    assert api.parse_index_spec(str(parsed)) == parsed
+
+
+def test_factory_quant_graph_knobs_flow_through():
+    idx = api.index_factory("HNSW16,SQ8")
+    assert isinstance(idx, api.HNSWIndex)
+    assert (idx.m, idx.quant) == (16, "sq8")
+    pq = api.index_factory("HNSW16,PQ4x6")
+    assert (pq.quant, pq.pq_m, pq.pq_bits) == ("pq", 4, 6)
+    # PQ navigation is noisy: the instance over-fetches harder under a
+    # rerank, without touching the class-level default
+    assert pq.stage1_oversample == 8
+    assert api.HNSWIndex.stage1_oversample == 2
 
 
 def test_hnsw_save_load_roundtrip_with_upper_layers(tmp_path):
@@ -439,4 +607,41 @@ def test_acceptance_20k_hnsw_recall_and_sublinearity(tmp_path,
     idx.save(str(tmp_path / "hnsw"))
     res2 = api.load_index(str(tmp_path / "hnsw")).search(acceptance_queries,
                                                          10)
+    np.testing.assert_array_equal(res2.indices, res.indices)
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(900)
+@pytest.mark.parametrize("quant,floor", [("SQ8", 3.0), ("PQ8x8", 4.0)])
+def test_acceptance_20k_quant_graph_recall_and_bytes(tmp_path, quant, floor,
+                                                     acceptance_corpus,
+                                                     acceptance_queries,
+                                                     acceptance_gt):
+    """The ISSUE 8 criterion: ``RAE64,HNSW32,<quant>,Rerank4`` holds
+    post-rerank recall@10 within 0.01 of the f32 graph twin while the
+    traversal gathers >= 3x (SQ8) / >= 4x (PQ8x8) fewer payload bytes per
+    hop, and survives save -> load bit-exact."""
+    f32 = api.index_factory("RAE64,HNSW32,Rerank4",
+                            reducer_kw={"steps": 1000, "seed": 0})
+    f32.build(acceptance_corpus)
+    f32_res = f32.search(acceptance_queries, 10)
+    f32_recall = (acceptance_gt[:, :, None] ==
+                  f32_res.indices[:, None, :]).any(-1).mean()
+
+    idx = api.index_factory(f"RAE64,HNSW32,{quant},Rerank4",
+                            reducer_kw={"steps": 1000, "seed": 0})
+    idx.build(acceptance_corpus)
+    res = idx.search(acceptance_queries, 10)
+    recall = (acceptance_gt[:, :, None] ==
+              res.indices[:, None, :]).any(-1).mean()
+    assert recall >= f32_recall - 0.01, (recall, f32_recall)
+
+    ratio = f32_res.stats["gather_bytes_per_hop"] / \
+        res.stats["gather_bytes_per_hop"]
+    assert ratio >= floor, ratio
+
+    idx.save(str(tmp_path / "qg"))
+    idx2 = api.load_index(str(tmp_path / "qg"))
+    assert idx2.fingerprint() == idx.fingerprint()
+    res2 = idx2.search(acceptance_queries, 10)
     np.testing.assert_array_equal(res2.indices, res.indices)

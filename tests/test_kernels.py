@@ -13,11 +13,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import (embedding_bag, flash_decode, graph_beam, l2_topk,
-                           pq_adc, rae_encode, topk_merge)
+from repro.kernels import (embedding_bag, flash_decode, graph_beam,
+                           graph_beam_q, l2_topk, pq_adc, rae_encode,
+                           topk_merge)
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.flash_decode.ref import flash_decode_ref
 from repro.kernels.graph_beam.ref import NEG_INF, graph_beam_ref
+from repro.kernels.graph_beam_q.ref import graph_beam_q_ref
 from repro.kernels.l2_topk.ref import l2_topk_ref
 from repro.kernels.pq_adc.ref import pq_adc_ref
 from repro.kernels.rae_encode.ref import rae_encode_ref
@@ -249,6 +251,67 @@ def test_graph_beam_sweep(q_n, n, d, w, ef):
     assert np.all(v[np.asarray(want[1]) < 0] == NEG_INF)
 
 
+# ---------------------------------------------------------------------------
+# graph_beam_q: the quantized hop (SQ8 / PQ payloads)
+# ---------------------------------------------------------------------------
+def _beam_q_case(seed, mode, q_n, n, cdim, ksub, w, ef, dtype=jnp.float32,
+                 seed_beam=2):
+    """Random quantized hop inputs. ``cdim`` = stored code width (sq8: d;
+    pq: m), ``ksub`` = LUT stride (pq only; codes stay < ksub, modelling
+    the tiny-corpus clamp when ksub < 256)."""
+    rng = np.random.default_rng(seed)
+    hi = 256 if mode == "sq8" else ksub
+    codes = jnp.asarray(rng.integers(0, hi, (n, cdim)), jnp.uint8)
+    dop = cdim if mode == "sq8" else cdim * ksub
+    q_op = jnp.asarray(0.1 * rng.standard_normal((q_n, dop)), dtype)
+    q_bias = jnp.asarray(rng.standard_normal(q_n), dtype)
+    node_bias = jnp.asarray(np.abs(rng.standard_normal(n)), dtype)
+    ids = jnp.asarray(rng.integers(-1, n, (q_n, w)), jnp.int32)
+    bv = np.full((q_n, ef), NEG_INF, np.float32)
+    bi = np.full((q_n, ef), -1, np.int32)
+    for s in range(min(seed_beam, ef)):
+        bv[:, s] = -0.25 * (s + 1)   # sorted descending
+        bi[:, s] = s
+    return q_op, q_bias, codes, node_bias, ids, jnp.asarray(bv), \
+        jnp.asarray(bi)
+
+
+def test_graph_beam_q_rejects_bad_mode_and_ksub():
+    a = _beam_q_case(0, "sq8", 2, 10, 4, 0, 3, 4)
+    with pytest.raises(ValueError, match="mode"):
+        graph_beam_q(*a, mode="fp4")
+    with pytest.raises(ValueError, match="ksub"):
+        graph_beam_q(*a, mode="pq", ksub=0)
+
+
+def test_graph_beam_q_sq8_matches_decoded_f32_hop():
+    """The dequant-free affine form == the f32 hop on decoded rows: build
+    real SQ8 operands from a real codec and cross-check against
+    graph_beam over decode(codes)."""
+    from repro.search import hnsw as hnsw_lib
+
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal((60, 12)).astype(np.float32)
+    cdx = hnsw_lib.make_graph_codes(x, "sq8")
+    q = rng.standard_normal((5, 12)).astype(np.float32)
+    q_sq = (q * q).sum(1).astype(np.float32)
+    q_op, q_bias = cdx.query_operands(q, q_sq)
+    ids = jnp.asarray(rng.integers(-1, 60, (5, 7)), jnp.int32)
+    bv = jnp.full((5, 6), NEG_INF, jnp.float32)
+    bi = jnp.full((5, 6), -1, jnp.int32)
+    got = graph_beam_q(q_op, q_bias, cdx.codes, cdx.node_bias, ids, bv, bi,
+                       mode="sq8", impl="np")
+    from repro.search.quantize import ScalarQuantizer, sq8_decode
+    dec = np.asarray(sq8_decode(
+        ScalarQuantizer(vmin=jnp.asarray(cdx.vmin),
+                        step=jnp.asarray(cdx.step)),
+        jnp.asarray(cdx.codes)))
+    want = graph_beam_ref(jnp.asarray(q), jnp.asarray(dec), ids, bv, bi)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_graph_beam_merge_matches_traversal_semantics():
     """A full-corpus hop against an empty beam is exact top-ef — pin the
     merge to l2_topk's ordering (same branchless merge, same tie rule)."""
@@ -349,6 +412,19 @@ def _parity_graph_beam(case, dtype):
                                rtol=rtol, atol=atol)
 
 
+def _parity_graph_beam_q(case, dtype):
+    mode, q_n, n, cdim, ksub, w, ef = case
+    a = _beam_q_case(q_n * 7 + n + cdim, mode, q_n, n, cdim, ksub, w, ef,
+                     dtype)
+    kw = {"mode": mode, "ksub": ksub if mode == "pq" else 0}
+    got = graph_beam_q(*a, impl="pallas", interpret=True, **kw)
+    want = graph_beam_q_ref(*a, **kw)
+    rtol, atol, imatch = _tol(dtype)
+    assert float((np.asarray(got[1]) == np.asarray(want[1])).mean()) >= imatch
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=rtol, atol=atol)
+
+
 def _parity_pq_adc(case, dtype):
     q_n, n, m, ksub, dsub, k, bq, bn = case
     rng = np.random.default_rng(q_n + n)
@@ -407,6 +483,23 @@ PARITY_CASES = [
     ("graph_beam", "w1", (5, 30, 8, 1, 6), _parity_graph_beam),
     ("graph_beam", "ef_gt_w", (3, 20, 4, 3, 15), _parity_graph_beam),
     ("graph_beam", "d1", (4, 25, 1, 5, 4), _parity_graph_beam),
+    # (mode, q_n, n, cdim, ksub, w, ef): quantized hop — same edges as
+    # graph_beam per codec, plus ksub < 2**bits (the tiny-corpus clamp)
+    # and the pq m=1 single-subspace shape
+    ("graph_beam_q", "sq8_ragged_q", ("sq8", 7, 60, 16, 0, 9, 8),
+     _parity_graph_beam_q),
+    ("graph_beam_q", "sq8_w1", ("sq8", 5, 30, 8, 0, 1, 6),
+     _parity_graph_beam_q),
+    ("graph_beam_q", "sq8_ef_gt_w", ("sq8", 3, 20, 4, 0, 3, 15),
+     _parity_graph_beam_q),
+    ("graph_beam_q", "sq8_d1", ("sq8", 4, 25, 1, 0, 5, 4),
+     _parity_graph_beam_q),
+    ("graph_beam_q", "pq_ragged_q", ("pq", 7, 60, 8, 16, 9, 8),
+     _parity_graph_beam_q),
+    ("graph_beam_q", "pq_ef_gt_w", ("pq", 3, 20, 4, 256, 3, 15),
+     _parity_graph_beam_q),
+    ("graph_beam_q", "pq_m1_tiny_ksub", ("pq", 5, 9, 1, 7, 4, 6),
+     _parity_graph_beam_q),
     # (q_n, c, k, bq): q not divisible by bq + non-lane-aligned pool,
     # k wider than the candidate pool, single-candidate pool
     ("topk_merge", "ragged_q", (19, 96, 8, 16), _parity_topk_merge),

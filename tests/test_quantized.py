@@ -186,6 +186,46 @@ def test_ivfpq_short_probe_pads(queries):
     assert np.all(np.isfinite(res.scores[valid]))
 
 
+@pytest.mark.parametrize("spec", ["SQ8", "PQ8x8", "PQ8x4"])
+def test_bytes_per_vector_matches_persisted_payload(spec, corpus, tmp_path):
+    """``bytes_per_vector`` is an *accounting claim* about stored state —
+    pin it to the ground truth: the per-row arrays actually persisted in
+    arrays.npz (leading axis == ntotal), in bytes, divided by N. Catches
+    both directions of drift: a codec growing a per-row array without
+    reporting it, and an accounting formula (e.g. a bit-packed m*bits/8
+    for PQ) that flatters storage the codes don't actually achieve."""
+    idx = api.index_factory(spec).build(corpus)
+    idx.save(str(tmp_path / "q"))
+    n = idx.ntotal
+    with np.load(tmp_path / "q" / "arrays.npz") as arrays:
+        payload = sum(a.nbytes for a in arrays.values()
+                      if a.ndim >= 1 and a.shape[0] == n)
+    assert payload > 0
+    assert idx.bytes_per_vector == payload / n
+
+
+def test_pq_trains_and_serves_on_tiny_corpus(tmp_path):
+    """n=7 < 2**bits: pq_train clamps ksub to n, and every downstream
+    consumer (encode, ADC scan, save/load, fingerprint) must derive ksub
+    from the codebook shape — never from 2**bits."""
+    rng = np.random.default_rng(3)
+    tiny = rng.normal(size=(7, 16)).astype(np.float32)
+    idx = api.index_factory("PQ4x8").build(tiny)
+    assert idx._pq.ksub == 7  # clamped, not 256
+    res = idx.search(tiny, 3)
+    assert res.indices.shape == (7, 3)
+    assert np.all(res.indices >= 0)
+    # each row's own reconstruction is its nearest: self-recall holds even
+    # with a 7-centroid codebook (every row is near a centroid)
+    assert (res.indices[:, 0] == np.arange(7)).mean() >= 0.7
+    idx.save(str(tmp_path / "tiny"))
+    idx2 = api.load_index(str(tmp_path / "tiny"))
+    assert idx2._pq.ksub == 7
+    assert idx2.fingerprint() == idx.fingerprint()
+    res2 = idx2.search(tiny, 3)
+    np.testing.assert_array_equal(res2.indices, res.indices)
+
+
 def test_twostage_over_pq_base(corpus, queries, exact):
     """Reducer + PQ base + full-space rerank — the compounding story."""
     idx = api.index_factory("PCA8,PQ4x8,Rerank8")

@@ -355,6 +355,49 @@ def test_http_bad_requests(http_engine):
     assert e.value.code == 404
 
 
+def _expect_400(port, payload, fragment):
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _post(port, "/search", payload)
+    assert e.value.code == 400
+    body = json.loads(e.value.read())
+    assert fragment in body["error"], body["error"]
+
+
+def test_http_rejects_bad_k(http_engine, corpus):
+    """k=0 and negative k must bounce with 400, not slice to an empty or
+    reversed result deep inside the index."""
+    _, port = http_engine
+    q = corpus[3].tolist()
+    _expect_400(port, {"query": q, "k": 0}, "k must be >= 1")
+    _expect_400(port, {"query": q, "k": -3}, "k must be >= 1")
+
+
+def test_http_rejects_wrong_dim(http_engine):
+    _, port = http_engine
+    _expect_400(port, {"query": [1.0] * (DIM + 3), "k": 3},
+                f"query dim {DIM + 3} != index dim {DIM}")
+    _expect_400(port, {"queries": [[1.0] * (DIM - 1)] * 2, "k": 3},
+                f"query dim {DIM - 1} != index dim {DIM}")
+    # a batch posted to the single-query field (and vice versa) is a
+    # shape error, not a silent reinterpretation
+    _expect_400(port, {"query": [[1.0] * DIM] * 2, "k": 3}, "dimension")
+    _expect_400(port, {"queries": [1.0] * DIM, "k": 3}, "dimension")
+
+
+def test_http_rejects_non_finite_query(http_engine, corpus):
+    """A NaN query must never reach the engine: the result cache keys on
+    query bytes, so a poisoned entry would keep serving garbage."""
+    eng, port = http_engine
+    q = corpus[3].astype(float).tolist()
+    q[0] = float("nan")
+    _expect_400(port, {"query": q, "k": 3}, "NaN")
+    _expect_400(port, {"queries": [q], "k": 3}, "NaN")
+    # the good twin of the poisoned query still answers 200 afterwards
+    status, body = _post(port, "/search",
+                         {"query": corpus[3].tolist(), "k": 3})
+    assert status == 200 and body["indices"][0] == 3
+
+
 def test_http_concurrent_clients_coalesce(http_engine, flat, corpus):
     eng, port = http_engine
     rows = list(range(16))
