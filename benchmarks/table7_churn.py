@@ -1,0 +1,244 @@
+"""Table 7 (beyond paper): the churn soak — live mutation under load.
+
+Serves a ``Mut``-wrapped index through :class:`repro.serve.SearchEngine`
+while a sustained insert/delete stream turns over >= 5% of the corpus,
+with closed-loop query clients running CONCURRENTLY with every mutation
+(``engine.mutate`` applies each one atomically on the search executor).
+Three invariants are measured, and ``scripts/check_bench.py`` gates all
+of them:
+
+* **tombstone exactness** — ``tombstone_violations`` counts answers
+  containing any id that was deleted before the answering round began.
+  Must be exactly 0: the alive mask rides into the fused kernels as
+  ``db_mask``, so this is a correctness gate, not a recall knob.
+* **no dropped queries** — every request issued during the soak must be
+  answered (``dropped_queries == 0``); mutations wait their turn on the
+  executor instead of failing queries.
+* **recall parity with a static twin** — after the soak, the mutated
+  index's recall@k (vs the exact scan over the surviving corpus) must be
+  >= 0.95x the recall of the SAME spec built fresh on that corpus: the
+  incrementally-grown graph / appended IVF cells may degrade gracefully,
+  never collapse. ``qps_under_churn`` must also clear the
+  ``churn_qps_floor`` recorded in the config block.
+
+Sweeps {Mut,Flat; Mut,IVF<c>; Mut,HNSW<M>} — scan, cell-append and
+graph-insert mutation paths — and writes ``results/BENCH_churn.json``.
+
+CPU-budget default: ``python -m benchmarks.table7_churn --quick``
+finishes in a few minutes at n=2048.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro import api
+from repro.data import synthetic
+from repro.serve import SearchEngine
+
+from .run import write_bench
+
+
+def _recall(got_ext: np.ndarray, gt_ext: np.ndarray) -> float:
+    """recall@k over EXTERNAL ids (rowwise set intersection)."""
+    hits = sum(len(set(g.tolist()) & set(t.tolist()))
+               for g, t in zip(got_ext, gt_ext))
+    return hits / float(gt_ext.size)
+
+
+def _drive_queries(engine: SearchEngine, queries: np.ndarray, k: int,
+                   n_clients: int) -> tuple[float, np.ndarray, int]:
+    """Closed-loop client pool (same model as table5_serve): returns
+    (wall seconds, per-request external ids [R, k] with -1 for failed or
+    padded slots, dropped count)."""
+    out = np.full((queries.shape[0], k), -1, np.int64)
+    dropped = 0
+
+    async def drive():
+        nonlocal dropped
+        cursor = iter(range(queries.shape[0]))
+
+        async def client():
+            nonlocal dropped
+            for i in cursor:
+                try:
+                    res = await engine.asearch(queries[i], k)
+                    ids = np.asarray(res.indices)[0]
+                    out[i, :ids.shape[0]] = ids
+                except Exception:
+                    dropped += 1
+
+        await asyncio.gather(*[client() for _ in range(n_clients)])
+
+    t0 = time.perf_counter()
+    asyncio.run_coroutine_threadsafe(drive(), engine.loop).result()
+    return time.perf_counter() - t0, out, dropped
+
+
+def _soak(spec: str, corpus: np.ndarray, rounds: int, batch: int,
+          n_queries: int, n_clients: int, k: int, max_batch: int,
+          max_wait_ms: float, seed: int) -> dict:
+    n, dim = corpus.shape
+    rng = np.random.default_rng(seed + 17)
+    by_ext = {i: corpus[i] for i in range(n)}   # external id -> vector
+    dead_before: set[int] = set()               # deleted in a PRIOR round
+
+    index = api.index_factory(spec)
+    t0 = time.perf_counter()
+    index.build(corpus)
+    build_s = time.perf_counter() - t0
+
+    violations = dropped = 0
+    query_s = 0.0
+    answered = 0
+    with SearchEngine(index, max_batch=max_batch, max_wait_ms=max_wait_ms,
+                      cache_size=0) as engine:
+        engine.warmup(dim=dim, ks=(k,))
+        for r in range(rounds):
+            alive_ext = np.fromiter(
+                (e for e in by_ext if e not in dead_before), np.int64)
+            # fresh rows from the corpus distribution + doomed picks
+            new_rows = synthetic.embedding_corpus(
+                batch, dim, n_clusters=16, intrinsic=dim // 4,
+                seed=seed + 100 + r)
+            doomed = rng.choice(alive_ext, batch, replace=False)
+            qpick = rng.choice(np.setdiff1d(alive_ext, doomed), n_queries)
+            queries = np.stack([by_ext[int(e)] for e in qpick]) + \
+                0.01 * rng.standard_normal((n_queries, dim)) \
+                .astype(np.float32)
+
+            # mutations land WHILE the clients are in flight: the engine
+            # serializes them against batches, so answers are never torn
+            with ThreadPoolExecutor(1) as tp:
+                fut = tp.submit(_drive_queries, engine, queries, k,
+                                n_clients)
+                new_ext = engine.mutate(
+                    lambda ix: ix.add(new_rows.astype(np.float32)))
+                engine.mutate(lambda ix: ix.delete(doomed))
+                secs, got, drop = fut.result()
+            query_s += secs
+            answered += n_queries - drop
+            dropped += drop
+            # exactness: ids tombstoned before this round may never appear
+            if dead_before:
+                dead_arr = np.fromiter(dead_before, np.int64)
+                violations += int(np.isin(got, dead_arr).sum())
+            for e, v in zip(new_ext, new_rows):
+                by_ext[int(e)] = v.astype(np.float32)
+            dead_before |= {int(e) for e in doomed}
+
+        # -- post-soak recall vs the static twin ---------------------------
+        alive_ext = np.fromiter(
+            (e for e in by_ext if e not in dead_before), np.int64)
+        alive_ext.sort()
+        alive_mat = np.stack([by_ext[int(e)] for e in alive_ext])
+        q_eval = alive_mat[rng.integers(0, alive_ext.size, n_queries)] + \
+            0.01 * rng.standard_normal((n_queries, dim)).astype(np.float32)
+        gt_pos = api.FlatIndex().build(alive_mat).search(q_eval, k).indices
+        gt_ext = alive_ext[np.asarray(gt_pos)]
+
+        mut_ids = np.zeros((n_queries, k), np.int64)
+        for i in range(0, n_queries, max_batch):
+            res = engine.search(q_eval[i:i + max_batch], k)
+            mut_ids[i:i + max_batch] = np.asarray(res.indices)
+        mut_recall = _recall(mut_ids, gt_ext)
+        if dead_before:
+            violations += int(np.isin(
+                mut_ids, np.fromiter(dead_before, np.int64)).sum())
+        stats = engine.stats()
+
+    static = api.index_factory(spec.split("Mut,", 1)[1])
+    static.build(alive_mat)
+    st_pos = np.asarray(static.search(q_eval, k).indices)
+    st_ext = np.where(st_pos >= 0, alive_ext[np.clip(st_pos, 0, None)], -1)
+    static_recall = _recall(st_ext, gt_ext)
+
+    turnover = rounds * batch / float(n)
+    qps = answered / max(query_s, 1e-9)
+    ms = stats["mutation"]["index"]
+    return {"spec": spec, "k": k, "n": n,
+            "turnover_frac": round(turnover, 4),
+            "recall_at_k": round(mut_recall, 4),
+            "static_recall_at_k": round(static_recall, 4),
+            "recall_ratio_vs_static": round(
+                mut_recall / max(static_recall, 1e-9), 4),
+            "tombstone_violations": int(violations),
+            "dropped_queries": int(dropped),
+            "qps_under_churn": round(qps, 1),
+            "latency_ms_p50": stats["latency_ms"]["p50"],
+            "latency_ms_p99": stats["latency_ms"]["p99"],
+            "epochs": int(ms["epoch"]), "rebuilds": int(ms["rebuilds"]),
+            "tombstones_live": int(ms["tombstones"]),
+            "build_s": round(build_s, 2)}
+
+
+def run(n: int = 16384, dim: int = 64, n_cells: int = 64, hnsw_m: int = 16,
+        rounds: int = 6, n_queries: int = 128, n_clients: int = 16,
+        k: int = 10, max_batch: int = 16, max_wait_ms: float = 4.0,
+        turnover: float = 0.08, qps_floor: float = 25.0, seed: int = 0,
+        quick: bool = False) -> list[dict]:
+    if quick:
+        n = 2048
+    batch = max(1, int(round(n * turnover / rounds)))
+    corpus = synthetic.embedding_corpus(n, dim, n_clusters=16,
+                                        intrinsic=dim // 4, seed=seed)
+    specs = ["Mut,Flat", f"Mut,IVF{n_cells}", f"Mut,HNSW{hnsw_m}"]
+    rows = []
+    for spec in specs:
+        row = _soak(spec, corpus, rounds, batch, n_queries, n_clients, k,
+                    max_batch, max_wait_ms, seed)
+        rows.append(row)
+        print(f"{spec:12s} turnover={row['turnover_frac']:.1%} "
+              f"recall@{k}={row['recall_at_k']:.4f} "
+              f"(static {row['static_recall_at_k']:.4f}, "
+              f"ratio {row['recall_ratio_vs_static']:.3f}) "
+              f"violations={row['tombstone_violations']} "
+              f"dropped={row['dropped_queries']} "
+              f"qps={row['qps_under_churn']:.1f}")
+    write_bench("churn", rows,
+                config={"n": n, "dim": dim, "n_cells": n_cells,
+                        "hnsw_m": hnsw_m, "rounds": rounds, "batch": batch,
+                        "n_queries": n_queries, "n_clients": n_clients,
+                        "k": k, "max_batch": max_batch,
+                        "max_wait_ms": max_wait_ms,
+                        "turnover_target": turnover,
+                        "churn_qps_floor": qps_floor,
+                        "churn_recall_ratio_floor": 0.95,
+                        "seed": seed, "quick": quick})
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=16384)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--n-cells", type=int, default=64)
+    ap.add_argument("--hnsw-m", type=int, default=16)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--queries", type=int, default=128)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=4.0)
+    ap.add_argument("--turnover", type=float, default=0.08,
+                    help="total corpus fraction inserted AND deleted")
+    ap.add_argument("--qps-floor", type=float, default=25.0,
+                    help="sustained-QPS gate recorded for check_bench")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU-budget run: n=2048")
+    a = ap.parse_args(argv)
+    run(n=a.n, dim=a.dim, n_cells=a.n_cells, hnsw_m=a.hnsw_m,
+        rounds=a.rounds, n_queries=a.queries, n_clients=a.clients, k=a.k,
+        max_batch=a.max_batch, max_wait_ms=a.max_wait_ms,
+        turnover=a.turnover, qps_floor=a.qps_floor, seed=a.seed,
+        quick=a.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

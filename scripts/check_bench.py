@@ -57,6 +57,18 @@ file's ``config["p99_budget_ms"]``; and (c) keep ``bytes_per_shard``
 under ``config["shard_bytes_budget"]`` — the whole point of sharding a
 million-vector corpus is bounding per-worker memory.
 
+Churn-specific gates (live mutation): when ``BENCH_churn`` is checked,
+every ``Mut``-spec row must (a) have actually churned —
+``turnover_frac`` >= 5% of the corpus inserted AND deleted during the
+soak; (b) keep ``recall_ratio_vs_static`` (mutated index vs the same
+spec rebuilt fresh on the surviving corpus) at or above the file's
+``config["churn_recall_ratio_floor"]`` (default 0.95) — incremental
+inserts may degrade gracefully, never collapse; (c) report EXACTLY zero
+``tombstone_violations`` and zero ``dropped_queries`` — a deleted row
+surfacing, or a query failing during a mutation, is a correctness bug
+with no tolerance; and (d) sustain ``qps_under_churn`` at or above
+``config["churn_qps_floor"]`` when the file records one.
+
 Exit status: 0 = all gates pass, 1 = regression (details on stdout),
 2 = usage/schema error. Wired into scripts/ci.sh behind ``CI_BENCH=1``.
 ``--format json`` emits the same verdict machine-readably (one object
@@ -94,6 +106,12 @@ SHARDED_RECALL_TOL = 0.01
 # the same 0.01 the rest of the gate uses
 GRAPH_QUANT_BYTES_FLOORS = {"sq8": 3.0, "pq": 4.0}
 GRAPH_QUANT_RECALL_TOL = 0.01
+# churn soak (live mutation): the soak must turn over at least this
+# corpus fraction for its gates to mean anything, and the mutated index
+# must keep this fraction of its static twin's recall (overridable per
+# file via config["churn_recall_ratio_floor"])
+CHURN_TURNOVER_FLOOR = 0.05
+CHURN_RECALL_RATIO_FLOOR = 0.95
 
 
 def _load(path: str) -> dict:
@@ -250,6 +268,47 @@ def check_bench(name: str, baseline: dict, candidate: dict,
                         f"fell more than {GRAPH_QUANT_RECALL_TOL} below "
                         f"the f32 twin's {twin_rec:g} — the codec noise "
                         "is leaking past the exact rerank")
+    if name == "churn":
+        cfg = candidate.get("config", {})
+        ratio_floor = float(cfg.get("churn_recall_ratio_floor",
+                                    CHURN_RECALL_RATIO_FLOOR))
+        qps_floor = cfg.get("churn_qps_floor")
+        mut_rows = [r for r in candidate["rows"]
+                    if str(r.get("spec", "")).startswith("Mut")]
+        if not mut_rows:
+            failures.append(
+                "churn: no Mut-spec row — the live-mutation gates have "
+                "nothing to read")
+        for r in mut_rows:
+            spec = str(r["spec"])
+            turn = float(r.get("turnover_frac", 0.0))
+            if turn < CHURN_TURNOVER_FLOOR:
+                failures.append(
+                    f"churn/{spec}: turnover_frac {turn:g} is below the "
+                    f"{CHURN_TURNOVER_FLOOR:.0%} soak floor — the churn "
+                    "gates measured a nearly-static index")
+            ratio = float(r.get("recall_ratio_vs_static", 0.0))
+            if ratio < ratio_floor:
+                failures.append(
+                    f"churn/{spec}: recall_ratio_vs_static {ratio:g} is "
+                    f"below the {ratio_floor:g} floor — incremental "
+                    "mutation is collapsing recall vs a fresh build")
+            if int(r.get("tombstone_violations", 1)) != 0:
+                failures.append(
+                    f"churn/{spec}: {int(r.get('tombstone_violations', 1))}"
+                    " tombstone violation(s) — a deleted row surfaced in "
+                    "an answer; the db_mask contract has no tolerance")
+            if int(r.get("dropped_queries", 1)) != 0:
+                failures.append(
+                    f"churn/{spec}: {int(r.get('dropped_queries', 1))} "
+                    "dropped quer(ies) during mutation — engine.mutate "
+                    "must serialize, never shed load")
+            if qps_floor is not None and float(
+                    r.get("qps_under_churn", 0.0)) < float(qps_floor):
+                failures.append(
+                    f"churn/{spec}: qps_under_churn "
+                    f"{float(r.get('qps_under_churn', 0.0)):g} is below "
+                    f"the {float(qps_floor):g} sustained-QPS floor")
     if name == "sharded":
         cfg = candidate.get("config", {})
         by_spec = {str(r.get("spec", "")): r for r in candidate["rows"]}

@@ -14,6 +14,10 @@
 #                                 #   serving bench, compare against the
 #                                 #   committed results/BENCH_*.json via
 #                                 #   scripts/check_bench.py
+#   CI_CHURN=1 scripts/ci.sh      # + churn soak: live mutation under
+#                                 #   load (benchmarks/table7_churn.py),
+#                                 #   gated by check_bench's churn block
+#                                 #   (tombstones, drops, recall ratio)
 #   CI_SKIP_TESTS=1 CI_BENCH=1 scripts/ci.sh   # bench gate only
 #   CI_SKIP_LINT=1 scripts/ci.sh  # skip the static-analysis gate
 #   scripts/ci.sh -k quant        # extra pytest args pass through
@@ -48,7 +52,8 @@ fi
 # Every suite that guards a subsystem contract must stay collected: a
 # rename/deselection that silently drops one is a coverage regression,
 # not a green build.
-REQUIRED_SUITES=(api properties kernels quantized graph serve sharded)
+REQUIRED_SUITES=(api properties kernels quantized graph serve sharded
+                 mutation)
 for suite in "${REQUIRED_SUITES[@]}"; do
     if ! grep -q "test_${suite}" <<<"$collect_out"; then
         echo "FATAL: tests/test_${suite}.py not collected" >&2
@@ -84,14 +89,26 @@ if [ "${CI_SKIP_TESTS:-0}" != "1" ]; then
 fi
 
 # Bench regression gate: snapshot the committed baselines, rerun the
-# serving bench (CPU-budget), and fail on recall/QPS regression.
+# selected benches (CPU-budget), and fail on recall/QPS regression.
 # check_bench discovers BENCH_*.json by glob on both sides — benches not
 # rerun here compare equal to their own snapshot, so no hardcoded list.
-if [ "${CI_BENCH:-0}" = "1" ]; then
+# CI_BENCH reruns the serving bench; CI_CHURN additionally soaks the
+# mutable tiers under concurrent insert/delete/query load (its gates —
+# zero tombstone violations, zero dropped queries, recall ratio vs the
+# static twin — are correctness, not perf, so they hold on any box).
+# The machine-readable verdict lands in results/check_bench_report.json
+# for CI to upload alongside the fresh BENCH_*.json files.
+if [ "${CI_BENCH:-0}" = "1" ] || [ "${CI_CHURN:-0}" = "1" ]; then
     baseline_dir=$(mktemp -d)
     trap 'rm -rf "$baseline_dir"' EXIT
     cp results/BENCH_*.json "$baseline_dir"/
-    python -m benchmarks.table5_serve --quick
+    if [ "${CI_BENCH:-0}" = "1" ]; then
+        python -m benchmarks.table5_serve --quick
+    fi
+    if [ "${CI_CHURN:-0}" = "1" ]; then
+        python -m benchmarks.table7_churn --quick
+    fi
     python scripts/check_bench.py --baseline "$baseline_dir" \
-        --candidate results
+        --candidate results --format json \
+        | tee results/check_bench_report.json
 fi

@@ -40,6 +40,14 @@ Rules:
                            children's ``fingerprint()`` in — swapping a
                            child would not invalidate the serving cache
                            even though the attribute itself is "read"
+- ``mutation-epoch``       mutable indexes: an attribute stored by a
+                           mutation method (``add`` / ``delete`` /
+                           ``insert`` / ``mark_deleted`` / ``rebuild``)
+                           but never hashed — the live index mutates,
+                           its fingerprint doesn't move, and the serving
+                           cache replays pre-mutation answers. Mutation
+                           state (the epoch counter, the tombstone mask,
+                           the id map) must be fingerprint state.
 """
 from __future__ import annotations
 
@@ -56,6 +64,10 @@ ROOT_CLASS = "VectorIndex"
 ASSIGN_ENTRIES = ("__init__", "build", "_load")
 #: methods whose reachable ``self.X`` reads count as hashed
 COVER_ENTRIES = ("_fingerprint_state", "ntotal")
+#: methods that mutate a live index in place; their reachable stores are
+#: mutation state and must be hashed (or exempted), else the serving
+#: cache replays pre-mutation answers
+MUTATION_ENTRIES = ("add", "delete", "insert", "mark_deleted", "rebuild")
 
 
 def static_mro(ci: ClassInfo, index: ModuleIndex) -> list[ClassInfo]:
@@ -282,6 +294,20 @@ def check_class(ci: ClassInfo, index: ModuleIndex) -> list[Finding]:
                     "delegates to, but _fingerprint_state() never folds "
                     "their fingerprint() in — swapping a child would not "
                     "invalidate the serving cache",
+            detail={"class": ci.name, "attr": attr}))
+
+    mut_stores: set[str] = set()
+    for entry in MUTATION_ENTRIES:
+        mut_stores |= method_attr_flows(mro, entry)[0]
+    for attr in sorted(mut_stores - covered - set(exempt)):
+        findings.append(Finding(
+            path=ci.module.path, line=line, checker=CHECKER,
+            rule="mutation-epoch",
+            message=f"{ci.name}.{attr} is stored by a mutation method "
+                    f"({'/'.join(MUTATION_ENTRIES)}) but never hashed by "
+                    "_fingerprint_state() — a live mutation would not "
+                    "move the fingerprint and the serving cache would "
+                    "replay pre-mutation answers",
             detail={"class": ci.name, "attr": attr}))
 
     saved = method_attr_flows(mro, "save")[1]

@@ -13,9 +13,12 @@ the reduced space") and every baseline/search tier the repo grew around it:
   the quantized storage tiers (``SQ8Index`` / ``PQIndex`` / ``IVFSQ8Index``
   / ``IVFPQIndex`` — int8 and product codes searched with ADC), the
   composable ``TwoStageIndex(reducer, base_index)`` that unlocks
-  RAE -> IVF/HNSW -> rerank, and ``ShardedIndex`` — the corpus
+  RAE -> IVF/HNSW -> rerank, ``ShardedIndex`` — the corpus
   partitioned across N child indexes, searched scatter-gather with a
-  deterministic (shard-count-invariant) top-k merge.
+  deterministic (shard-count-invariant) top-k merge — and
+  ``MutableIndex`` (factory prefix ``Mut``), the live-serving wrapper:
+  streaming ``add``, tombstone ``delete`` (masks pushed into the fused
+  kernels), and drift/imbalance-triggered rebuilds.
 * :func:`index_factory` — ``index_factory("RAE64,IVF256,PQ8x8,Rerank4")``
   builds the whole stack from a spec string; ``parse_index_spec`` exposes
   the parsed form, and ``str(spec)`` renders it back canonically.
@@ -44,6 +47,7 @@ from .index import (
 from .quantized import IVFPQIndex, IVFSQ8Index, PQIndex, SQ8Index
 from .graph import HNSWIndex
 from .sharded import ShardedIndex
+from .mutable import MutableIndex
 from .factory import IndexSpec, index_factory, parse_index_spec
 
 __all__ = [
@@ -53,6 +57,7 @@ __all__ = [
     "IVFPQIndex",
     "IVFSQ8Index",
     "IndexSpec",
+    "MutableIndex",
     "PQIndex",
     "SQ8Index",
     "RAEReducer",

@@ -2,7 +2,7 @@
 
 Grammar (comma-separated stages, case-insensitive)::
 
-    spec     := [reducer ","] [shard ","] stack ["," rerank]
+    spec     := ["Mut" ","] [reducer ","] [shard ","] stack ["," rerank]
     stack    := base | quant | base "," quant
     reducer  := ("RAE" | "PCA" | "RP" | "MDS" | "ISOMAP" | "UMAP") out_dim
     shard    := "Shard" n_shards            # partition the stack N ways
@@ -11,6 +11,11 @@ Grammar (comma-separated stages, case-insensitive)::
     rerank   := "Rerank" factor             # requires a reducer stage
 
 Stage semantics:
+
+* ``Mut`` — wraps the whole stack in :class:`MutableIndex`: streaming
+  ``add``/``delete`` with tombstone masks pushed down every tier, plus
+  drift-triggered rebuild policy (must come first; ``"Mut,RAE64,IVF256,
+  Rerank4"`` is the live-serving form of the paper stack).
 
 * ``reducer`` — any name registered via :func:`repro.api.register_reducer`
   (third-party reducers compose for free); maps the corpus to
@@ -88,9 +93,12 @@ class IndexSpec:
     rerank_factor: int = 1
     hnsw_m: int = 0                   # hnsw only: degree cap M
     shards: int = 0                   # 0 = unsharded
+    mutable: bool = False             # Mut prefix: MutableIndex wrapper
 
     def __str__(self) -> str:
         parts = []
+        if self.mutable:
+            parts.append("Mut")
         if self.reducer is not None:
             parts.append(f"{self.reducer.upper()}{self.out_dim}")
         if self.shards:
@@ -127,6 +135,7 @@ def parse_index_spec(spec: str) -> IndexSpec:
     rerank = 0
     hnsw_m = 0
     shards = 0
+    mutable = False
 
     def check_order(stage):
         if rerank:
@@ -189,6 +198,15 @@ def parse_index_spec(spec: str) -> IndexSpec:
                             "(it partitions the storage stack)")
             check_order("base")
             shards = int(num)
+        elif name == "mut":
+            if num is not None:
+                _fail(spec, "Mut takes no parameter")
+            if mutable:
+                _fail(spec, "multiple Mut stages")
+            if (reducer is not None or base is not None or quant is not None
+                    or shards or rerank):
+                _fail(spec, "Mut must come first (it wraps the whole stack)")
+            mutable = True
         elif name == "rerank":
             if num is None:
                 _fail(spec, "Rerank needs a factor, e.g. Rerank4")
@@ -218,7 +236,7 @@ def parse_index_spec(spec: str) -> IndexSpec:
     return IndexSpec(reducer=reducer, out_dim=out_dim, base=base or "flat",
                      n_cells=n_cells, quant=quant, pq_m=pq_m,
                      pq_bits=pq_bits, rerank_factor=rerank or 1,
-                     hnsw_m=hnsw_m, shards=shards)
+                     hnsw_m=hnsw_m, shards=shards, mutable=mutable)
 
 
 def _make_base(parsed: IndexSpec, metric: str, ctx: MeshCtx,
@@ -266,7 +284,8 @@ def index_factory(spec: str, *, metric: str = "euclidean",
     parsed = parse_index_spec(spec)
     if parsed.shards:
         child_spec = str(dataclasses.replace(
-            parsed, reducer=None, out_dim=0, shards=0, rerank_factor=1))
+            parsed, reducer=None, out_dim=0, shards=0, rerank_factor=1,
+            mutable=False))
         # device-parallel fan-out only covers the flat f32 scan; anything
         # fancier gets independent per-shard children on the thread pool
         mesh_ok = (ctx.mesh is not None and parsed.base == "flat"
@@ -277,9 +296,14 @@ def index_factory(spec: str, *, metric: str = "euclidean",
             index_kw=dict(index_kw or {}))
     else:
         base = _make_base(parsed, metric, ctx, dict(index_kw or {}))
-    if parsed.reducer is None:
-        return base
-    reducer = make_reducer(parsed.reducer, parsed.out_dim,
-                           **dict(reducer_kw or {}))
-    return TwoStageIndex(reducer, base, rerank_factor=parsed.rerank_factor,
-                         metric=metric)
+    stack: VectorIndex = base
+    if parsed.reducer is not None:
+        reducer = make_reducer(parsed.reducer, parsed.out_dim,
+                               **dict(reducer_kw or {}))
+        stack = TwoStageIndex(reducer, base,
+                              rerank_factor=parsed.rerank_factor,
+                              metric=metric)
+    if parsed.mutable:
+        from .mutable import MutableIndex  # cycle: lazy
+        stack = MutableIndex(stack)
+    return stack

@@ -215,10 +215,30 @@ class HNSWIndex(VectorIndex):
             return nq > 1
         return bool(self.batched)
 
-    def search(self, queries: np.ndarray, k: int) -> SearchResult:
+    def add(self, vecs: np.ndarray) -> np.ndarray:
+        """Incremental insert: run HNSW Alg. 1 for each new row against the
+        live graph (same code path as ``build``, so insert order — build
+        then add — is the only divergence from a from-scratch build), extend
+        the code payload with the already-trained codec, and re-pack so the
+        batched drivers see the new rows. Returns the new row ids."""
+        self._require_built()
+        nv = np.asarray(vecs, np.float32)
+        ids = hnsw_lib.insert_batch(self._g, nv,
+                                    ef_construction=self.ef_construction,
+                                    seed=self.seed)
+        if self.batched is not False or self.quant is not None:
+            self._g.pack()  # re-pack eagerly: serving must never stall
+        return ids
+
+    def search(self, queries: np.ndarray, k: int,
+               alive: Optional[np.ndarray] = None) -> SearchResult:
         """Beam search with ef = max(ef_search, k). Queries whose beam
         holds fewer than k nodes pad the tail with index -1 / score -inf
-        (FAISS convention, same as the IVF tiers)."""
+        (FAISS convention, same as the IVF tiers). ``alive`` (bool
+        [ntotal]) tombstones rows out of BOTH engines — a dead node never
+        enters a beam; the entry point must be alive (callers that delete
+        it reassign via :func:`repro.search.hnsw.reassign_entry`, which
+        ``MutableIndex.delete`` does automatically)."""
         self._require_built()
         q = np.asarray(queries, np.float32)
         k_req = min(k, self.ntotal)
@@ -226,7 +246,8 @@ class HNSWIndex(VectorIndex):
         t0 = time.perf_counter()
         if self._use_batched(q.shape[0]):
             scores, idx, evals, hops = hnsw_lib.search_batched(
-                self._g, q, k_req, ef_search=ef, frontier=self.frontier)
+                self._g, q, k_req, ef_search=ef, frontier=self.frontier,
+                alive=alive)
             g = self._g
             row_bytes = (g.codec.gather_bytes if g.codec is not None
                          else 4 * g.vecs.shape[1] + 4)
@@ -240,7 +261,7 @@ class HNSWIndex(VectorIndex):
                          float(evals.sum() * row_bytes) / max(hops, 1)}
         else:
             scores, idx, evals = hnsw_lib.search(self._g, q, k_req,
-                                                 ef_search=ef)
+                                                 ef_search=ef, alive=alive)
             stats = {"distance_evals": float(evals.mean())}
         dt = time.perf_counter() - t0
         return SearchResult(scores=scores, indices=idx, latency_s=dt,

@@ -162,7 +162,14 @@ class VectorIndex:
     def build(self, corpus: np.ndarray) -> "VectorIndex":
         raise NotImplementedError
 
-    def search(self, queries: np.ndarray, k: int) -> SearchResult:
+    def search(self, queries: np.ndarray, k: int,
+               alive: Optional[np.ndarray] = None) -> SearchResult:
+        """k-NN. ``alive`` (bool [ntotal], optional) tombstones rows: a
+        dead row never appears in the result — not even as a pre-rerank
+        candidate inside a composite — its slot padding to (-inf, -1).
+        ``alive=None`` must answer bitwise identically to the tier's
+        static path. Owned and threaded by :class:`MutableIndex`; static
+        callers never pass it."""
         raise NotImplementedError
 
     def save(self, directory: str) -> None:
@@ -260,13 +267,25 @@ class FlatIndex(VectorIndex):
     @functools.cached_property
     def _scan(self):
         return jax.jit(
-            lambda q, db, k: ds.search(q, db, k, self.ctx, metric=self.metric),
+            lambda q, db, alive, k: ds.search(q, db, k, self.ctx,
+                                              metric=self.metric,
+                                              alive=alive),
             static_argnames=("k",))
 
-    def search(self, queries: np.ndarray, k: int) -> SearchResult:
+    def add(self, vecs: np.ndarray) -> None:
+        """Streaming insert: append rows to the scanned corpus. New rows
+        are searchable immediately; existing rows keep their ids."""
+        self._require_built()
+        self._db = jnp.concatenate(
+            [self._db, jnp.asarray(vecs, jnp.float32)], axis=0)
+
+    def search(self, queries: np.ndarray, k: int,
+               alive: Optional[np.ndarray] = None) -> SearchResult:
         self._require_built()
         q = jnp.asarray(queries, jnp.float32)
-        return _timed(lambda: self._scan(q, self._db, k=min(k, self.ntotal)),
+        al = None if alive is None else jnp.asarray(np.asarray(alive, bool))
+        return _timed(lambda: self._scan(q, self._db, al,
+                                         k=min(k, self.ntotal)),
                       stats={"distance_evals": float(self.ntotal)})
 
     def save(self, directory: str) -> None:
@@ -350,6 +369,59 @@ class IVFFlatIndex(VectorIndex):
         self._ntotal = int(corpus.shape[0])
         return self
 
+    def add(self, vecs: np.ndarray) -> None:
+        """Streaming insert: assign each new row to its nearest centroid
+        and append into that cell's padded list — the classic IVF append
+        (centroids stay FIXED, so a drifting stream skews the cells;
+        :meth:`cell_imbalance` exposes the skew and ``MutableIndex``
+        re-clusters past its trigger). Touched cells are re-packed
+        prefix-dense; list capacity grows when a cell fills."""
+        self._require_built()
+        nv = np.asarray(vecs, np.float32)
+        cent = np.asarray(self._ivf.centroids, np.float32)
+        d2 = (np.sum(nv * nv, 1)[:, None] - 2.0 * nv @ cent.T
+              + np.sum(cent * cent, 1)[None, :])
+        cells = np.argmin(d2, axis=1)
+        lists = np.asarray(self._ivf.lists).copy()
+        mask = np.asarray(self._ivf.list_mask).copy()
+        lvecs = np.asarray(self._ivf.list_vecs).copy()
+        need = mask.sum(axis=1)
+        np.add.at(need, cells, 1)
+        cap = lists.shape[1]
+        new_cap = int(max(cap, need.max()))
+        if new_cap > cap:
+            pad = new_cap - cap
+            lists = np.pad(lists, ((0, 0), (0, pad)), constant_values=-1)
+            mask = np.pad(mask, ((0, 0), (0, pad)))
+            lvecs = np.pad(lvecs, ((0, 0), (0, pad), (0, 0)))
+        new_ids = np.arange(self._ntotal, self._ntotal + nv.shape[0],
+                            dtype=lists.dtype)
+        for c in np.unique(cells):
+            sel = cells == c
+            old = mask[c]
+            ids = np.concatenate([lists[c][old], new_ids[sel]])
+            vv = np.concatenate([lvecs[c][old], nv[sel]])
+            lists[c] = -1
+            mask[c] = False
+            lvecs[c, : len(ids)] = vv
+            lists[c, : len(ids)] = ids
+            mask[c, : len(ids)] = True
+        self._ivf = ivf_lib.IVFIndex(
+            centroids=self._ivf.centroids, lists=jnp.asarray(lists),
+            list_vecs=jnp.asarray(lvecs), list_mask=jnp.asarray(mask),
+            spill=self._ivf.spill)
+        self._cell_sizes = mask.sum(axis=1)
+        self._ntotal += int(nv.shape[0])
+
+    def cell_imbalance(self) -> float:
+        """Largest cell over the mean cell size — 1.0 is perfectly
+        balanced; appends against fixed centroids push it up, degrading
+        probe selectivity (one probe scans the fat cell). The
+        re-clustering trigger ``MutableIndex`` watches."""
+        self._require_built()
+        sizes = np.asarray(self._cell_sizes, np.float64)
+        return float(sizes.max() / max(sizes.mean(), 1e-12))
+
     @functools.cached_property
     def _probe(self):
         """Jitted probe scan (static k/nprobe): one XLA call per search
@@ -363,19 +435,27 @@ class IVFFlatIndex(VectorIndex):
 
         return jax.jit(fn, static_argnames=("k", "nprobe"))
 
-    def search(self, queries: np.ndarray, k: int) -> SearchResult:
+    def search(self, queries: np.ndarray, k: int,
+               alive: Optional[np.ndarray] = None) -> SearchResult:
         """Like FAISS, a query whose probed cells hold fewer than k members
-        pads the tail with index -1 / score -inf."""
+        pads the tail with index -1 / score -inf. ``alive`` folds into the
+        list mask (ids nulled too), so a tombstoned row can neither score
+        nor surface — the probe scan's own signature is unchanged."""
         self._require_built()
         q = jnp.asarray(queries, jnp.float32)
         nprobe = min(self.nprobe, int(self._ivf.centroids.shape[0]))
         k_req = min(k, self.ntotal)
         # the probe scan can surface at most nprobe * cell_cap rows
         k_eff = min(k_req, nprobe * int(self._ivf.lists.shape[1]))
+        lists, mask = self._ivf.lists, self._ivf.list_mask
+        if alive is not None:
+            al = jnp.asarray(np.asarray(alive, bool))
+            mask = mask & al[jnp.where(lists >= 0, lists, 0)]
+            lists = jnp.where(mask, lists, -1)
 
         def run():
-            v, i = self._probe(q, self._ivf.centroids, self._ivf.lists,
-                               self._ivf.list_vecs, self._ivf.list_mask,
+            v, i = self._probe(q, self._ivf.centroids, lists,
+                               self._ivf.list_vecs, mask,
                                k=k_eff, nprobe=nprobe)
             return _pad_result(v, i, k_req)
 
@@ -491,6 +571,25 @@ class TwoStageIndex(VectorIndex):
         self._db_full = jnp.asarray(corpus)
         return self
 
+    def add(self, vecs: np.ndarray) -> None:
+        """Streaming insert: encode the new rows once, push them down the
+        stack — incrementally when the base supports ``add`` (HNSW graph
+        insert, IVF cell append, flat concat), else by rebuilding the
+        base over the extended reduced corpus — and extend the full-space
+        rerank store. The fitted reducer is NOT refit here: drift policy
+        (when its Eq. 15 band breaks) belongs to ``MutableIndex``."""
+        self._require_built()
+        nv = np.asarray(vecs, np.float32)
+        z = np.asarray(self.reducer.transform(nv))
+        if hasattr(self.base, "add"):
+            self.base.add(z)
+        else:
+            full = np.concatenate(
+                [np.asarray(self._db_full, np.float32), nv])
+            self.base.build(np.asarray(self.reducer.transform(full)))
+        self._db_full = jnp.concatenate(
+            [self._db_full, jnp.asarray(nv, jnp.float32)], axis=0)
+
     @functools.cached_property
     def _rerank(self):
         # the shared stage-2 engine (search.twostage.rerank_candidates):
@@ -500,14 +599,17 @@ class TwoStageIndex(VectorIndex):
             functools.partial(ts_lib.rerank_candidates, metric=self.metric),
             static_argnames=("k",))
 
-    def search(self, queries: np.ndarray, k: int) -> SearchResult:
+    def search(self, queries: np.ndarray, k: int,
+               alive: Optional[np.ndarray] = None) -> SearchResult:
         self._require_built()
         t0 = time.perf_counter()
         zq = self.reducer.transform(np.asarray(queries, np.float32))
         k_eff = min(k, self.ntotal)
         over = getattr(self.base, "stage1_oversample", 1)
         k1 = min(k_eff * self.rerank_factor * over, self.ntotal)
-        stage1 = self.base.search(zq, k1)
+        # tombstones are enforced in stage 1: a deleted row never appears
+        # even as a pre-rerank candidate, so the rerank can't resurface it
+        stage1 = self.base.search(zq, k1, alive=alive)
         cand = jnp.asarray(stage1.indices)
         q = jnp.asarray(queries, jnp.float32)
         scores, idx = self._rerank(q, self._db_full, cand, k=k_eff)

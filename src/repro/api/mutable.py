@@ -1,0 +1,340 @@
+"""``MutableIndex``: streaming inserts + tombstone deletes over any tier.
+
+Every other ``VectorIndex`` in this package is write-once: ``build`` then
+``search``. This wrapper is the live-serving form (factory prefix
+``Mut``, e.g. ``"Mut,RAE64,IVF256,Rerank4"``): it owns the mutation
+state — the appended corpus, the tombstone mask, and a monotonically
+bumped **mutation epoch** — and pushes each mutation down the wrapped
+stack by the cheapest mechanism the tier supports:
+
+* **insert** — tiers with an ``add`` method take rows incrementally
+  (HNSW runs the Alg. 1 insert against the live graph and re-packs, IVF
+  appends to the nearest centroid's list, flat concatenates, TwoStage
+  encodes once and recurses); anything else is rebuilt over the extended
+  corpus. Either way the new rows are searchable the moment ``add``
+  returns.
+* **delete** — rows are never physically removed on the query path:
+  ``delete`` flips bits in the ``alive`` mask that ``search`` threads
+  down every tier into the fused kernels' ``db_mask`` operand, so a
+  tombstoned row can never surface — not even as a pre-rerank candidate.
+  When the HNSW entry point itself is tombstoned the graph entry is
+  reassigned to the highest alive node before the next search.
+* **rebuild** — compacts tombstones away and re-clusters/re-packs from
+  scratch. Triggered explicitly, by IVF cell imbalance after appends
+  (fixed centroids + drifting stream = fat cells), or by the RAE drift
+  monitor: :class:`repro.core.theory.DriftTracker` watches incoming
+  vectors' norm distortion against the reducer's Eq. 15 singular-value
+  band and forces a reducer **retrain** (not just an index rebuild) once
+  the violation rate says the live distribution left the fitted
+  manifold. Reducer and index swap together — a retrained encoder over a
+  stale index (or vice versa) would answer garbage.
+
+**Row ids are stable for life.** ``add`` returns monotonically assigned
+external ids; ``search`` results and ``delete`` arguments speak those
+ids, and a compacting ``rebuild`` remaps internals without changing
+them.
+
+**Every mutation bumps ``_epoch``**, and the epoch is fingerprint state
+(alongside the alive mask, the id map and the inner fingerprint), so the
+serving cache can never replay a pre-mutation answer — the invariant the
+``mutation-epoch`` lint rule (``analysis/fingerprints.py``) enforces for
+every mutable index class.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+from ..core.theory import DriftTracker
+from ..search import hnsw as hnsw_lib
+from .graph import HNSWIndex
+from .index import (SearchResult, VectorIndex, _load_arrays, _save_dir,
+                    load_index, register_index)
+
+
+@register_index("mutable")
+class MutableIndex(VectorIndex):
+    """Wrap a built (or buildable) index stack with add/delete/rebuild."""
+
+    _fp_exempt = {
+        "_corpus": "row content is hashed via the inner index fingerprint "
+                   "(rows are inserted into the inner tier verbatim); the "
+                   "host copy only feeds rebuilds",
+        "_next_id": "derived: _row_ids.max()+1, and _row_ids is hashed",
+        "imbalance_trigger": "rebuild policy knob: a triggered rebuild "
+                             "reshapes the hashed inner fingerprint and "
+                             "bumps the hashed epoch",
+        "drift_tol": "drift policy knob; same argument as "
+                     "imbalance_trigger",
+        "drift_threshold": "drift policy knob; same argument as "
+                           "imbalance_trigger",
+        "_drift": "monitoring state; changes answers only through a "
+                  "rebuild, which bumps the hashed epoch",
+        "n_added": "host-side telemetry; the hashed epoch advances with "
+                   "every counted mutation",
+        "n_deleted": "host-side telemetry; same as n_added",
+        "n_rebuilds": "host-side telemetry; same as n_added",
+        "n_reducer_retrains": "host-side telemetry; same as n_added",
+    }
+
+    def __init__(self, inner: VectorIndex, imbalance_trigger: float = 4.0,
+                 drift_tol: float = 0.25, drift_threshold: float = 0.10):
+        self._inner = inner
+        self.imbalance_trigger = imbalance_trigger
+        self.drift_tol = drift_tol
+        self.drift_threshold = drift_threshold
+        self._corpus: Optional[np.ndarray] = None
+        self._alive: Optional[np.ndarray] = None
+        self._row_ids: Optional[np.ndarray] = None
+        self._next_id = 0
+        self._epoch = 0
+        self._drift: Optional[DriftTracker] = None
+        self.n_added = 0
+        self.n_deleted = 0
+        self.n_rebuilds = 0
+        self.n_reducer_retrains = 0
+
+    # -- identity ----------------------------------------------------------
+    @property
+    def ntotal(self) -> int:
+        """Alive rows — the logical corpus size (tombstoned rows still
+        occupy inner slots until a rebuild compacts them)."""
+        return 0 if self._alive is None else int(self._alive.sum())
+
+    @property
+    def built(self) -> bool:
+        return self._corpus is not None and self._inner.built
+
+    @property
+    def bytes_per_vector(self) -> float:
+        return self._inner.bytes_per_vector
+
+    @property
+    def dim(self) -> int:
+        return self._inner.dim
+
+    @property
+    def epoch(self) -> int:
+        """Mutation counter: bumps on every add/delete/rebuild."""
+        return self._epoch
+
+    @property
+    def stage1_oversample(self) -> int:
+        return getattr(self._inner, "stage1_oversample", 1)
+
+    def _fingerprint_state(self) -> list:
+        # the epoch makes every mutation a new identity even when the
+        # content hash could transiently collide; alive + row_ids pin the
+        # tombstone set and the external id mapping; the inner fingerprint
+        # pins the searched content
+        return [f"epoch={self._epoch}", self._inner.fingerprint(),
+                self._alive, self._row_ids]
+
+    def mutation_stats(self) -> dict[str, float]:
+        """Host-side mutation telemetry (serve engine folds this into
+        ``stats()``)."""
+        out = {"epoch": float(self._epoch), "added": float(self.n_added),
+               "deleted": float(self.n_deleted),
+               "rebuilds": float(self.n_rebuilds),
+               "reducer_retrains": float(self.n_reducer_retrains),
+               "tombstones": 0.0 if self._alive is None
+               else float((~self._alive).sum())}
+        if self._drift is not None:
+            out["drift_violation_rate"] = self._drift.violation_rate
+        return out
+
+    # -- drift monitor -----------------------------------------------------
+    def _reducer(self):
+        return getattr(self._inner, "reducer", None)
+
+    def _arm_drift(self) -> None:
+        """(Re)build the Eq. 15 monitor from the fitted reducer's encoder
+        weights; reducers without a weight matrix (or no reducer at all)
+        leave drift tracking off."""
+        self._drift = None
+        r = self._reducer()
+        params = getattr(r, "params_", None)
+        if params is not None and "w_e" in params:
+            from ..core import rae as rae_lib
+            self._drift = DriftTracker.from_weights(
+                rae_lib.encoder_matrix(params), tol=self.drift_tol,
+                threshold=self.drift_threshold)
+
+    def _graph_index(self) -> Optional[HNSWIndex]:
+        obj: Any = self._inner
+        while obj is not None:
+            if isinstance(obj, HNSWIndex):
+                return obj
+            obj = getattr(obj, "base", None)
+        return None
+
+    def _imbalance(self) -> float:
+        obj: Any = self._inner
+        while obj is not None:
+            fn = getattr(obj, "cell_imbalance", None)
+            if fn is not None:
+                return float(fn())
+            obj = getattr(obj, "base", None)
+        return 1.0
+
+    # -- lifecycle ---------------------------------------------------------
+    def build(self, corpus: np.ndarray) -> "MutableIndex":
+        corpus = np.asarray(corpus, np.float32)
+        self._inner.build(corpus)
+        self._corpus = corpus.copy()
+        self._alive = np.ones(corpus.shape[0], bool)
+        self._row_ids = np.arange(corpus.shape[0], dtype=np.int64)
+        self._next_id = int(corpus.shape[0])
+        self._epoch = 0
+        self._arm_drift()
+        return self
+
+    def add(self, vecs: np.ndarray) -> np.ndarray:
+        """Insert rows; returns their external ids. New rows answer the
+        very next ``search``. May trigger a synchronous rebuild (IVF
+        imbalance / reducer drift) — serving deployments run ``add``
+        through ``SearchEngine.mutate`` so queries never observe a
+        half-applied state."""
+        self._require_built()
+        nv = np.atleast_2d(np.asarray(vecs, np.float32))
+        if nv.shape[1] != self._corpus.shape[1]:
+            raise ValueError(f"add: dim {nv.shape[1]} != index dim "
+                             f"{self._corpus.shape[1]}")
+        ext = np.arange(self._next_id, self._next_id + nv.shape[0],
+                        dtype=np.int64)
+        self._next_id += int(nv.shape[0])
+        self._corpus = np.concatenate([self._corpus, nv])
+        self._alive = np.concatenate(
+            [self._alive, np.ones(nv.shape[0], bool)])
+        self._row_ids = np.concatenate([self._row_ids, ext])
+        r = self._reducer()
+        if self._drift is not None and r is not None:
+            self._drift.observe(nv, np.asarray(r.transform(nv)))
+        if hasattr(self._inner, "add"):
+            self._inner.add(nv)
+        else:
+            # no incremental path (sharded / quantized-flat tiers):
+            # rebuild the inner structure over the full slab — tombstones
+            # stay masked, ids stay positional
+            self._inner.build(self._corpus)
+        self._epoch += 1
+        self.n_added += int(nv.shape[0])
+        if self._drift is not None and self._drift.should_retrain:
+            self.rebuild(refit_reducer=True)
+        elif self._imbalance() > self.imbalance_trigger:
+            self.rebuild()
+        return ext
+
+    def delete(self, ids) -> int:
+        """Tombstone external ids; returns how many were newly deleted
+        (re-deleting is a no-op, unknown ids raise). The rows stop
+        surfacing immediately — no rebuild on the delete path."""
+        self._require_built()
+        ids = np.asarray(ids, np.int64).ravel()
+        if ids.size == 0:
+            return 0
+        pos = np.searchsorted(self._row_ids, ids)
+        bad = (pos >= self._row_ids.shape[0]) \
+            | (self._row_ids[np.minimum(pos, self._row_ids.shape[0] - 1)]
+               != ids)
+        if bad.any():
+            raise KeyError(f"delete: unknown ids {ids[bad][:8].tolist()}")
+        newly = int(self._alive[pos].sum())
+        if newly == 0:
+            return 0
+        self._alive[pos] = False
+        self._epoch += 1
+        self.n_deleted += newly
+        g = self._graph_index()
+        if g is not None and self._alive.any() \
+                and not self._alive[g._g.entry]:
+            # the beam must start somewhere alive; pick the highest alive
+            # node so upper-layer routing keeps working
+            hnsw_lib.reassign_entry(g._g, self._alive)
+        return newly
+
+    def rebuild(self, refit_reducer: bool = False) -> "MutableIndex":
+        """Compact tombstones away and rebuild the inner stack from
+        scratch (fresh k-means / graph / packing over only the alive
+        rows). ``refit_reducer=True`` additionally retrains the reducer
+        on the compacted corpus — the drift-retrain path; reducer and
+        index always swap together. External ids survive the remap."""
+        self._require_built()
+        keep = np.flatnonzero(self._alive)
+        self._corpus = np.ascontiguousarray(self._corpus[keep])
+        self._row_ids = np.ascontiguousarray(self._row_ids[keep])
+        self._alive = np.ones(keep.shape[0], bool)
+        r = self._reducer()
+        if refit_reducer and r is not None \
+                and hasattr(r, "params_"):
+            r.params_ = None  # TwoStageIndex.build refits unfitted reducers
+            self.n_reducer_retrains += 1
+        self._inner.build(self._corpus)
+        self._arm_drift()
+        self._epoch += 1
+        self.n_rebuilds += 1
+        return self
+
+    # -- search ------------------------------------------------------------
+    def search(self, queries: np.ndarray, k: int,
+               alive: Optional[np.ndarray] = None) -> SearchResult:
+        self._require_built()
+        if alive is not None:
+            raise ValueError("MutableIndex owns the tombstone mask; "
+                             "callers never pass alive")
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        n_alive = int(self._alive.sum())
+        if n_alive == 0:
+            return SearchResult(
+                scores=np.full((q.shape[0], 0), -np.inf, np.float32),
+                indices=np.full((q.shape[0], 0), -1, np.int64),
+                latency_s=0.0, stats={"distance_evals": 0.0})
+        # alive=None keeps the inner tiers on their bitwise-static paths
+        mask = None if self._alive.all() else self._alive
+        r = self._inner.search(q, min(k, n_alive), alive=mask)
+        idx = np.asarray(r.indices)
+        safe = np.clip(idx, 0, self._row_ids.shape[0] - 1)
+        ext = np.where(idx >= 0, self._row_ids[safe], -1)
+        return SearchResult(scores=np.asarray(r.scores), indices=ext,
+                            latency_s=r.latency_s, stats=dict(r.stats))
+
+    # -- persistence -------------------------------------------------------
+    def save(self, directory: str) -> None:
+        import os
+
+        self._require_built()
+        meta = {"kind": self.kind, "epoch": self._epoch,
+                "next_id": self._next_id,
+                "imbalance_trigger": self.imbalance_trigger,
+                "drift_tol": self.drift_tol,
+                "drift_threshold": self.drift_threshold,
+                "n_added": self.n_added, "n_deleted": self.n_deleted,
+                "n_rebuilds": self.n_rebuilds,
+                "n_reducer_retrains": self.n_reducer_retrains}
+        _save_dir(directory, meta,
+                  {"corpus": self._corpus, "alive": self._alive,
+                   "row_ids": self._row_ids})
+        self._inner.save(os.path.join(directory, "inner"))
+
+    @classmethod
+    def _load(cls, directory: str, meta: dict[str, Any]) -> "MutableIndex":
+        import os
+
+        inner = load_index(os.path.join(directory, "inner"))
+        self = cls(inner,
+                   imbalance_trigger=float(meta["imbalance_trigger"]),
+                   drift_tol=float(meta["drift_tol"]),
+                   drift_threshold=float(meta["drift_threshold"]))
+        a = _load_arrays(directory)
+        self._corpus = np.asarray(a["corpus"], np.float32)
+        self._alive = np.asarray(a["alive"], bool)
+        self._row_ids = np.asarray(a["row_ids"], np.int64)
+        self._epoch = int(meta["epoch"])
+        self._next_id = int(meta["next_id"])
+        self.n_added = int(meta.get("n_added", 0))
+        self.n_deleted = int(meta.get("n_deleted", 0))
+        self.n_rebuilds = int(meta.get("n_rebuilds", 0))
+        self.n_reducer_retrains = int(meta.get("n_reducer_retrains", 0))
+        self._arm_drift()
+        return self

@@ -34,6 +34,37 @@ from .index import (VectorIndex, _load_arrays, _pad_result, _probed_sizes,
                     _save_dir, _timed, register_index)
 
 
+def _drop_tombstones(vals, idx, alive: np.ndarray, k_req: int
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Strip tombstoned ids out of an over-fetched top-k.
+
+    The flat quantized scans (``sq8_scan`` / ``pq_adc``) have no mask
+    operand, so callers over-fetch ``k + n_dead`` rows — enough that the
+    dead rows can never crowd out k alive ones — and this filters them,
+    shifting survivors left (stable, so relative order is preserved) and
+    padding the tail with the house (-inf, -1) convention."""
+    v = np.asarray(vals, np.float32)
+    i = np.asarray(idx)
+    keep = (i >= 0) & alive[np.where(i >= 0, i, 0)]
+    # stable sort on "dead?" moves survivors left without reordering them
+    order = np.argsort(~keep, axis=1, kind="stable")[:, :k_req]
+    rr = np.arange(v.shape[0])[:, None]
+    kept = keep[rr, order]
+    out_v = np.where(kept, v[rr, order], -np.inf).astype(np.float32)
+    out_i = np.where(kept, i[rr, order], -1)
+    return out_v, out_i
+
+
+def _fold_alive_into_lists(lists, mask, alive):
+    """Fold a row-level tombstone mask into IVF list slots: a dead row's
+    slot is masked AND its id nulled to -1 — the probe scans keep real ids
+    on masked slots (at -inf), which could surface when a probe holds
+    fewer than k alive members."""
+    al = jnp.asarray(np.asarray(alive, bool))
+    mask = mask & al[jnp.where(lists >= 0, lists, 0)]
+    return jnp.where(mask, lists, -1), mask
+
+
 # ---------------------------------------------------------------------------
 # SQ8 flat
 # ---------------------------------------------------------------------------
@@ -88,13 +119,25 @@ class SQ8Index(VectorIndex):
         self._recon_sq = qz.sq8_recon_sq_norms(self._sq, self._codes)
         return self
 
-    def search(self, queries: np.ndarray, k: int) -> "SearchResult":
+    def search(self, queries: np.ndarray, k: int,
+               alive: Optional[np.ndarray] = None) -> "SearchResult":
         self._require_built()
         q = jnp.asarray(queries, jnp.float32)
         k_eff = min(k, self.ntotal)
-        return _timed(lambda: qz.sq8_scan(self._sq.vmin, self._sq.step, q,
-                                          self._codes, self._recon_sq, k_eff),
-                      stats={"distance_evals": float(self.ntotal)})
+        if alive is None:
+            return _timed(
+                lambda: qz.sq8_scan(self._sq.vmin, self._sq.step, q,
+                                    self._codes, self._recon_sq, k_eff),
+                stats={"distance_evals": float(self.ntotal)})
+        al = np.asarray(alive, bool)
+        k_fetch = min(self.ntotal, k_eff + int((~al).sum()))
+
+        def run():
+            v, i = qz.sq8_scan(self._sq.vmin, self._sq.step, q, self._codes,
+                               self._recon_sq, k_fetch)
+            return _drop_tombstones(v, i, al, k_eff)
+
+        return _timed(run, stats={"distance_evals": float(self.ntotal)})
 
     def save(self, directory: str) -> None:
         self._require_built()
@@ -181,13 +224,23 @@ class PQIndex(VectorIndex):
         self._codes = qz.pq_encode(self._pq, corpus)
         return self
 
-    def search(self, queries: np.ndarray, k: int) -> "SearchResult":
+    def search(self, queries: np.ndarray, k: int,
+               alive: Optional[np.ndarray] = None) -> "SearchResult":
         self._require_built()
         q = jnp.asarray(queries, jnp.float32)
         k_eff = min(k, self.ntotal)
-        return _timed(lambda: pq_adc(q, self._pq.codebooks, self._codes,
-                                     k_eff),
-                      stats={"distance_evals": float(self.ntotal)})
+        if alive is None:
+            return _timed(lambda: pq_adc(q, self._pq.codebooks, self._codes,
+                                         k_eff),
+                          stats={"distance_evals": float(self.ntotal)})
+        al = np.asarray(alive, bool)
+        k_fetch = min(self.ntotal, k_eff + int((~al).sum()))
+
+        def run():
+            v, i = pq_adc(q, self._pq.codebooks, self._codes, k_fetch)
+            return _drop_tombstones(v, i, al, k_eff)
+
+        return _timed(run, stats={"distance_evals": float(self.ntotal)})
 
     def save(self, directory: str) -> None:
         self._require_built()
@@ -351,14 +404,18 @@ class IVFSQ8Index(_IVFQuantBase):
             self._sq, flat).reshape(c, cap)
         return self
 
-    def search(self, queries: np.ndarray, k: int) -> "SearchResult":
+    def search(self, queries: np.ndarray, k: int,
+               alive: Optional[np.ndarray] = None) -> "SearchResult":
         self._require_built()
         q = jnp.asarray(queries, jnp.float32)
         k_req, k_eff, nprobe = self._probe_budget(k)
+        lists, mask = self._lists, self._mask
+        if alive is not None:
+            lists, mask = _fold_alive_into_lists(lists, mask, alive)
 
         def run():
-            v, i = qz.ivf_sq8_search(self._centroids, self._lists,
-                                     self._codes, self._recon_sq, self._mask,
+            v, i = qz.ivf_sq8_search(self._centroids, lists,
+                                     self._codes, self._recon_sq, mask,
                                      self._sq.vmin, self._sq.step, q,
                                      k_eff, nprobe)
             return _pad_result(v, i, k_req)
@@ -434,14 +491,18 @@ class IVFPQIndex(_IVFQuantBase):
         self._codes = flat.reshape(c, cap, self.m)
         return self
 
-    def search(self, queries: np.ndarray, k: int) -> "SearchResult":
+    def search(self, queries: np.ndarray, k: int,
+               alive: Optional[np.ndarray] = None) -> "SearchResult":
         self._require_built()
         q = jnp.asarray(queries, jnp.float32)
         k_req, k_eff, nprobe = self._probe_budget(k)
+        lists, mask = self._lists, self._mask
+        if alive is not None:
+            lists, mask = _fold_alive_into_lists(lists, mask, alive)
 
         def run():
-            v, i = qz.ivf_pq_search(self._centroids, self._lists,
-                                    self._codes, self._mask,
+            v, i = qz.ivf_pq_search(self._centroids, lists,
+                                    self._codes, mask,
                                     self._pq.codebooks, q, k_eff, nprobe)
             return _pad_result(v, i, k_req)
 

@@ -213,18 +213,26 @@ class ShardedIndex(VectorIndex):
             max_workers=self.n_workers or max(1, len(self._shards)),
             thread_name_prefix="shard")
 
-    def search(self, queries: np.ndarray, k: int) -> SearchResult:
+    def search(self, queries: np.ndarray, k: int,
+               alive: Optional[np.ndarray] = None) -> SearchResult:
         self._require_built()
         t0 = time.perf_counter()
         q = np.asarray(queries, np.float32)
         k_req = min(k, self.ntotal)
         n_sh = len(self._shards)
+        # tombstones slice per shard through the row map: each child sees
+        # only ITS rows' alive bits, in its local row order
+        al = None if alive is None else np.asarray(alive, bool)
+        child_alive = [None if al is None else al[rows]
+                       for rows in self._row_maps]
         if n_sh == 1:
-            results = [self._shards[0].search(q, min(k_req,
-                                                     self._shards[0].ntotal))]
+            results = [self._shards[0].search(
+                q, min(k_req, self._shards[0].ntotal),
+                alive=child_alive[0])]
         else:
             futs = [self._pool.submit(self._shards[s].search, q,
-                                      min(k_req, self._shards[s].ntotal))
+                                      min(k_req, self._shards[s].ntotal),
+                                      alive=child_alive[s])
                     for s in range(n_sh)]
             results = [f.result() for f in futs]
         vals = np.concatenate(

@@ -8,11 +8,19 @@
   order d(Wa,Wi) <= d(Wa,Wj) is provably preserved. ``certified_fraction``
   reports how many (i, j) relations the bound certifies — the quantitative
   bridge between kappa(W) and P_overall the paper argues qualitatively.
+* :class:`DriftTracker` — the *serving-time* form of Eq. 15: a streaming
+  monitor that counts incoming vectors whose norm distortion
+  ``||Wx|| / ||x||`` escapes the trained ``[sigma_min, sigma_max]`` band,
+  and trips a retrain signal when the violation rate says the live
+  distribution has drifted off the manifold the reducer was fitted on.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .spectral import singular_values
 
@@ -102,3 +110,73 @@ def certified_fraction(w: jax.Array, x: jax.Array, k: int, n_far: int = 32,
     # near distance (kth) as the binding constraint per anchor
     certified = (d / jnp.maximum(kth, 1e-30) > kappa) & far_mask
     return jnp.sum(certified) / jnp.maximum(jnp.sum(far_mask), 1)
+
+
+@dataclass
+class DriftTracker:
+    """Streaming Eq. 15 monitor for live index mutation.
+
+    At fit time the reducer's singular values bound every in-distribution
+    vector's norm distortion: ``sigma_min ||x|| <= ||Wx|| <= sigma_max
+    ||x||`` (lower half exact on row(W); embedding corpora concentrate
+    there — see :func:`norm_bounds_hold`). Streamed inserts that land OFF
+    that manifold show up as ratios escaping the band — the cheapest
+    observable signal that the fitted reducer no longer matches the live
+    distribution and stage-1 recall is silently decaying. ``observe`` is
+    pure host-side numpy on per-batch norms: it rides the insert path
+    without touching any jitted search function.
+
+    ``tol`` widens the band (fit-time ratios sit strictly inside it;
+    drift must clear the slack to count); ``threshold`` is the violation
+    rate that trips ``should_retrain``; ``min_observed`` stops a handful
+    of early outliers from forcing a retrain.
+    """
+
+    sigma_min: float
+    sigma_max: float
+    tol: float = 0.05
+    threshold: float = 0.10
+    min_observed: int = 64
+    observed: int = 0
+    violations: int = 0
+
+    @classmethod
+    def from_weights(cls, w: jax.Array, tol: float = 0.05,
+                     threshold: float = 0.10,
+                     min_observed: int = 64) -> "DriftTracker":
+        """Band from the reducer's weight matrix (Eq. 15 verbatim)."""
+        s = np.asarray(singular_values(w))
+        return cls(sigma_min=float(s[-1]), sigma_max=float(s[0]), tol=tol,
+                   threshold=threshold, min_observed=min_observed)
+
+    def observe(self, xs: np.ndarray, zs: np.ndarray) -> float:
+        """Fold a batch of (original, reduced) vectors into the monitor.
+
+        Returns this batch's violation fraction; the cumulative rate is
+        ``violation_rate``. Zero-norm rows are skipped (no ratio)."""
+        xn = np.linalg.norm(np.asarray(xs, np.float32), axis=-1)
+        zn = np.linalg.norm(np.asarray(zs, np.float32), axis=-1)
+        ok = xn > 1e-12
+        ratio = zn[ok] / xn[ok]
+        lo = self.sigma_min * (1.0 - self.tol)
+        hi = self.sigma_max * (1.0 + self.tol)
+        bad = int(np.sum((ratio < lo) | (ratio > hi)))
+        self.observed += int(ratio.shape[0])
+        self.violations += bad
+        return bad / max(ratio.shape[0], 1)
+
+    @property
+    def violation_rate(self) -> float:
+        return self.violations / max(self.observed, 1)
+
+    @property
+    def should_retrain(self) -> bool:
+        """True once enough stream has been seen AND the violation rate
+        clears the threshold — the reducer-retrain trigger."""
+        return (self.observed >= self.min_observed
+                and self.violation_rate > self.threshold)
+
+    def reset(self) -> None:
+        """Forget the stream (called after a retrain swaps the band)."""
+        self.observed = 0
+        self.violations = 0

@@ -35,7 +35,7 @@ def _pallas_padded(queries, db, db_sq, nbr_ids, beam_v, beam_i, interpret):
 
 
 def graph_beam(queries, db, nbr_ids, beam_v, beam_i, db_sq=None, q_sq=None,
-               impl: str = "auto", interpret: bool = False
+               db_mask=None, impl: str = "auto", interpret: bool = False
                ) -> tuple[np.ndarray, np.ndarray]:
     """One fused traversal hop: gather ``nbr_ids`` rows of ``db``, score
     them against ``queries`` (-squared-L2), and merge into the running
@@ -47,13 +47,22 @@ def graph_beam(queries, db, nbr_ids, beam_v, beam_i, db_sq=None, q_sq=None,
     descending, pads at the tail. ``db_sq``/``q_sq`` = optional
     precomputed squared norms (the packed graph supplies the former, the
     hop loop hoists the latter; the pallas kernel computes ``q_sq``
-    on-chip and ignores the hint).
+    on-chip and ignores the hint). ``db_mask`` (bool [N]) tombstones db
+    rows: masked candidate ids are demoted to -1 before the hop, so a
+    deleted row can never enter the beam on either impl.
     """
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "np"
     if impl == "np":
         return graph_beam_ref(queries, db, nbr_ids, beam_v, beam_i, db_sq,
-                              q_sq)
+                              q_sq, db_mask)
+    if db_mask is not None:
+        # demote tombstoned candidates to pad slots pre-kernel: the pallas
+        # hop then needs no mask operand of its own
+        ids_np = np.asarray(nbr_ids, np.int32)
+        safe = np.where(ids_np >= 0, ids_np, 0)
+        nbr_ids = np.where((ids_np >= 0) & np.asarray(db_mask, bool)[safe],
+                           ids_np, -1)
     q = jnp.asarray(queries, jnp.float32)
     if db_sq is None:
         db_sq = jnp.sum(jnp.asarray(db, jnp.float32) ** 2, axis=-1)

@@ -18,7 +18,8 @@ from ..common import NEG_INF, canonicalize_pads
 def graph_beam_ref(queries: np.ndarray, db: np.ndarray, nbr_ids: np.ndarray,
                    beam_v: np.ndarray, beam_i: np.ndarray,
                    db_sq: np.ndarray | None = None,
-                   q_sq: np.ndarray | None = None
+                   q_sq: np.ndarray | None = None,
+                   db_mask: np.ndarray | None = None
                    ) -> tuple[np.ndarray, np.ndarray]:
     """One batched beam hop: score candidate ids and merge into the beam.
 
@@ -28,7 +29,9 @@ def graph_beam_ref(queries: np.ndarray, db: np.ndarray, nbr_ids: np.ndarray,
     (NEG_INF, -1) or (-inf, -1) in empty slots. ``db_sq``/``q_sq`` =
     precomputed squared norms (the packed graph carries the former, the
     traversal hoists the latter out of its hop loop; both recomputed here
-    when absent). Returns the merged (values, ids), again sorted
+    when absent). ``db_mask`` (bool [N]) tombstones db rows: a masked
+    candidate is treated exactly like a -1 slot, so a deleted row can
+    never enter the beam. Returns the merged (values, ids), again sorted
     descending, ef wide, pads canonicalized to (NEG_INF, -1). Masked
     candidates score ``NEG_INF`` so they can never displace a real entry;
     ties resolve stably toward the beam (then lower candidate slot),
@@ -46,6 +49,8 @@ def graph_beam_ref(queries: np.ndarray, db: np.ndarray, nbr_ids: np.ndarray,
     ef = bv.shape[1]
     valid = ids >= 0
     safe = np.where(valid, ids, 0)
+    if db_mask is not None:
+        valid = valid & np.asarray(db_mask, bool)[safe]
     g = d[safe]                                          # [Q, W, d]
     if db_sq is None:
         db_sq = np.einsum("nd,nd->n", d, d)

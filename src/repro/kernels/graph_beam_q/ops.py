@@ -41,8 +41,9 @@ def _pallas_padded(q_op, q_bias, codes, node_bias, nbr_ids, beam_v, beam_i,
 
 
 def graph_beam_q(q_op, q_bias, codes, node_bias, nbr_ids, beam_v, beam_i,
-                 mode: str = "sq8", ksub: int = 0, impl: str = "auto",
-                 interpret: bool = False) -> tuple[np.ndarray, np.ndarray]:
+                 db_mask=None, mode: str = "sq8", ksub: int = 0,
+                 impl: str = "auto", interpret: bool = False
+                 ) -> tuple[np.ndarray, np.ndarray]:
     """One fused quantized traversal hop: gather ``nbr_ids`` rows of the
     stored ``codes``, score them via the unified affine form
     ``contract(q_op, code_row) + q_bias - node_bias`` (SQ8 dequant-free
@@ -53,6 +54,8 @@ def graph_beam_q(q_op, q_bias, codes, node_bias, nbr_ids, beam_v, beam_i,
     q_op [Q, Dop] f32; q_bias [Q] f32; codes [N, C] uint8; node_bias [N]
     f32; nbr_ids [Q, W] int32, -1 = masked; beam_v/beam_i [Q, ef] sorted
     descending. ``mode`` = "sq8" | "pq" (``ksub`` = LUT stride, pq only).
+    ``db_mask`` (bool [N]) tombstones code rows: masked candidate ids are
+    demoted to -1 before the hop so a deleted row never enters the beam.
     Returns the merged beam (numpy), sorted descending, pads at the tail
     — byte-compatible with ``graph_beam``'s output, so the traversal
     drivers swap the two hops freely.
@@ -67,7 +70,14 @@ def graph_beam_q(q_op, q_bias, codes, node_bias, nbr_ids, beam_v, beam_i,
         impl = "pallas" if jax.default_backend() == "tpu" else "np"
     if impl == "np":
         return graph_beam_q_ref(q_op, q_bias, codes, node_bias, nbr_ids,
-                                beam_v, beam_i, mode, ksub)
+                                beam_v, beam_i, db_mask, mode, ksub)
+    if db_mask is not None:
+        # demote tombstoned candidates to pad slots pre-kernel (same
+        # convention as graph_beam): no mask operand inside the kernel
+        ids_np = np.asarray(nbr_ids, np.int32)
+        safe = np.where(ids_np >= 0, ids_np, 0)
+        nbr_ids = np.where((ids_np >= 0) & np.asarray(db_mask, bool)[safe],
+                           ids_np, -1)
     qo = jnp.asarray(q_op, jnp.float32)
     qb = jnp.asarray(q_bias, jnp.float32)
     nq = qo.shape[0]

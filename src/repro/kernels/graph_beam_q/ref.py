@@ -35,7 +35,8 @@ from ..common import NEG_INF, canonicalize_pads
 def graph_beam_q_ref(q_op: np.ndarray, q_bias: np.ndarray,
                      codes: np.ndarray, node_bias: np.ndarray,
                      nbr_ids: np.ndarray, beam_v: np.ndarray,
-                     beam_i: np.ndarray, mode: str = "sq8", ksub: int = 0
+                     beam_i: np.ndarray, db_mask: np.ndarray | None = None,
+                     mode: str = "sq8", ksub: int = 0
                      ) -> tuple[np.ndarray, np.ndarray]:
     """One batched quantized beam hop: score candidate ids against code
     payloads and merge into the beam.
@@ -44,7 +45,9 @@ def graph_beam_q_ref(q_op: np.ndarray, q_bias: np.ndarray,
     q_bias [Q] f32; codes [N, C] uint8 stored payload (sq8: C = d; pq:
     C = m); node_bias [N] f32 per-node constant (sq8: recon ||.||^2; pq:
     zeros); nbr_ids [Q, W] int32 with -1 = masked slot; beam_v/beam_i
-    [Q, ef] the running beam, sorted descending. Returns the merged
+    [Q, ef] the running beam, sorted descending. ``db_mask`` (bool [N])
+    tombstones code rows: a masked candidate is treated exactly like a
+    -1 slot, so a deleted row can never enter the beam. Returns the merged
     (values, ids), ef wide, sorted descending, pads canonicalized to
     (NEG_INF, -1) — identical merge semantics (stable ties toward the
     beam, then lower candidate slot) to ``graph_beam_ref``, so the f32
@@ -66,6 +69,8 @@ def graph_beam_q_ref(q_op: np.ndarray, q_bias: np.ndarray,
     ef = bv.shape[1]
     valid = ids >= 0
     safe = np.where(valid, ids, 0)
+    if db_mask is not None:
+        valid = valid & np.asarray(db_mask, bool)[safe]
     g = codes[safe]                                      # [Q, W, C]
     if mode == "sq8":
         if q_op.shape[1] != codes.shape[1]:

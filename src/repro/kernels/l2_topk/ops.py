@@ -6,7 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..common import PAD_PENALTY
+from ..common import NEG_INF, PAD_ID, PAD_PENALTY
 from .kernel import l2_topk_pallas
 from .ref import l2_topk_ref
 
@@ -23,11 +23,13 @@ def _pad_rows(x, mult):
                    static_argnames=("k", "metric", "impl", "bq", "bn",
                                     "interpret"))
 def l2_topk(queries: jax.Array, db: jax.Array, k: int,
-            metric: str = "euclidean", impl: str = "auto",
-            bq: int = 128, bn: int = 512, interpret: bool = False
-            ) -> tuple[jax.Array, jax.Array]:
+            metric: str = "euclidean", db_mask: jax.Array | None = None,
+            impl: str = "auto", bq: int = 128, bn: int = 512,
+            interpret: bool = False) -> tuple[jax.Array, jax.Array]:
     """Fused exact top-k scan. Returns (scores [Q, k], indices [Q, k]);
-    scores are similarities (euclidean -> -||q-d||^2, cosine -> cos sim)."""
+    scores are similarities (euclidean -> -||q-d||^2, cosine -> cos sim).
+    ``db_mask`` (bool [N]) tombstones db rows: a masked row never appears
+    in the output, its slot canonicalizes to ``(NEG_INF, PAD_ID)``."""
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     q = queries.astype(jnp.float32)
@@ -36,7 +38,7 @@ def l2_topk(queries: jax.Array, db: jax.Array, k: int,
         q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
         d = d / jnp.maximum(jnp.linalg.norm(d, axis=-1, keepdims=True), 1e-12)
     if impl == "ref":
-        return l2_topk_ref(q, d, k, metric)
+        return l2_topk_ref(q, d, k, metric, db_mask)
 
     qp, qpad = _pad_rows(q, bq)
     dp, dpad = _pad_rows(d, bn)
@@ -47,6 +49,10 @@ def l2_topk(queries: jax.Array, db: jax.Array, k: int,
     if dpad:  # padded rows must never win
         n_real = d.shape[0]
         d_sq = jnp.where(jnp.arange(dp.shape[0]) < n_real, d_sq, PAD_PENALTY)
+    if db_mask is not None:
+        # tombstoned rows ride the same never-wins lane as the row pads
+        mp, _ = _pad_rows(db_mask, bn)
+        d_sq = jnp.where(mp[: dp.shape[0]], d_sq, PAD_PENALTY)
     vals, idx = l2_topk_pallas(qp, dp, d_sq, k, bq=bq, bn=bn,
                                interpret=interpret)
     vals = vals[: q.shape[0]]
@@ -56,4 +62,9 @@ def l2_topk(queries: jax.Array, db: jax.Array, k: int,
     else:
         # kernel computed 2 q·d - ||d||^2 with ||d||=1 -> cos = (v + 1) / 2
         vals = (vals + 1.0) / 2.0
+    if db_mask is not None:
+        # canonicalize slots the penalty lane produced (post score remap)
+        dead = vals <= NEG_INF / 2
+        vals = jnp.where(dead, NEG_INF, vals)
+        idx = jnp.where(dead, PAD_ID, idx)
     return vals, idx

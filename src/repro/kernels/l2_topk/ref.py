@@ -4,12 +4,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..common import NEG_INF, PAD_ID, canonicalize_pads
+
 
 def l2_topk_ref(queries: jax.Array, db: jax.Array, k: int,
-                metric: str = "euclidean") -> tuple[jax.Array, jax.Array]:
+                metric: str = "euclidean", db_mask: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
     """Exact k-NN scores/indices. Scores are similarities (higher = closer):
     euclidean -> negative squared distance; cosine -> cosine similarity on
-    pre-normalized inputs (the caller normalizes)."""
+    pre-normalized inputs (the caller normalizes). ``db_mask`` (bool [N])
+    tombstones rows: masked rows never appear in the result — their slots
+    come back as (NEG_INF, -1) when fewer than k rows survive."""
     q = queries.astype(jnp.float32)
     d = db.astype(jnp.float32)
     if metric == "euclidean":
@@ -19,4 +24,9 @@ def l2_topk_ref(queries: jax.Array, db: jax.Array, k: int,
         s = q @ d.T
     else:
         raise ValueError(metric)
-    return jax.lax.top_k(s, k)
+    if db_mask is None:
+        return jax.lax.top_k(s, k)
+    s = jnp.where(db_mask[None, :], s, NEG_INF)
+    vals, idx = jax.lax.top_k(s, k)
+    idx = jnp.where(vals <= NEG_INF / 2, PAD_ID, idx)
+    return canonicalize_pads(vals, idx)

@@ -129,35 +129,52 @@ def sharded_scores(queries: jax.Array, db: jax.Array, metric: str,
 
 
 def search(queries: jax.Array, db: jax.Array, k: int, ctx: MeshCtx,
-           metric: str = "euclidean") -> tuple[jax.Array, jax.Array]:
-    """Exact k-NN: returns (scores [Q, k], indices [Q, k])."""
+           metric: str = "euclidean", alive: jax.Array | None = None
+           ) -> tuple[jax.Array, jax.Array]:
+    """Exact k-NN: returns (scores [Q, k], indices [Q, k]).
+
+    ``alive`` (bool [N]) tombstones db rows: a dead row is pinned to
+    ``(NEG_INF, PAD_ID)`` before the local top-k on every shard, so it can
+    never surface — same contract as ``l2_topk``'s ``db_mask`` operand.
+    ``alive=None`` leaves the static path bitwise untouched."""
     n = db.shape[0]
     axes, n_shards = _shard_axes(ctx, "db_rows")
     if n_shards == 1:
         s = sharded_scores(queries, db, metric, ctx)
-        return _padded_topk(s, k)
+        if alive is None:
+            return _padded_topk(s, k)
+        s = jnp.where(alive[None, :], s, NEG_INF)
+        v, i = _padded_topk(s, k)
+        i = jnp.where(v <= NEG_INF / 2, PAD_ID, i)
+        return jnp.where(i == PAD_ID, NEG_INF, v), i
 
     mesh = ctx.mesh
     n_loc = -(-n // n_shards)           # ceil: last shard may be ragged
     n_pad = n_loc * n_shards
     if n_pad > n:
         db = jnp.pad(db, ((0, n_pad - n), (0, 0)))
+    if alive is not None and n_pad > alive.shape[0]:
+        alive = jnp.pad(alive, (0, n_pad - alive.shape[0]))
     kl = min(k, n_loc)
     q_spec = ctx.pspec(queries.shape)          # queries replicated
     db_spec = ctx.pspec((n_pad, db.shape[1]), "db_rows", None)
     out_spec = ctx.pspec((queries.shape[0], k))
 
-    def f(q_l, db_l):
+    def f(q_l, db_l, *alive_l):
         s = sharded_scores(q_l, db_l, metric, MeshCtx(mesh=None))
         shard = _linear_shard_index(mesh, axes)
         # pin pad rows BEFORE the local top-k: a padded (zero) row must
         # not displace a real candidate inside the shard
         grow = shard * n_loc + jnp.arange(s.shape[1], dtype=jnp.int32)
-        s = jnp.where(grow[None, :] < n, s, NEG_INF)
+        keep = grow[None, :] < n
+        if alive_l:  # tombstones ride the same never-wins lane as pads
+            keep = keep & alive_l[0][None, :]
+        s = jnp.where(keep, s, NEG_INF)
         v, i = jax.lax.top_k(s, kl)             # [Q, kl] local
         gi = shard * n_loc + i
-        v = jnp.where(gi < n, v, NEG_INF)
-        gi = jnp.where(gi < n, gi, PAD_ID)
+        dead = (gi >= n) | (v <= NEG_INF / 2)
+        v = jnp.where(dead, NEG_INF, v)
+        gi = jnp.where(dead, PAD_ID, gi)
         if kl < k:
             pad = k - kl
             v = jnp.concatenate(
@@ -168,6 +185,11 @@ def search(queries: jax.Array, db: jax.Array, k: int, ctx: MeshCtx,
         gis = jax.lax.all_gather(gi, axes, axis=1, tiled=True)
         return topk_merge(vs, gis, k)
 
-    fn = shard_map(f, mesh=mesh, in_specs=(q_spec, db_spec),
+    in_specs = (q_spec, db_spec)
+    args = (queries, db)
+    if alive is not None:
+        in_specs += (ctx.pspec((n_pad,), "db_rows"),)
+        args += (alive,)
+    fn = shard_map(f, mesh=mesh, in_specs=in_specs,
                    out_specs=(out_spec, out_spec), check_rep=False)
-    return fn(queries, db)
+    return fn(*args)

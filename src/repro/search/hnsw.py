@@ -295,12 +295,15 @@ def sample_levels(n: int, M: int, seed: int) -> np.ndarray:
     return np.minimum(lv, _MAX_LEVEL)
 
 
-def _greedy_descent(vecs, adj, q, cur, d_cur, evals, impl):
+def _greedy_descent(vecs, adj, q, cur, d_cur, evals, impl, alive=None):
     """ef=1 layer traversal: hop to the closest neighbor until no
-    neighbor improves."""
+    neighbor improves. ``alive`` (bool [N]) hides tombstoned nodes: a
+    dead neighbor is never hopped to (``alive=None`` = all alive)."""
     while True:
         nbrs = adj[cur]
         nbrs = nbrs[nbrs >= 0]
+        if alive is not None and nbrs.size:
+            nbrs = nbrs[alive[nbrs]]
         if nbrs.size == 0:
             return cur, d_cur
         ds = candidate_distances(q, vecs[nbrs], impl)
@@ -311,11 +314,14 @@ def _greedy_descent(vecs, adj, q, cur, d_cur, evals, impl):
         cur, d_cur = int(nbrs[j]), float(ds[j])
 
 
-def _search_layer(vecs, adj, q, eps, ef, visited, stamp, evals, impl):
+def _search_layer(vecs, adj, q, eps, ef, visited, stamp, evals, impl,
+                  alive=None):
     """Best-first beam (Alg. 2): returns the ef closest visited nodes as a
     sorted [(dist, node), ...] list. ``eps`` are (dist, node) entry points
     (already counted); ``visited``/``stamp`` implement an O(1)-reset
-    visited set shared across calls."""
+    visited set shared across calls. ``alive`` (bool [N]) hides
+    tombstoned nodes: a dead neighbor never enters the beam, so it can
+    never surface in a result (``alive=None`` = all alive)."""
     cand: list[tuple[float, int]] = []   # min-heap on distance
     res: list[tuple[float, int]] = []    # max-heap via negated distance
     for d, e in eps:
@@ -328,6 +334,8 @@ def _search_layer(vecs, adj, q, eps, ef, visited, stamp, evals, impl):
             break
         nbrs = adj[c]
         nbrs = nbrs[nbrs >= 0]
+        if alive is not None and nbrs.size:
+            nbrs = nbrs[alive[nbrs]]
         fresh = nbrs[visited[nbrs] != stamp]
         if fresh.size == 0:
             continue
@@ -422,6 +430,77 @@ def _repair_connectivity(vecs, links0, entry, evals, impl) -> int:
     return stitched
 
 
+def _write_row(adj, node, nbrs):
+    row = adj[node]
+    row[: len(nbrs)] = nbrs
+    row[len(nbrs):] = -1
+
+
+def _insert_node(vecs, levels, links0, links, M, m0, top, i, entry,
+                 ef_construction, visited, evals, impl) -> int:
+    """Insert node ``i`` (Alg. 1 body, shared verbatim between
+    :func:`build` and :func:`insert_batch`): greedy-descend the upper
+    layers, beam + heuristic-select per layer, write bidirectional links
+    with overflow re-pruning. Returns the (possibly updated) entry."""
+    q = vecs[i]
+    l_i = int(levels[i])
+    l_ep = int(levels[entry])
+    cur = entry
+    d_cur = float(candidate_distances(q, vecs[entry][None], impl)[0])
+    evals.n += 1
+    for layer in range(l_ep, l_i, -1):
+        cur, d_cur = _greedy_descent(vecs, links[layer - 1], q, cur,
+                                     d_cur, evals, impl)
+    eps = [(d_cur, cur)]
+    for layer in range(min(l_ep, l_i), -1, -1):
+        adj = links0 if layer == 0 else links[layer - 1]
+        cap = m0 if layer == 0 else M
+        found = _search_layer(vecs, adj, q, eps, ef_construction,
+                              visited, i * (top + 1) + layer, evals,
+                              impl)
+        sel = _select_heuristic(found, vecs, M, evals, impl)
+        _write_row(adj, i, sel)
+        # bidirectional: add the back-link, re-pruning on overflow and
+        # dropping the reverse edge of anything the prune evicts
+        for s in sel:
+            row = adj[s]
+            free = np.flatnonzero(row < 0)  # prune leaves holes anywhere
+            if free.size:
+                row[free[0]] = i
+                continue
+            nbrs = row[row >= 0]
+            ds = candidate_distances(vecs[s], vecs[nbrs], impl)
+            evals.n += int(nbrs.size)
+            d_i = float(candidate_distances(vecs[s], q[None], impl)[0])
+            evals.n += 1
+            merged = sorted([*zip(ds.tolist(), nbrs.tolist()),
+                             (d_i, i)])
+            kept = _select_heuristic(merged, vecs, cap, evals, impl,
+                                     keep_pruned=True)
+            for t in nbrs:
+                if t not in kept:
+                    trow = adj[t]
+                    trow[trow == s] = -1
+            if i not in kept and len(kept) < cap:
+                kept.append(i)  # never orphan the node being inserted
+            elif i not in kept:
+                irow = adj[i]
+                irow[irow == s] = -1
+            _write_row(adj, s, kept)
+        eps = found
+    if l_i > int(levels[entry]):
+        entry = i
+    return entry
+
+
+def _compact_pads(links0, links) -> None:
+    """Compact pad slots left of real links (prune leaves holes).
+    Row-local stable argsort: a row with no holes is bitwise untouched."""
+    for adj in (links0, *links):
+        order = np.argsort(adj < 0, axis=1, kind="stable")
+        adj[:] = np.take_along_axis(adj, order, axis=1)
+
+
 def build(corpus: np.ndarray, M: int = 32, ef_construction: int = 100,
           seed: int = 0, impl: str = "auto") -> HNSWGraph:
     """Sequential heuristic insert of every corpus row (Alg. 1)."""
@@ -440,81 +519,126 @@ def build(corpus: np.ndarray, M: int = 32, ef_construction: int = 100,
     # consumes the count; at build time it only feeds the helpers
     evals = _Evals()
     entry = 0
-
-    def write_row(adj, node, nbrs):
-        row = adj[node]
-        row[: len(nbrs)] = nbrs
-        row[len(nbrs):] = -1
-
     for i in range(1, n):
-        q = vecs[i]
-        l_i = int(levels[i])
-        l_ep = int(levels[entry])
-        cur = entry
-        d_cur = float(candidate_distances(q, vecs[entry][None], impl)[0])
-        evals.n += 1
-        for layer in range(l_ep, l_i, -1):
-            cur, d_cur = _greedy_descent(vecs, links[layer - 1], q, cur,
-                                         d_cur, evals, impl)
-        eps = [(d_cur, cur)]
-        for layer in range(min(l_ep, l_i), -1, -1):
-            adj = links0 if layer == 0 else links[layer - 1]
-            cap = m0 if layer == 0 else M
-            found = _search_layer(vecs, adj, q, eps, ef_construction,
-                                  visited, i * (top + 1) + layer, evals,
-                                  impl)
-            sel = _select_heuristic(found, vecs, M, evals, impl)
-            write_row(adj, i, sel)
-            # bidirectional: add the back-link, re-pruning on overflow and
-            # dropping the reverse edge of anything the prune evicts
-            for s in sel:
-                row = adj[s]
-                free = np.flatnonzero(row < 0)  # prune leaves holes anywhere
-                if free.size:
-                    row[free[0]] = i
-                    continue
-                nbrs = row[row >= 0]
-                ds = candidate_distances(vecs[s], vecs[nbrs], impl)
-                evals.n += int(nbrs.size)
-                d_i = float(candidate_distances(vecs[s], q[None], impl)[0])
-                evals.n += 1
-                merged = sorted([*zip(ds.tolist(), nbrs.tolist()),
-                                 (d_i, i)])
-                kept = _select_heuristic(merged, vecs, cap, evals, impl,
-                                         keep_pruned=True)
-                for t in nbrs:
-                    if t not in kept:
-                        trow = adj[t]
-                        trow[trow == s] = -1
-                if i not in kept and len(kept) < cap:
-                    kept.append(i)  # never orphan the node being inserted
-                elif i not in kept:
-                    irow = adj[i]
-                    irow[irow == s] = -1
-                write_row(adj, s, kept)
-            eps = found
-        if l_i > int(levels[entry]):
-            entry = i
+        entry = _insert_node(vecs, levels, links0, links, M, m0, top, i,
+                             entry, ef_construction, visited, evals, impl)
     _repair_connectivity(vecs, links0, entry, evals, impl)
-    # compact pad slots left of real links (prune leaves holes)
-    for adj in (links0, *links):
-        order = np.argsort(adj < 0, axis=1, kind="stable")
-        adj[:] = np.take_along_axis(adj, order, axis=1)
+    _compact_pads(links0, links)
     return HNSWGraph(vecs=vecs, levels=levels, links0=links0, links=links,
                      entry=entry, M=M)
 
 
+def insert_batch(graph: HNSWGraph, new_vecs: np.ndarray,
+                 ef_construction: int = 100, seed: int = 0,
+                 impl: str = "auto") -> np.ndarray:
+    """Incremental insert: append ``new_vecs`` rows to a built graph with
+    the SAME per-node machinery as :func:`build` (greedy descent, beam,
+    heuristic selection, bidirectional overflow re-pruning), in place.
+
+    Levels for the new nodes are drawn deterministically keyed on
+    ``(seed, current size)``, so the same stream of insert batches always
+    produces the same graph. New upper layers are allocated when a new
+    node out-draws the current top. The packed traversal cache is nulled
+    (the :meth:`HNSWGraph.pack` mutation contract) — callers re-pack
+    (typically in the background) before the next batched search; the
+    re-pack is bitwise-neutral for rows whose adjacency the insert did
+    not touch. A :class:`GraphCodes` payload, when attached, is extended
+    with codes for the new rows using the already-trained codec (no
+    retrain — codec drift is the reducer-drift story, handled above).
+
+    Returns the global ids of the inserted rows.
+    """
+    nv = np.ascontiguousarray(np.asarray(new_vecs, np.float32))
+    b = nv.shape[0]
+    if nv.ndim != 2 or (b and nv.shape[1] != graph.vecs.shape[1]):
+        raise ValueError(f"insert_batch: expected [b, {graph.vecs.shape[1]}]"
+                         f" vectors, got {nv.shape}")
+    if b == 0:
+        return np.zeros(0, np.int64)
+    impl = _resolve_impl(impl)
+    n0 = graph.ntotal
+    M, m0 = graph.M, 2 * graph.M
+    new_levels = sample_levels(b, M, seed + n0)
+    vecs = np.ascontiguousarray(np.concatenate([graph.vecs, nv], axis=0))
+    levels = np.concatenate([graph.levels, new_levels])
+    top_old = graph.links.shape[0]
+    top = max(top_old, int(new_levels.max()))
+    links0 = np.concatenate(
+        [graph.links0, np.full((b, m0), -1, np.int32)], axis=0)
+    links = np.full((top, n0 + b, M), -1, np.int32)
+    if top_old:
+        links[:top_old, :n0] = graph.links
+    visited = np.full(n0 + b, -1, np.int64)
+    evals = _Evals()
+    entry = graph.entry
+    for i in range(n0, n0 + b):
+        entry = _insert_node(vecs, levels, links0, links, M, m0, top, i,
+                             entry, ef_construction, visited, evals, impl)
+    _repair_connectivity(vecs, links0, entry, evals, impl)
+    _compact_pads(links0, links)
+    graph.vecs = vecs
+    graph.levels = levels
+    graph.links0 = links0
+    graph.links = links
+    graph.entry = entry
+    graph.packed = None  # pack() contract: a mutated graph re-packs
+    if graph.codec is not None:
+        _extend_codec(graph.codec, nv)
+    return np.arange(n0, n0 + b, dtype=np.int64)
+
+
+def _extend_codec(cdx: GraphCodes, new_vecs: np.ndarray) -> None:
+    """Encode ``new_vecs`` with the codec's already-trained state and
+    append the code rows (and biases) in place; drops the device cache."""
+    from . import quantize as qz
+
+    v = np.asarray(new_vecs, np.float32)
+    if cdx.kind == "sq8":
+        sq = qz.ScalarQuantizer(vmin=cdx.vmin, step=cdx.step)
+        codes = np.asarray(qz.sq8_encode(sq, v))
+        nb = np.asarray(qz.sq8_recon_sq_norms(sq, codes), np.float32)
+    else:
+        pq = qz.ProductQuantizer(codebooks=cdx.codebooks)
+        codes = np.asarray(qz.pq_encode(pq, v))
+        nb = np.zeros(v.shape[0], np.float32)
+    cdx.codes = np.ascontiguousarray(
+        np.concatenate([cdx.codes, codes], axis=0))
+    cdx.node_bias = np.concatenate([cdx.node_bias, nb])
+    cdx._dev = None
+
+
+def reassign_entry(graph: HNSWGraph, alive: np.ndarray) -> int:
+    """Point ``graph.entry`` at the highest-level alive node (ties to the
+    lowest id). Deleting the entry node would otherwise seed every
+    traversal at a tombstone, which the hop mask turns into an empty
+    beam. Returns the new entry id; raises if nothing is alive."""
+    alive = np.asarray(alive, bool)
+    ids = np.flatnonzero(alive)
+    if ids.size == 0:
+        raise ValueError("reassign_entry: no alive node to anchor at")
+    graph.entry = int(ids[np.argmax(graph.levels[ids])])
+    return graph.entry
+
+
 def search(graph: HNSWGraph, queries: np.ndarray, k: int,
-           ef_search: int = 64, impl: str = "auto"
+           ef_search: int = 64, impl: str = "auto",
+           alive: Optional[np.ndarray] = None
            ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Beam search per query. Returns (scores [Q, k], ids [Q, k], evals
     [Q]): scores = -squared-euclidean (engine convention, higher =
     closer), ids pad with -1 / scores with -inf when the beam holds fewer
     than k nodes, evals = distance computations per query (the visited
-    count — the sublinearity metric)."""
+    count — the sublinearity metric). ``alive`` (bool [N]) tombstones
+    nodes: a dead node never enters a beam or a result; ``graph.entry``
+    must point at an alive node (:func:`reassign_entry`)."""
     q = np.asarray(queries, np.float32)
     nq = q.shape[0]
     impl = _resolve_impl(impl)
+    if alive is not None:
+        alive = np.asarray(alive, bool)
+        if not alive[graph.entry]:
+            raise ValueError("search: graph.entry is tombstoned — call "
+                             "reassign_entry() after deleting it")
     ef = max(ef_search, k)
     scores = np.full((nq, k), -np.inf, np.float32)
     ids = np.full((nq, k), -1, np.int32)
@@ -528,9 +652,11 @@ def search(graph: HNSWGraph, queries: np.ndarray, k: int,
         cnt.n += 1
         for layer in range(graph.max_level, 0, -1):
             cur, d_cur = _greedy_descent(graph.vecs, graph.links[layer - 1],
-                                         q[qi], cur, d_cur, cnt, impl)
+                                         q[qi], cur, d_cur, cnt, impl,
+                                         alive)
         found = _search_layer(graph.vecs, graph.links0, q[qi],
-                              [(d_cur, cur)], ef, visited, qi, cnt, impl)
+                              [(d_cur, cur)], ef, visited, qi, cnt, impl,
+                              alive)
         for j, (d, node) in enumerate(found[:k]):
             scores[qi, j] = -d
             ids[qi, j] = node
@@ -540,7 +666,8 @@ def search(graph: HNSWGraph, queries: np.ndarray, k: int,
 
 def search_batched(graph: HNSWGraph, queries: np.ndarray, k: int,
                    ef_search: int = 64, impl: str = "auto",
-                   frontier: int = 8
+                   frontier: int = 8,
+                   alive: Optional[np.ndarray] = None
                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
     """Array-native batched beam search over the packed adjacency.
 
@@ -584,6 +711,13 @@ def search_batched(graph: HNSWGraph, queries: np.ndarray, k: int,
     batch, so a query answers identically at q=1 and inside any coalesced
     batch, and repeated searches of a fixed batch are bitwise-
     deterministic (the serving-cache contract).
+
+    ``alive`` (bool [N]) tombstones nodes on every driver: dead
+    candidates are masked at the hop (``graph_beam``/``graph_beam_q``'s
+    ``db_mask`` operand), so a deleted row can never enter a beam — the
+    same never-surfaces contract as the sequential engine. The entry
+    node must be alive (:func:`reassign_entry`); ``alive=None`` keeps
+    all three drivers bitwise identical to the static graph.
     """
     q = np.ascontiguousarray(np.asarray(queries, np.float32))
     nq = q.shape[0]
@@ -592,6 +726,11 @@ def search_batched(graph: HNSWGraph, queries: np.ndarray, k: int,
                 np.zeros(0, np.int64), 0)
     if impl == "auto":
         impl = "fused" if _backend() == "tpu" else "np"
+    if alive is not None:
+        alive = np.asarray(alive, bool)
+        if not alive[graph.entry]:
+            raise ValueError("search_batched: graph.entry is tombstoned — "
+                             "call reassign_entry() after deleting it")
     ef = max(ef_search, k)
     if impl in ("jit", "fused"):
         import jax
@@ -609,6 +748,7 @@ def search_batched(graph: HNSWGraph, queries: np.ndarray, k: int,
         scores, ids, evals, hops = _traverse_jit_fn()(
             jnp.asarray(q), dv, dsq, dn0, dup,
             jnp.asarray(graph.entry, jnp.int32), codes, node_bias, c0, c1,
+            None if alive is None else jnp.asarray(alive),
             ef=ef, k=k, use_pallas=(impl == "fused"), mode=mode, ksub=ksub)
         jax.block_until_ready((scores, ids, evals, hops))
         return (np.asarray(scores), np.asarray(ids),
@@ -617,11 +757,13 @@ def search_batched(graph: HNSWGraph, queries: np.ndarray, k: int,
     # only pays when the beam is wide enough that its top-E barely moves
     # per hop, and a sub-8-wide beam is fast without it
     frontier = max(1, min(frontier, ef // 8))
-    return _search_batched_np(graph, q, k, ef, frontier=frontier)
+    return _search_batched_np(graph, q, k, ef, frontier=frontier,
+                              alive=alive)
 
 
 def _search_batched_np(graph: HNSWGraph, q: np.ndarray, k: int, ef: int,
-                       frontier: int = 8
+                       frontier: int = 8,
+                       alive: Optional[np.ndarray] = None
                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
     """Host-driven batched driver: one vectorized-numpy ``graph_beam``
     hop per dispatch (see :func:`search_batched`).
@@ -660,7 +802,7 @@ def _search_batched_np(graph: HNSWGraph, q: np.ndarray, k: int, ef: int,
 
         def hop(ha, hb, ids, bv, bi):
             return graph_beam(ha, vecs, ids, bv, bi, db_sq=p.vecs_sq,
-                              q_sq=hb, impl="np")
+                              q_sq=hb, db_mask=alive, impl="np")
     else:
         # quantized payload: per-query affine operands hoisted once per
         # search; every hop (seed, descent, layer 0) scores codes
@@ -668,8 +810,8 @@ def _search_batched_np(graph: HNSWGraph, q: np.ndarray, k: int, ef: int,
 
         def hop(ha, hb, ids, bv, bi):
             return graph_beam_q(ha, hb, cdx.codes, cdx.node_bias, ids, bv,
-                                bi, mode=cdx.kind, ksub=cdx.ksub,
-                                impl="np")
+                                bi, db_mask=alive, mode=cdx.kind,
+                                ksub=cdx.ksub, impl="np")
 
     # entry seed: a 1-wide merge against the lone entry candidate yields
     # (score, id) of the entry point for every query in one dispatch
@@ -788,7 +930,7 @@ def _search_batched_np(graph: HNSWGraph, q: np.ndarray, k: int, ef: int,
 
 
 def _traverse_impl(q, vecs, vecs_sq, nbrs0, upper, entry, codes, node_bias,
-                   c0, c1, *, ef: int, k: int, use_pallas: bool,
+                   c0, c1, alive=None, *, ef: int, k: int, use_pallas: bool,
                    mode: str = "f32", ksub: int = 0):
     """The whole batched traversal as ONE traceable function: greedy
     descent (one ``lax.while_loop`` per upper layer) then the layer-0
@@ -807,7 +949,11 @@ def _traverse_impl(q, vecs, vecs_sq, nbrs0, upper, entry, codes, node_bias,
     Dead rows (queries whose beam is fully expanded) keep looping with
     all-masked candidates until the whole batch converges; every masked
     merge is a bitwise no-op, which is what makes a row's answer
-    independent of who else shares its batch."""
+    independent of who else shares its batch.
+
+    ``alive`` (bool [N], traced) tombstones nodes: dead candidate ids are
+    demoted to -1 before every score/hop, so a deleted row never enters a
+    beam; ``alive=None`` traces the mask-free graph bitwise unchanged."""
     import jax
     import jax.numpy as jnp
 
@@ -829,10 +975,18 @@ def _traverse_impl(q, vecs, vecs_sq, nbrs0, upper, entry, codes, node_bias,
         q_op = -adc_lut(c0, q).reshape(nq, -1)
         q_bias = jnp.zeros((nq,), jnp.float32)
 
+    def demote_dead(cand):
+        """-1 out tombstoned candidate ids (no-op when alive is None)."""
+        if alive is None:
+            return cand
+        safe = jnp.where(cand >= 0, cand, 0)
+        return jnp.where((cand >= 0) & alive[safe], cand, -1)
+
     def score(cand):
         """[Q, W] score of candidate ids; -1 slots -> NEG_INF. f32 mode
         scores -squared-L2 on corpus rows; quantized modes score the
         code payload (same algebra as ``graph_beam_q``)."""
+        cand = demote_dead(cand)
         safe = jnp.where(cand >= 0, cand, 0)
         if mode == "f32":
             g = vecs[safe]                                   # [Q, W, d]
@@ -855,7 +1009,7 @@ def _traverse_impl(q, vecs, vecs_sq, nbrs0, upper, entry, codes, node_bias,
         """top_k merge: first-lowest-index tie rule == the kernel's
         iterative argmax; pads canonicalized to (NEG_INF, -1)."""
         allv = jnp.concatenate([bv, score(cand)], axis=1)
-        alli = jnp.concatenate([bi, cand], axis=1)
+        alli = jnp.concatenate([bi, demote_dead(cand)], axis=1)
         nv, idx = jax.lax.top_k(allv, out_w)
         ni = jnp.take_along_axis(alli, idx, axis=1)
         ni = jnp.where(nv <= NEG_INF, -1, ni)
@@ -916,7 +1070,7 @@ def _traverse_impl(q, vecs, vecs_sq, nbrs0, upper, entry, codes, node_bias,
         fresh = valid & (jnp.take_along_axis(state, safe, axis=1) == 0)
         state = state.at[rr, safe].max(fresh.astype(jnp.uint8))
         evals = evals + fresh.sum(axis=1, dtype=jnp.int32)
-        cand = jnp.where(fresh, nbrs, -1)
+        cand = demote_dead(jnp.where(fresh, nbrs, -1))
         if not use_pallas:
             nv, ni = merge_jnp(beam_v, beam_i, cand, ef)
         elif mode == "f32":

@@ -22,7 +22,14 @@ On top of the scheduler:
 * ``warmup()`` — pre-compiles the hot path at every padded bucket size so
   the first real request pays search cost, not XLA compile cost;
 * ``stats()`` — QPS (lifetime + windowed), p50/p99 latency, batch-size
-  histogram, cache hit rate, ``distance_evals`` passthrough.
+  histogram, cache hit rate, ``distance_evals`` passthrough, mutation /
+  swap counters (plus the mutable index's own epoch & tombstone stats);
+* ``mutate(fn)`` / ``hot_swap(builder)`` — live mutation: ``fn(index)``
+  (an ``add``/``delete`` on a ``MutableIndex``) runs on the search
+  executor so it can never interleave with an in-flight batch, and
+  ``hot_swap`` double-buffers a full replacement (build + warm off-path,
+  promote atomically via ``set_index``) — zero queries dropped, zero
+  answered stale (fingerprint-keyed cache).
 
 Threading model: the asyncio loop runs on a dedicated daemon thread;
 ``search_one`` is safe to call from any thread (HTTP handler threads,
@@ -105,6 +112,8 @@ class SearchEngine:
         self._executor = ThreadPoolExecutor(max_workers=1,
                                             thread_name_prefix="engine-search")
         self._start_lock = threading.Lock()
+        self._mutations = 0       # mutate() calls applied
+        self._swaps = 0           # set_index()/hot_swap() promotions
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -253,6 +262,52 @@ class SearchEngine:
             self._executor.submit(_swap).result()
         else:
             _swap()
+        self._swaps += 1
+
+    def mutate(self, fn):
+        """Apply a mutation to the served index, atomically with respect
+        to in-flight batches: ``fn(index)`` runs on the single-worker
+        search executor (the only thread that ever calls
+        ``index.search``), so no query can observe a half-applied insert
+        or delete, and the refreshed fingerprint retires every cached
+        pre-mutation answer. Returns whatever ``fn`` returns —
+        ``engine.mutate(lambda ix: ix.add(rows))`` hands back the new
+        ids. Queries keep coalescing while the mutation waits its turn;
+        none are dropped."""
+
+        def _apply():
+            out = fn(self.index)
+            self._fingerprint = self.index.fingerprint()
+            return out
+
+        if self.running:
+            result = self._executor.submit(_apply).result()
+        else:
+            result = _apply()
+        self._mutations += 1
+        return result
+
+    def hot_swap(self, builder, ks: Sequence[int] = (10,),
+                 seed: int = 0) -> VectorIndex:
+        """Zero-downtime replacement via double buffering: ``builder()``
+        constructs the NEW index entirely off the serving path — queries
+        keep flowing against the old one for however long the build takes
+        — then the fresh index is warmed at every padded bucket size
+        (compile cost paid off-path too) and promoted through
+        :meth:`set_index`, which runs on the search executor and is
+        therefore atomic with in-flight batches: every query is answered,
+        each one entirely by the old or entirely by the new index, and
+        the fingerprint change keeps the cache honest. Returns the
+        promoted index."""
+        new_index = builder()
+        new_index._require_built()
+        rng = np.random.default_rng(seed)
+        for k in ks:
+            for b in self.buckets:
+                q = rng.standard_normal((b, new_index.dim)).astype(np.float32)
+                new_index.search(q, k)
+        self.set_index(new_index)
+        return new_index
 
     def warmup(self, dim: Optional[int] = None,
                ks: Sequence[int] = (10,), seed: int = 0) -> "SearchEngine":
@@ -388,4 +443,9 @@ class SearchEngine:
                             "max_wait_ms": self.max_wait_ms,
                             "buckets": self.buckets,
                             "running": self.running}
+        out["mutation"] = {"mutations": self._mutations,
+                           "swaps": self._swaps}
+        ms = getattr(self.index, "mutation_stats", None)
+        if ms is not None:
+            out["mutation"]["index"] = ms()
         return out

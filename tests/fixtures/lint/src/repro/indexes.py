@@ -51,6 +51,33 @@ class WeirdIndex(VectorIndex):
         return [self.x]
 
 
+class StreamyIndex(VectorIndex):
+    """Mutable index whose ``insert`` bumps an epoch counter that the
+    fingerprint never hashes -> mutation-epoch (and nothing else: the
+    stored corpus IS hashed, so only the epoch omission fires)."""
+
+    def __init__(self):
+        self._db = []
+
+    def build(self, corpus):
+        self._db = list(corpus)
+        return self
+
+    def insert(self, rows):
+        self._db = self._db + list(rows)
+        self.epoch = getattr(self, "epoch", 0) + 1   # never fingerprinted
+
+    @property
+    def ntotal(self):
+        return len(self._db)
+
+    def _fingerprint_state(self):
+        return [self._db]
+
+    def save(self, directory):
+        return {"db": self._db}
+
+
 class ShardyIndex(VectorIndex):
     """Composite that reads its children but never hashes their
     fingerprints -> child-fingerprint (and nothing else: the attribute

@@ -44,6 +44,8 @@ EXPECTED = Counter({
     ("jit-purity", "host-print", "src/repro/kernels/badkern/kernel.py"): 1,
     ("fingerprint", "child-fingerprint", "src/repro/indexes.py"): 1,
     ("fingerprint", "fingerprint-missing", "src/repro/indexes.py"): 1,
+    # StreamyIndex.insert bumps self.epoch but never fingerprints it
+    ("fingerprint", "mutation-epoch", "src/repro/indexes.py"): 1,
     ("fingerprint", "save-coverage", "src/repro/indexes.py"): 1,
     ("fingerprint", "stale-exemption", "src/repro/indexes.py"): 1,
     ("fingerprint", "unknown-exemption", "src/repro/indexes.py"): 1,
@@ -242,6 +244,44 @@ def test_check_bench_graph_quant_gates(tmp_path):
                                    quant_recall=0.90)
     proc = _check_bench("--baseline", str(base), "--candidate", str(cand))
     assert proc.returncode == 1 and "rerank" in proc.stdout
+
+
+def _churn_bench_dirs(tmp_path, **overrides):
+    """Identical base/cand BENCH_churn.json: isolates the candidate-side
+    live-mutation gates from the baseline-diff gates."""
+    row = {"spec": "Mut,HNSW16", "turnover_frac": 0.08,
+           "recall_at_k": 0.99, "recall_ratio_vs_static": 0.998,
+           "tombstone_violations": 0, "dropped_queries": 0,
+           "qps_under_churn": 100.0}
+    row.update(overrides)
+    payload = {"rows": [row], "config": {"churn_qps_floor": 25.0,
+                                         "churn_recall_ratio_floor": 0.95}}
+    for side in ("base", "cand"):
+        d = tmp_path / side
+        d.mkdir(parents=True)
+        (d / "BENCH_churn.json").write_text(json.dumps(payload))
+    return tmp_path / "base", tmp_path / "cand"
+
+
+def test_check_bench_churn_gates(tmp_path):
+    """The live-mutation block: a healthy soak passes; thin turnover, a
+    recall collapse, a single tombstone violation, a dropped query, or a
+    QPS miss each fail on their own message."""
+    base, cand = _churn_bench_dirs(tmp_path / "ok")
+    assert _check_bench("--baseline", str(base),
+                        "--candidate", str(cand)).returncode == 0
+    for sub, overrides, fragment in [
+            ("thin", {"turnover_frac": 0.02}, "soak floor"),
+            ("ratio", {"recall_ratio_vs_static": 0.90}, "collapsing"),
+            ("tomb", {"tombstone_violations": 1}, "tombstone"),
+            ("drop", {"dropped_queries": 3}, "dropped"),
+            ("qps", {"qps_under_churn": 10.0}, "sustained-QPS")]:
+        base, cand = _churn_bench_dirs(tmp_path / sub, **overrides)
+        proc = _check_bench("--baseline", str(base), "--candidate",
+                            str(cand), "--qps-tol", "0.99",
+                            "--recall-tol", "1.0")
+        assert proc.returncode == 1 and fragment in proc.stdout, \
+            (sub, proc.stdout)
 
 
 def test_check_bench_usage_errors_exit_2(tmp_path):

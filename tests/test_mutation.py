@@ -1,0 +1,443 @@
+"""Live mutation: streaming inserts, tombstone deletes, hot swap.
+
+Three contracts, tested at every tier the factory can wrap in ``Mut``:
+
+* **insert immediacy** — a row returned by ``add`` answers the very next
+  ``search`` (its own vector must retrieve its new external id);
+* **tombstone exactness** — a deleted id never surfaces again, not even
+  when the query IS the deleted vector (the adversarial case), at flat,
+  IVF, HNSW, quantized and sharded tiers alike, because the alive mask
+  rides into the fused kernels as ``db_mask`` rather than being filtered
+  after the fact;
+* **serving atomicity** — ``SearchEngine.mutate`` / ``hot_swap`` never
+  drop or corrupt an in-flight query and always retire stale cache
+  entries (the mutation epoch is fingerprint state — the invariant the
+  ``mutation-epoch`` lint rule pins for every mutable index class).
+
+The corpus is small random integers cast to f32 (same trick as
+``test_serve``): distances accumulate exactly, so self-hit assertions
+are deterministic, not a numerics lottery.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api.factory import parse_index_spec
+from repro.core.theory import DriftTracker
+from repro.kernels.common import NEG_INF, PAD_ID
+from repro.kernels.graph_beam.ref import graph_beam_ref
+from repro.kernels.l2_topk.ref import l2_topk_ref
+from repro.search import hnsw as hnsw_lib
+from repro.serve import SearchEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+N, DIM, K = 200, 16, 10
+
+#: (spec, exact) — exact tiers must self-hit at top-1; quantized tiers
+#: get top-8 slack (codes can collide on an integer corpus)
+SPECS = [
+    ("Mut,Flat", True),
+    ("Mut,IVF16", True),
+    ("Mut,HNSW8", True),
+    ("Mut,Shard2,Flat", True),
+    ("Mut,SQ8", False),
+    ("Mut,PQ4x4", False),
+    ("Mut,IVF16,SQ8", False),
+    ("Mut,IVF16,PQ4x4", False),
+    ("Mut,HNSW8,SQ8", False),
+]
+SPEC_IDS = [s for s, _ in SPECS]
+
+
+def _int_rows(seed: int, n: int, dim: int = DIM) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(-8, 8, (n, dim)).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return _int_rows(0, N)
+
+
+def _build(spec: str, corpus: np.ndarray) -> api.MutableIndex:
+    ix = api.index_factory(spec, index_kw={"ef_construction": 40}
+                           if "HNSW" in spec else None)
+    return ix.build(corpus)
+
+
+# ---------------------------------------------------------------------------
+# factory grammar
+# ---------------------------------------------------------------------------
+def test_mut_spec_roundtrip():
+    for spec in ("Mut,Flat", "Mut,RAE8,IVF16,Rerank4", "Mut,HNSW8,SQ8"):
+        assert str(parse_index_spec(spec)) == spec
+    assert parse_index_spec("Mut,Flat").mutable
+    assert not parse_index_spec("Flat").mutable
+
+
+def test_mut_spec_errors():
+    with pytest.raises(ValueError):
+        parse_index_spec("IVF16,Mut")       # must come first
+    with pytest.raises(ValueError):
+        parse_index_spec("Mut,Mut,Flat")    # no duplicates
+    with pytest.raises(ValueError):
+        parse_index_spec("Mut")             # needs a wrapped stack
+
+
+def test_factory_returns_mutable_wrapper(corpus):
+    ix = _build("Mut,Flat", corpus)
+    assert isinstance(ix, api.MutableIndex)
+    assert ix.ntotal == N
+    # sharded children must not be re-wrapped: one mutation owner
+    sh = _build("Mut,Shard2,Flat", corpus)
+    assert isinstance(sh, api.MutableIndex)
+    assert not isinstance(sh._inner._shards[0], api.MutableIndex)
+
+
+# ---------------------------------------------------------------------------
+# insert immediacy + tombstone exactness, every tier
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("spec,exact", SPECS, ids=SPEC_IDS)
+def test_insert_visible_immediately(spec, exact, corpus):
+    ix = _build(spec, corpus)
+    new = _int_rows(7, 8)
+    ext = ix.add(new)
+    assert np.array_equal(ext, np.arange(N, N + 8))
+    assert ix.ntotal == N + 8
+    assert ix.epoch >= 1
+    r = ix.search(new, 8)
+    for row, eid in enumerate(ext):
+        got = np.asarray(r.indices)[row]
+        if exact:
+            assert got[0] == eid, f"{spec}: row {row} top-1 {got[0]}"
+        else:
+            assert eid in got, f"{spec}: row {row} not in top-8 {got}"
+
+
+@pytest.mark.parametrize("spec,exact", SPECS, ids=SPEC_IDS)
+def test_delete_never_surfaces(spec, exact, corpus):
+    ix = _build(spec, corpus)
+    rng = np.random.default_rng(3)
+    dead = np.sort(rng.choice(N, 20, replace=False)).astype(np.int64)
+    assert ix.delete(dead) == 20
+    assert ix.ntotal == N - 20
+    # adversarial queries: the tombstoned vectors themselves
+    r = ix.search(corpus[dead], K)
+    idx = np.asarray(r.indices)
+    assert not np.isin(idx, dead).any(), \
+        f"{spec}: tombstoned id surfaced: {idx[np.isin(idx, dead)]}"
+    # enough alive rows remain: no padded slots either
+    assert (idx >= 0).all()
+
+
+def test_delete_all_but_a_few_pads_result(corpus):
+    ix = _build("Mut,Flat", corpus)
+    keep = np.array([4, 9, 44], np.int64)
+    dead = np.setdiff1d(np.arange(N, dtype=np.int64), keep)
+    assert ix.delete(dead) == N - 3
+    assert ix.ntotal == 3
+    r = ix.search(corpus[:5], K)
+    idx = np.asarray(r.indices)
+    # k is clamped to the alive count: only real, alive ids come back
+    assert idx.shape == (5, 3)
+    assert np.isin(idx, keep).all()
+
+
+def test_delete_everything_returns_empty(corpus):
+    ix = _build("Mut,Flat", corpus)
+    ix.delete(np.arange(N))
+    r = ix.search(corpus[:4], K)
+    assert np.asarray(r.indices).shape == (4, 0)
+    assert np.asarray(r.scores).shape == (4, 0)
+
+
+def test_delete_unknown_raises_redelete_noop(corpus):
+    ix = _build("Mut,Flat", corpus)
+    with pytest.raises(KeyError):
+        ix.delete([N + 5])
+    assert ix.delete([3, 5]) == 2
+    epoch = ix.epoch
+    assert ix.delete([3, 5]) == 0          # re-delete: no-op...
+    assert ix.epoch == epoch               # ...and no identity churn
+    with pytest.raises(ValueError):
+        ix.search(corpus[:1], K, alive=np.ones(N, bool))  # mask is owned
+
+
+# ---------------------------------------------------------------------------
+# identity: epoch + fingerprint move on every mutation
+# ---------------------------------------------------------------------------
+def test_fingerprint_moves_on_every_mutation(corpus):
+    ix = _build("Mut,Flat", corpus)
+    prints = {ix.fingerprint()}
+    ix.add(_int_rows(11, 2))
+    prints.add(ix.fingerprint())
+    ix.delete([0])
+    prints.add(ix.fingerprint())
+    ix.rebuild()
+    prints.add(ix.fingerprint())
+    assert len(prints) == 4, "a mutation failed to move the fingerprint"
+    assert ix.epoch == 3 and ix.n_rebuilds == 1
+
+
+def test_ids_stable_across_rebuild(corpus):
+    ix = _build("Mut,IVF16", corpus)
+    ext = ix.add(_int_rows(13, 4))
+    ix.delete(np.arange(0, 60, 2))
+    before = np.asarray(ix.search(corpus[1:2], K).indices)
+    ix.rebuild()
+    assert ix.mutation_stats()["tombstones"] == 0.0
+    after = np.asarray(ix.search(corpus[1:2], K).indices)
+    assert np.array_equal(before, after), \
+        "compaction renamed external ids"
+    # the post-rebuild index still speaks pre-rebuild ids
+    r = ix.search(_int_rows(13, 4), 1)
+    assert np.array_equal(np.asarray(r.indices)[:, 0], ext)
+
+
+def test_imbalance_triggers_ivf_rebuild(corpus):
+    ix = api.MutableIndex(api.IVFFlatIndex(n_cells=8, kmeans_iters=4),
+                          imbalance_trigger=2.5)
+    ix.build(corpus)
+    assert ix.n_rebuilds == 0
+    # hammer one region: every insert lands in the same (fixed) cell
+    # until the imbalance trip re-clusters with fresh centroids
+    hot = np.tile(corpus[0], (120, 1)) + _int_rows(17, 120) * 0.25
+    ix.add(hot.astype(np.float32))
+    assert ix.n_rebuilds >= 1, \
+        f"imbalance {ix._imbalance():.2f} never tripped a re-cluster"
+    r = ix.search(corpus[5:6], 1)
+    assert np.asarray(r.indices)[0, 0] == 5
+
+
+def test_hnsw_entry_reassigned_when_tombstoned(corpus):
+    ix = _build("Mut,HNSW8", corpus)
+    g = ix._graph_index()._g
+    entry_ext = int(ix._row_ids[g.entry])
+    ix.delete([entry_ext])
+    assert ix._alive[g.entry], "entry still points at a tombstone"
+    r = ix.search(corpus[2:3], K)
+    assert np.asarray(r.indices)[0, 0] == 2
+    assert entry_ext not in np.asarray(r.indices)
+
+
+# ---------------------------------------------------------------------------
+# re-pack neutrality (the HNSW insert/pack contract)
+# ---------------------------------------------------------------------------
+def test_compact_pads_bitwise_neutral_without_holes():
+    rng = np.random.default_rng(5)
+    links0 = rng.integers(0, 50, (12, 8)).astype(np.int32)
+    links0[:6, 5:] = -1                      # trailing pads: already dense
+    holey = links0.copy()
+    holey[8, [1, 4]] = -1                    # interior holes in row 8
+    dense_before = holey[:8].copy()
+    hnsw_lib._compact_pads(holey, np.empty((0, 12, 4), np.int32))
+    assert np.array_equal(holey[:8], dense_before), \
+        "re-pack touched a hole-free row"
+    row = holey[8]
+    assert (row[-2:] == -1).all() and (row[:-2] >= 0).all()
+    # survivors keep their relative order (stable compaction)
+    want = [x for j, x in enumerate(links0[8]) if j not in (1, 4)]
+    assert row[:-2].tolist() == want
+
+
+def test_insert_batch_only_touches_neighbor_rows(corpus):
+    g = hnsw_lib.build(corpus, M=8, ef_construction=40, seed=0)
+    before0 = g.links0.copy()
+    new_ids = hnsw_lib.insert_batch(g, _int_rows(19, 6),
+                                    ef_construction=40, seed=0)
+    assert np.array_equal(new_ids, np.arange(N, N + 6))
+    changed = np.flatnonzero((g.links0[:N] != before0).any(axis=1))
+    # the insert rewires a bounded neighborhood, not the whole graph:
+    # untouched rows stay bitwise identical through the re-pack
+    assert 0 < changed.size < N // 2
+    assert g.packed is None, "insert must invalidate the packed cache"
+    g.pack()
+    assert np.array_equal(g.packed.nbrs0[:N][~np.isin(np.arange(N), changed)],
+                          before0[~np.isin(np.arange(N), changed)])
+
+
+# ---------------------------------------------------------------------------
+# kernel db_mask semantics (the operand the alive mask lowers into)
+# ---------------------------------------------------------------------------
+def test_l2_topk_ref_mask_semantics(corpus):
+    q = jax.numpy.asarray(corpus[:6])
+    db = jax.numpy.asarray(corpus)
+    mask = np.ones(N, bool)
+    mask[::3] = False
+    vals, idx = l2_topk_ref(q, db, K, db_mask=jax.numpy.asarray(mask))
+    idx = np.asarray(idx)
+    assert not np.isin(idx, np.flatnonzero(~mask)).any()
+    # equals the brute-force scan over only the alive rows (compare
+    # scores, not ids — an integer corpus has genuine distance ties)
+    alive_rows = np.flatnonzero(mask)
+    d = ((corpus[:6, None, :] - corpus[None, alive_rows, :]) ** 2).sum(-1)
+    want_d = np.sort(d, axis=1)[:, :K]
+    assert np.array_equal(-np.asarray(vals), want_d)
+    # an all-alive mask is bitwise the unmasked scan
+    v0, i0 = l2_topk_ref(q, db, K)
+    v1, i1 = l2_topk_ref(q, db, K, db_mask=jax.numpy.ones(N, bool))
+    assert np.array_equal(np.asarray(v0), np.asarray(v1))
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_l2_topk_ref_mask_pads_when_starved():
+    db = np.arange(8, dtype=np.float32)[:, None] * np.ones((8, 4), np.float32)
+    mask = np.zeros(8, bool)
+    mask[2] = True
+    vals, idx = l2_topk_ref(jax.numpy.asarray(db[:1]), jax.numpy.asarray(db),
+                            4, db_mask=jax.numpy.asarray(mask))
+    idx = np.asarray(idx)
+    vals = np.asarray(vals)
+    assert idx[0, 0] == 2 and (idx[0, 1:] == PAD_ID).all()
+    assert (vals[0, 1:] <= NEG_INF / 2).all()
+
+
+def test_graph_beam_ref_mask_equals_slot_masking(corpus):
+    rng = np.random.default_rng(23)
+    q = corpus[:4]
+    nbr = rng.integers(0, N, (4, 8)).astype(np.int32)
+    beam_v = np.full((4, 6), NEG_INF, np.float32)
+    beam_i = np.full((4, 6), -1, np.int32)
+    mask = np.ones(N, bool)
+    mask[nbr[0, 2]] = False
+    mask[nbr[3, 5]] = False
+    got_v, got_i = graph_beam_ref(q, corpus, nbr, beam_v, beam_i,
+                                  db_mask=mask)
+    # masking a db row == never offering that candidate slot at all
+    nbr2 = np.where(mask[np.where(nbr >= 0, nbr, 0)] | (nbr < 0), nbr, -1)
+    want_v, want_i = graph_beam_ref(q, corpus, nbr2, beam_v, beam_i)
+    assert np.array_equal(got_v, want_v) and np.array_equal(got_i, want_i)
+    assert not np.isin(got_i, [nbr[0, 2], nbr[3, 5]]).any()
+
+
+def test_alive_none_is_the_static_path(corpus):
+    """alive=None and an all-True mask agree at the API tier too."""
+    flat = api.FlatIndex().build(corpus)
+    r0 = flat.search(corpus[:8], K)
+    r1 = flat.search(corpus[:8], K, alive=np.ones(N, bool))
+    assert np.array_equal(np.asarray(r0.indices), np.asarray(r1.indices))
+    assert np.array_equal(np.asarray(r0.scores), np.asarray(r1.scores))
+
+
+# ---------------------------------------------------------------------------
+# drift monitor (Eq. 15 band) + reducer retrain policy
+# ---------------------------------------------------------------------------
+def test_drift_tracker_band_and_trigger():
+    w = 2.0 * np.eye(4, 8, dtype=np.float32)   # every singular value = 2
+    t = DriftTracker.from_weights(jax.numpy.asarray(w), tol=0.1,
+                                  threshold=0.2, min_observed=16)
+    assert t.sigma_min == pytest.approx(2.0) == t.sigma_max
+    # Eq. 15's lower half is exact on row(W): keep xs on the first 4 dims
+    xs = np.zeros((32, 8), np.float32)
+    xs[:, :4] = _int_rows(29, 32, 4) + 0.5     # no zero rows
+    assert t.observe(xs, 2.0 * xs[:, :4]) == 0.0
+    assert not t.should_retrain
+    assert t.observe(xs, 5.0 * xs[:, :4]) == 1.0   # off-band: all violate
+    assert t.observed == 64 and t.violation_rate == pytest.approx(0.5)
+    assert t.should_retrain
+    t.reset()
+    assert t.observed == 0 and not t.should_retrain
+
+
+def test_drift_tracker_skips_zero_norm_rows():
+    t = DriftTracker(sigma_min=1.0, sigma_max=1.0, tol=0.5)
+    xs = np.zeros((4, 3), np.float32)
+    xs[0] = 1.0
+    assert t.observe(xs, xs) == 0.0
+    assert t.observed == 1                      # only the nonzero row
+
+
+def test_drift_retrain_swaps_reducer_and_index_together():
+    rng = np.random.default_rng(31)
+    data = rng.standard_normal((160, DIM)).astype(np.float32)
+    ix = api.index_factory("Mut,RAE8,Flat",
+                           reducer_kw={"steps": 200, "seed": 0})
+    ix.build(data)
+    assert ix._drift is not None, "RAE stack must arm the Eq. 15 monitor"
+    old_params = ix._inner.reducer.params_
+    ix._drift.observed, ix._drift.violations = 500, 400   # force the trip
+    ix.add(data[:1] * 3.0)
+    assert ix.n_reducer_retrains == 1
+    assert ix._inner.reducer.params_ is not None
+    assert ix._inner.reducer.params_ is not old_params, \
+        "retrain must produce fresh encoder weights"
+    assert ix._drift.observed == 0              # fresh band, fresh stream
+    r = ix.search(data[5:6], 1)
+    assert np.asarray(r.indices)[0, 0] == 5
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+def test_save_load_roundtrip_keeps_tombstones(tmp_path, corpus):
+    ix = _build("Mut,IVF16", corpus)
+    ix.add(_int_rows(37, 3))
+    ix.delete([7, 8])
+    ix.save(str(tmp_path / "mut"))
+    back = api.load_index(str(tmp_path / "mut"))
+    assert isinstance(back, api.MutableIndex)
+    assert back.fingerprint() == ix.fingerprint()
+    assert back.epoch == ix.epoch and back.ntotal == ix.ntotal
+    r = back.search(corpus[7:9], K)
+    assert not np.isin(np.asarray(r.indices), [7, 8]).any()
+    back.delete([9])                            # still mutable after load
+    assert back.ntotal == ix.ntotal - 1
+
+
+# ---------------------------------------------------------------------------
+# serving: atomic mutation + zero-downtime swap
+# ---------------------------------------------------------------------------
+def test_engine_mutate_is_atomic_and_retires_cache(corpus):
+    ix = _build("Mut,Flat", corpus)
+    with SearchEngine(ix, max_batch=8, max_wait_ms=2.0,
+                      cache_size=32) as eng:
+        assert eng.search_one(corpus[5], K).indices[0, 0] == 5
+        assert eng.search_one(corpus[5], K).indices[0, 0] == 5  # cached
+        assert eng.mutate(lambda i: i.delete([5])) == 1
+        after = eng.search_one(corpus[5], K)    # same key, new epoch
+        assert 5 not in after.indices
+        ext = eng.mutate(lambda i: i.add(_int_rows(41, 2)))
+        assert np.array_equal(ext, [N, N + 1])  # mutate returns fn's result
+        st = eng.stats()["mutation"]
+        assert st["mutations"] == 2
+        assert st["index"]["epoch"] == 2.0 and st["index"]["deleted"] == 1.0
+
+
+def test_hot_swap_under_concurrent_load_drops_nothing(corpus):
+    """Clients hammer their own rows while the index is swapped for a
+    superset rebuild: every reply must be the exact self-hit (entirely
+    old or entirely new index — never a torn read), none dropped."""
+    flat = api.FlatIndex().build(corpus)
+    bigger = np.concatenate([corpus, _int_rows(43, 16)])
+    n_clients, reps = 12, 6
+    out = [[None] * reps for _ in range(n_clients)]
+    start = threading.Barrier(n_clients + 1)
+
+    def client(i):
+        start.wait()
+        for j in range(reps):
+            out[i][j] = eng.search_one(corpus[i], K)
+
+    with SearchEngine(flat, max_batch=8, max_wait_ms=2.0,
+                      cache_size=0) as eng:
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(n_clients)]
+        for t in threads:
+            t.start()
+        start.wait()
+        promoted = eng.hot_swap(lambda: api.FlatIndex().build(bigger),
+                                ks=(K,))
+        for t in threads:
+            t.join()
+        assert promoted is eng.index and eng.index.ntotal == N + 16
+        st = eng.stats()
+        assert st["mutation"]["swaps"] == 1
+        assert st["requests"] == n_clients * reps
+    for i in range(n_clients):
+        for r in out[i]:
+            assert r is not None, "a query was dropped during the swap"
+            assert r.indices[0, 0] == i and r.scores[0, 0] == 0.0
