@@ -249,6 +249,25 @@ def bench_serve_quick():
              batch_size_mean=r["batch_size_mean"], build_s=r["build_s"])
 
 
+def bench_autotune_quick():
+    """CPU-budget slice of table8_autotune: recall-SLO-tuned operating
+    points vs hand-picked defaults (also writes BENCH_autotune.json)."""
+    from .table8_autotune import run
+
+    rows = run(quick=True)
+    for r in rows:
+        emit(f"table8.{r['spec']}.slo{r['target_recall']}",
+             0.0,
+             f"recall={r['recall_holdout']};"
+             f"evals_ratio={r['evals_ratio']};"
+             f"escalated={r['escalation_rate']:.1%}",
+             recall_holdout=r["recall_holdout"],
+             tuned_distance_evals=r["tuned_distance_evals"],
+             default_distance_evals=r["default_distance_evals"],
+             evals_ratio=r["evals_ratio"],
+             escalation_rate=r["escalation_rate"])
+
+
 def bench_table1_quick():
     from .table1_knn import run
 
@@ -306,6 +325,7 @@ def main() -> None:
     bench_quant_quick()
     bench_graph_quick()
     bench_serve_quick()
+    bench_autotune_quick()
     bench_fig1_quick()
     bench_table1_quick()
     bench_roofline_summary()

@@ -69,6 +69,22 @@ surfacing, or a query failing during a mutation, is a correctness bug
 with no tolerance; and (d) sustain ``qps_under_churn`` at or above
 ``config["churn_qps_floor"]`` when the file records one.
 
+Autotune-specific gates (self-tuning serving): when ``BENCH_autotune``
+is checked, every tuned row must (a) reach its recall SLO on the
+held-out split — ``recall_holdout >= target_recall -
+config["autotune_recall_slack"]`` (default 0.01; the tuner fit the
+curve on a DISJOINT split, so this is a generalization gate); (b) when
+the hand-picked defaults already met the SLO (``default_recall >=
+target_recall``, i.e. the comparison is at equal recall), spend at most
+``config["autotune_evals_ratio_max"]`` (default 0.70) of the defaults'
+mean distance evaluations — the tuner must find a >= 30% cheaper
+operating point, not just a different one; and (c) report an
+``escalation_rate`` in [0, 1] — the adaptive second pass must be
+measured, and escalating (almost) every query means the margin signal
+is not splitting the batch. Every spec named in
+``config["autotune_required_specs"]`` must appear among the tuned rows
+— the flagship IVF and HNSW deployment stacks cannot silently drop out.
+
 Exit status: 0 = all gates pass, 1 = regression (details on stdout),
 2 = usage/schema error. Wired into scripts/ci.sh behind ``CI_BENCH=1``.
 ``--format json`` emits the same verdict machine-readably (one object
@@ -112,6 +128,13 @@ GRAPH_QUANT_RECALL_TOL = 0.01
 # file via config["churn_recall_ratio_floor"])
 CHURN_TURNOVER_FLOOR = 0.05
 CHURN_RECALL_RATIO_FLOOR = 0.95
+# self-tuning serving: tuned points must hit their recall SLO on the
+# held-out split (within the slack) and beat the hand-picked defaults'
+# distance-eval spend by >= 30% at equal recall; an escalation rate at
+# (or above) this ceiling means the margin signal stopped discriminating
+AUTOTUNE_RECALL_SLACK = 0.01
+AUTOTUNE_EVALS_RATIO_MAX = 0.70
+AUTOTUNE_ESCALATION_CEIL = 0.95
 
 
 def _load(path: str) -> dict:
@@ -309,6 +332,61 @@ def check_bench(name: str, baseline: dict, candidate: dict,
                     f"churn/{spec}: qps_under_churn "
                     f"{float(r.get('qps_under_churn', 0.0)):g} is below "
                     f"the {float(qps_floor):g} sustained-QPS floor")
+    if name == "autotune":
+        cfg = candidate.get("config", {})
+        slack = float(cfg.get("autotune_recall_slack",
+                              AUTOTUNE_RECALL_SLACK))
+        ratio_max = float(cfg.get("autotune_evals_ratio_max",
+                                  AUTOTUNE_EVALS_RATIO_MAX))
+        tuned_rows = [r for r in candidate["rows"]
+                      if "target_recall" in r]
+        if not tuned_rows:
+            failures.append(
+                "autotune: no tuned row with a target_recall — the "
+                "SLO and evals-saving gates have nothing to read")
+        have_specs = {str(r.get("spec", "")) for r in tuned_rows}
+        for spec in cfg.get("autotune_required_specs", []):
+            if spec not in have_specs:
+                failures.append(
+                    f"autotune: required stack {spec!r} missing from "
+                    "the tuned rows — the flagship deployment stacks "
+                    "must stay covered")
+        for r in tuned_rows:
+            key = f"{r.get('spec', '?')}@slo{r['target_recall']}"
+            target = float(r["target_recall"])
+            rec = float(r.get("recall_holdout", 0.0))
+            if rec < target - slack:
+                failures.append(
+                    f"autotune/{key}: recall_holdout {rec:g} missed the "
+                    f"{target:g} SLO by more than the {slack:g} slack — "
+                    "the tuned operating point does not generalize off "
+                    "the tune split")
+            if "escalation_rate" not in r:
+                failures.append(
+                    f"autotune/{key}: escalation_rate missing — the "
+                    "adaptive second pass must be measured")
+            else:
+                esc = float(r["escalation_rate"])
+                if not 0.0 <= esc <= 1.0:
+                    failures.append(
+                        f"autotune/{key}: escalation_rate {esc:g} is "
+                        "outside [0, 1]")
+                elif esc >= AUTOTUNE_ESCALATION_CEIL:
+                    failures.append(
+                        f"autotune/{key}: escalation_rate {esc:g} — "
+                        "(almost) every query re-ran the expensive "
+                        "pass; the margin signal is not splitting the "
+                        "batch and the cheap rung is pure overhead")
+            if float(r.get("default_recall", 0.0)) >= target:
+                # equal-recall comparison: the defaults met the SLO too,
+                # so the tuned point must win on cost
+                ratio = float(r.get("evals_ratio", float("inf")))
+                if ratio > ratio_max:
+                    failures.append(
+                        f"autotune/{key}: evals_ratio {ratio:g} exceeds "
+                        f"{ratio_max:g} — the tuned point must spend "
+                        f"<= {ratio_max:.0%} of the hand-picked "
+                        "defaults' distance evals at equal recall")
     if name == "sharded":
         cfg = candidate.get("config", {})
         by_spec = {str(r.get("spec", "")): r for r in candidate["rows"]}

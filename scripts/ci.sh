@@ -18,6 +18,12 @@
 #                                 #   load (benchmarks/table7_churn.py),
 #                                 #   gated by check_bench's churn block
 #                                 #   (tombstones, drops, recall ratio)
+#   CI_AUTOTUNE=1 scripts/ci.sh   # + self-tuning gate: re-sweep the
+#                                 #   operating curves and verify tuned
+#                                 #   points hit their recall SLOs with
+#                                 #   >= 30% fewer distance evals than
+#                                 #   the hand-picked defaults
+#                                 #   (benchmarks/table8_autotune.py)
 #   CI_SKIP_TESTS=1 CI_BENCH=1 scripts/ci.sh   # bench gate only
 #   CI_SKIP_LINT=1 scripts/ci.sh  # skip the static-analysis gate
 #   scripts/ci.sh -k quant        # extra pytest args pass through
@@ -53,7 +59,7 @@ fi
 # rename/deselection that silently drops one is a coverage regression,
 # not a green build.
 REQUIRED_SUITES=(api properties kernels quantized graph serve sharded
-                 mutation)
+                 mutation autotune)
 for suite in "${REQUIRED_SUITES[@]}"; do
     if ! grep -q "test_${suite}" <<<"$collect_out"; then
         echo "FATAL: tests/test_${suite}.py not collected" >&2
@@ -98,7 +104,8 @@ fi
 # static twin — are correctness, not perf, so they hold on any box).
 # The machine-readable verdict lands in results/check_bench_report.json
 # for CI to upload alongside the fresh BENCH_*.json files.
-if [ "${CI_BENCH:-0}" = "1" ] || [ "${CI_CHURN:-0}" = "1" ]; then
+if [ "${CI_BENCH:-0}" = "1" ] || [ "${CI_CHURN:-0}" = "1" ] \
+        || [ "${CI_AUTOTUNE:-0}" = "1" ]; then
     baseline_dir=$(mktemp -d)
     trap 'rm -rf "$baseline_dir"' EXIT
     cp results/BENCH_*.json "$baseline_dir"/
@@ -107,6 +114,9 @@ if [ "${CI_BENCH:-0}" = "1" ] || [ "${CI_CHURN:-0}" = "1" ]; then
     fi
     if [ "${CI_CHURN:-0}" = "1" ]; then
         python -m benchmarks.table7_churn --quick
+    fi
+    if [ "${CI_AUTOTUNE:-0}" = "1" ]; then
+        python -m benchmarks.table8_autotune --quick
     fi
     python scripts/check_bench.py --baseline "$baseline_dir" \
         --candidate results --format json \

@@ -48,6 +48,14 @@ Rules:
                            cache replays pre-mutation answers. Mutation
                            state (the epoch counter, the tombstone mask,
                            the id map) must be fingerprint state.
+- ``tuned-policy``         self-tuning indexes: an attribute stored by a
+                           tuning entry point (``set_params`` /
+                           ``set_operating_point``) but never hashed —
+                           applying a tuned operating point (a different
+                           ``nprobe`` / ``ef_search`` / ``rerank_k1``)
+                           changes what ``search`` answers, so it must
+                           move the fingerprint or the serving cache
+                           replays answers computed under the old knobs.
 """
 from __future__ import annotations
 
@@ -68,6 +76,11 @@ COVER_ENTRIES = ("_fingerprint_state", "ntotal")
 #: mutation state and must be hashed (or exempted), else the serving
 #: cache replays pre-mutation answers
 MUTATION_ENTRIES = ("add", "delete", "insert", "mark_deleted", "rebuild")
+#: entry points that apply a tuned operating point to a live index;
+#: their reachable stores are answer-changing knobs and must be hashed
+#: (or exempted), else a knob change leaves the fingerprint — and the
+#: serving cache — pretending nothing happened
+TUNE_ENTRIES = ("set_params", "set_operating_point")
 
 
 def static_mro(ci: ClassInfo, index: ModuleIndex) -> list[ClassInfo]:
@@ -308,6 +321,21 @@ def check_class(ci: ClassInfo, index: ModuleIndex) -> list[Finding]:
                     "_fingerprint_state() — a live mutation would not "
                     "move the fingerprint and the serving cache would "
                     "replay pre-mutation answers",
+            detail={"class": ci.name, "attr": attr}))
+
+    tune_stores: set[str] = set()
+    for entry in TUNE_ENTRIES:
+        tune_stores |= method_attr_flows(mro, entry)[0]
+    for attr in sorted(tune_stores - covered - set(exempt)):
+        findings.append(Finding(
+            path=ci.module.path, line=line, checker=CHECKER,
+            rule="tuned-policy",
+            message=f"{ci.name}.{attr} is stored by a tuning entry point "
+                    f"({'/'.join(TUNE_ENTRIES)}) but never hashed by "
+                    "_fingerprint_state() — applying a tuned operating "
+                    "point would not move the fingerprint and the serving "
+                    "cache would replay answers computed under the old "
+                    "knobs",
             detail={"class": ci.name, "attr": attr}))
 
     saved = method_attr_flows(mro, "save")[1]

@@ -36,13 +36,17 @@ from .reducer import (
     register_reducer,
 )
 from .index import (
+    KNOB_LADDER,
     FlatIndex,
     IVFFlatIndex,
+    SearchParams,
     SearchResult,
     TwoStageIndex,
     VectorIndex,
     load_index,
+    next_rung,
     register_index,
+    snap_knob,
 )
 from .quantized import IVFPQIndex, IVFSQ8Index, PQIndex, SQ8Index
 from .graph import HNSWIndex
@@ -57,11 +61,13 @@ __all__ = [
     "IVFPQIndex",
     "IVFSQ8Index",
     "IndexSpec",
+    "KNOB_LADDER",
     "MutableIndex",
     "PQIndex",
     "SQ8Index",
     "RAEReducer",
     "Reducer",
+    "SearchParams",
     "SearchResult",
     "ShardedIndex",
     "TwoStageIndex",
@@ -72,7 +78,9 @@ __all__ = [
     "load_index",
     "load_reducer",
     "make_reducer",
+    "next_rung",
     "parse_index_spec",
     "register_index",
     "register_reducer",
+    "snap_knob",
 ]

@@ -67,8 +67,8 @@ from typing import Any, Optional, Union
 import numpy as np
 
 from ..search import hnsw as hnsw_lib
-from .index import (SearchResult, VectorIndex, _load_arrays, _save_dir,
-                    register_index)
+from .index import (SearchParams, SearchResult, VectorIndex, _load_arrays,
+                    _save_dir, register_index)
 
 
 @register_index("hnsw")
@@ -230,19 +230,32 @@ class HNSWIndex(VectorIndex):
             self._g.pack()  # re-pack eagerly: serving must never stall
         return ids
 
+    def set_params(self, params: SearchParams) -> None:
+        """Adopt a tuned ``ef_search`` default. ``ef_search`` is
+        fingerprint state, so the serving cache sees a new identity."""
+        if params.ef_search is not None:
+            self.ef_search = params.ef_search
+
     def search(self, queries: np.ndarray, k: int,
-               alive: Optional[np.ndarray] = None) -> SearchResult:
+               alive: Optional[np.ndarray] = None,
+               params: Optional[SearchParams] = None) -> SearchResult:
         """Beam search with ef = max(ef_search, k). Queries whose beam
         holds fewer than k nodes pad the tail with index -1 / score -inf
         (FAISS convention, same as the IVF tiers). ``alive`` (bool
         [ntotal]) tombstones rows out of BOTH engines — a dead node never
         enters a beam; the entry point must be alive (callers that delete
         it reassign via :func:`repro.search.hnsw.reassign_entry`, which
-        ``MutableIndex.delete`` does automatically)."""
+        ``MutableIndex.delete`` does automatically).
+
+        ``params.ef_search`` overrides ``self.ef_search`` for this call;
+        ladder-snapped values keep the ef-dependent trace set bounded, so
+        laddered calls stay compile-budget-zero once warm."""
         self._require_built()
         q = np.asarray(queries, np.float32)
         k_req = min(k, self.ntotal)
-        ef = max(self.ef_search, k_req)
+        ef_base = (self.ef_search if params is None or params.ef_search is None
+                   else params.ef_search)
+        ef = max(ef_base, k_req)
         t0 = time.perf_counter()
         if self._use_batched(q.shape[0]):
             scores, idx, evals, hops = hnsw_lib.search_batched(

@@ -39,6 +39,102 @@ _META = "meta.json"
 _ARRAYS = "arrays.npz"
 
 
+#: Geometric ladder every per-call knob snaps to — each rung ~1.5x the
+#: previous (8*2^i interleaved with 12*2^i). The knobs feed jit static
+#: arguments (IVF ``nprobe``, HNSW ``ef``, the rerank ``k1``), so an
+#: arbitrary integer per call would mint a fresh XLA compile per value;
+#: snapping bounds every per-knob jit cache to at most ``len(KNOB_LADDER)``
+#: entries, which is what keeps laddered serving compile-budget-zero under
+#: ``analysis.runtime.no_retrace`` once each rung is warmed.
+KNOB_LADDER = (8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512,
+               768, 1024, 1536, 2048)
+
+
+def snap_knob(value: int) -> int:
+    """Round ``value`` UP to its :data:`KNOB_LADDER` rung. Rounding up
+    (never down) means a snapped knob always does at least the work the
+    caller asked for; values past the top rung clamp to it."""
+    v = int(value)
+    for rung in KNOB_LADDER:
+        if rung >= v:
+            return rung
+    return KNOB_LADDER[-1]
+
+
+def next_rung(value: int) -> int:
+    """The ladder rung strictly above ``value``'s — the escalation step.
+    The top rung escalates to itself (there is nowhere left to go)."""
+    snapped = snap_knob(value)
+    i = KNOB_LADDER.index(snapped)
+    return KNOB_LADDER[min(i + 1, len(KNOB_LADDER) - 1)]
+
+
+@dataclass(frozen=True)
+class SearchParams:
+    """Per-call search-knob overrides, threaded through every
+    ``VectorIndex.search`` as ``params=``. ``None`` leaves that knob at
+    the index's own default; each tier consumes the knobs it understands
+    and forwards the rest down its stack (``TwoStageIndex`` applies
+    ``rerank_k1`` and hands the whole object to its base; ``Sharded`` /
+    ``Mutable`` forward verbatim; ``Flat`` and the flat quantized scans
+    have no knobs and ignore it).
+
+    Values are snapped UP to :data:`KNOB_LADDER` at construction, so two
+    ``SearchParams`` resolving to the same operating point compare equal
+    — the serving cache keys on :meth:`key` — and the jit caches stay
+    bounded (see :data:`KNOB_LADDER`). ``set_params`` on an index applies
+    the same knobs as its new *defaults*, moving the fingerprint (the
+    knobs are fingerprint state), which is what lets the serving cache
+    distinguish answers computed under different tuned points."""
+
+    ef_search: Optional[int] = None
+    nprobe: Optional[int] = None
+    rerank_k1: Optional[int] = None
+
+    def __post_init__(self):
+        for name in ("ef_search", "nprobe", "rerank_k1"):
+            v = getattr(self, name)
+            if v is None:
+                continue
+            if int(v) < 1:
+                raise ValueError(f"SearchParams.{name} must be >= 1, "
+                                 f"got {v}")
+            object.__setattr__(self, name, snap_knob(v))
+
+    def key(self) -> tuple:
+        """Hashable operating-point token (cache keys, curve JSON)."""
+        return (self.ef_search, self.nprobe, self.rerank_k1)
+
+    def merged(self, override: "SearchParams") -> "SearchParams":
+        """This point with ``override``'s set knobs winning."""
+        return SearchParams(
+            ef_search=override.ef_search if override.ef_search is not None
+            else self.ef_search,
+            nprobe=override.nprobe if override.nprobe is not None
+            else self.nprobe,
+            rerank_k1=override.rerank_k1 if override.rerank_k1 is not None
+            else self.rerank_k1)
+
+    def escalated(self) -> "SearchParams":
+        """One ladder rung up on every set knob — the pass-2 point of
+        per-query adaptive escalation. Unset knobs stay unset."""
+        return SearchParams(
+            ef_search=None if self.ef_search is None
+            else next_rung(self.ef_search),
+            nprobe=None if self.nprobe is None else next_rung(self.nprobe),
+            rerank_k1=None if self.rerank_k1 is None
+            else next_rung(self.rerank_k1))
+
+    def to_dict(self) -> dict[str, Optional[int]]:
+        return {"ef_search": self.ef_search, "nprobe": self.nprobe,
+                "rerank_k1": self.rerank_k1}
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "SearchParams":
+        return cls(ef_search=d.get("ef_search"), nprobe=d.get("nprobe"),
+                   rerank_k1=d.get("rerank_k1"))
+
+
 @dataclass
 class SearchResult:
     """Uniform k-NN result: ``scores``/``indices`` are [Q, k]; higher score
@@ -163,14 +259,30 @@ class VectorIndex:
         raise NotImplementedError
 
     def search(self, queries: np.ndarray, k: int,
-               alive: Optional[np.ndarray] = None) -> SearchResult:
+               alive: Optional[np.ndarray] = None,
+               params: Optional[SearchParams] = None) -> SearchResult:
         """k-NN. ``alive`` (bool [ntotal], optional) tombstones rows: a
         dead row never appears in the result — not even as a pre-rerank
         candidate inside a composite — its slot padding to (-inf, -1).
         ``alive=None`` must answer bitwise identically to the tier's
         static path. Owned and threaded by :class:`MutableIndex`; static
-        callers never pass it."""
+        callers never pass it.
+
+        ``params`` (:class:`SearchParams`, optional) overrides the tier's
+        search knobs for THIS call only: each tier consumes what it
+        understands (IVF ``nprobe``, HNSW ``ef_search``, TwoStage
+        ``rerank_k1``), forwards the object down composite stacks, and
+        ignores knobs it has none of. ``params=None`` must answer bitwise
+        identically to the pre-params path."""
         raise NotImplementedError
+
+    def set_params(self, params: SearchParams) -> None:
+        """Apply ``params``'s set knobs as this index's new DEFAULTS
+        (tuned operating point). Knob attributes are fingerprint state on
+        every tier that implements this, so applying a tuned point moves
+        the fingerprint — the serving cache can never replay an answer
+        computed under different knobs. Tiers without knobs ignore it."""
+        del params
 
     def save(self, directory: str) -> None:
         raise NotImplementedError
@@ -280,7 +392,9 @@ class FlatIndex(VectorIndex):
             [self._db, jnp.asarray(vecs, jnp.float32)], axis=0)
 
     def search(self, queries: np.ndarray, k: int,
-               alive: Optional[np.ndarray] = None) -> SearchResult:
+               alive: Optional[np.ndarray] = None,
+               params: Optional[SearchParams] = None) -> SearchResult:
+        del params  # exact scan has no knobs: every row is always scored
         self._require_built()
         q = jnp.asarray(queries, jnp.float32)
         al = None if alive is None else jnp.asarray(np.asarray(alive, bool))
@@ -435,15 +549,29 @@ class IVFFlatIndex(VectorIndex):
 
         return jax.jit(fn, static_argnames=("k", "nprobe"))
 
+    def set_params(self, params: SearchParams) -> None:
+        """Adopt a tuned ``nprobe`` default. ``nprobe`` is fingerprint
+        state, so the serving cache sees a new index identity."""
+        if params.nprobe is not None:
+            self.nprobe = params.nprobe
+
     def search(self, queries: np.ndarray, k: int,
-               alive: Optional[np.ndarray] = None) -> SearchResult:
+               alive: Optional[np.ndarray] = None,
+               params: Optional[SearchParams] = None) -> SearchResult:
         """Like FAISS, a query whose probed cells hold fewer than k members
         pads the tail with index -1 / score -inf. ``alive`` folds into the
         list mask (ids nulled too), so a tombstoned row can neither score
-        nor surface — the probe scan's own signature is unchanged."""
+        nor surface — the probe scan's own signature is unchanged.
+
+        ``params.nprobe`` overrides ``self.nprobe`` for this call; it is
+        ladder-snapped (``SearchParams`` guarantees it), so repeated
+        laddered calls reuse the same cached ``_probe`` jit entries —
+        zero recompiles once a rung is warm."""
         self._require_built()
         q = jnp.asarray(queries, jnp.float32)
-        nprobe = min(self.nprobe, int(self._ivf.centroids.shape[0]))
+        nprobe = (self.nprobe if params is None or params.nprobe is None
+                  else params.nprobe)
+        nprobe = min(nprobe, int(self._ivf.centroids.shape[0]))
         k_req = min(k, self.ntotal)
         # the probe scan can surface at most nprobe * cell_cap rows
         k_eff = min(k_req, nprobe * int(self._ivf.lists.shape[1]))
@@ -512,11 +640,15 @@ class TwoStageIndex(VectorIndex):
     IVF/PQ)."""
 
     def __init__(self, reducer: Reducer, base_index: VectorIndex,
-                 rerank_factor: int = 4, metric: str = "euclidean"):
+                 rerank_factor: int = 4, metric: str = "euclidean",
+                 rerank_k1: Optional[int] = None):
         self.reducer = reducer
         self.base = base_index
         self.rerank_factor = rerank_factor
         self.metric = metric
+        # tuned absolute stage-1 budget; None = the classic
+        # k * rerank_factor * stage1_oversample formula
+        self.rerank_k1 = None if rerank_k1 is None else snap_knob(rerank_k1)
         self._db_full: Optional[jax.Array] = None
 
     @property
@@ -556,7 +688,7 @@ class TwoStageIndex(VectorIndex):
         return hashlib.sha1(z.tobytes()).hexdigest()[:16]
 
     def _fingerprint_state(self) -> list:
-        return [f"rerank={self.rerank_factor}:{self.metric}",
+        return [f"rerank={self.rerank_factor}:{self.rerank_k1}:{self.metric}",
                 f"reducer={self._reducer_fingerprint()}",
                 self.base.fingerprint(), self._db_full]
 
@@ -599,17 +731,34 @@ class TwoStageIndex(VectorIndex):
             functools.partial(ts_lib.rerank_candidates, metric=self.metric),
             static_argnames=("k",))
 
+    def set_params(self, params: SearchParams) -> None:
+        """Adopt a tuned stage-1 budget and forward the rest down the
+        stack. ``rerank_k1`` is fingerprint state (as are the base's
+        knobs), so a tuned point moves the composite fingerprint."""
+        if params.rerank_k1 is not None:
+            self.rerank_k1 = params.rerank_k1
+        self.base.set_params(params)
+
     def search(self, queries: np.ndarray, k: int,
-               alive: Optional[np.ndarray] = None) -> SearchResult:
+               alive: Optional[np.ndarray] = None,
+               params: Optional[SearchParams] = None) -> SearchResult:
         self._require_built()
         t0 = time.perf_counter()
         zq = self.reducer.transform(np.asarray(queries, np.float32))
         k_eff = min(k, self.ntotal)
-        over = getattr(self.base, "stage1_oversample", 1)
-        k1 = min(k_eff * self.rerank_factor * over, self.ntotal)
+        # stage-1 candidate budget: an explicit (tuned / per-call) k1
+        # beats the oversample formula; never below k_eff — the rerank
+        # cannot return rows stage 1 did not fetch
+        pk1 = (self.rerank_k1 if params is None or params.rerank_k1 is None
+               else params.rerank_k1)
+        if pk1 is not None:
+            k1 = min(max(int(pk1), k_eff), self.ntotal)
+        else:
+            over = getattr(self.base, "stage1_oversample", 1)
+            k1 = min(k_eff * self.rerank_factor * over, self.ntotal)
         # tombstones are enforced in stage 1: a deleted row never appears
         # even as a pre-rerank candidate, so the rerank can't resurface it
-        stage1 = self.base.search(zq, k1, alive=alive)
+        stage1 = self.base.search(zq, k1, alive=alive, params=params)
         cand = jnp.asarray(stage1.indices)
         q = jnp.asarray(queries, jnp.float32)
         scores, idx = self._rerank(q, self._db_full, cand, k=k_eff)
@@ -630,6 +779,7 @@ class TwoStageIndex(VectorIndex):
         self._require_built()
         _save_dir(directory, {"kind": self.kind,
                               "rerank_factor": self.rerank_factor,
+                              "rerank_k1": self.rerank_k1,
                               "metric": self.metric},
                   {"db_full": np.asarray(self._db_full)})
         self.reducer.save(os.path.join(directory, "reducer"))
@@ -640,6 +790,6 @@ class TwoStageIndex(VectorIndex):
         reducer = load_reducer(os.path.join(directory, "reducer"))
         base = load_index(os.path.join(directory, "base"))
         self = cls(reducer, base, rerank_factor=meta["rerank_factor"],
-                   metric=meta["metric"])
+                   metric=meta["metric"], rerank_k1=meta.get("rerank_k1"))
         self._db_full = jnp.asarray(_load_arrays(directory)["db_full"])
         return self

@@ -277,8 +277,16 @@ class MutableIndex(VectorIndex):
         return self
 
     # -- search ------------------------------------------------------------
+    def set_params(self, params) -> None:
+        """Forward a tuned operating point to the wrapped tier — its knob
+        attrs are its fingerprint state, and the mutable fingerprint
+        composes over the inner one, so the identity moves here too."""
+        self._require_built()
+        self._inner.set_params(params)
+
     def search(self, queries: np.ndarray, k: int,
-               alive: Optional[np.ndarray] = None) -> SearchResult:
+               alive: Optional[np.ndarray] = None,
+               params=None) -> SearchResult:
         self._require_built()
         if alive is not None:
             raise ValueError("MutableIndex owns the tombstone mask; "
@@ -292,7 +300,7 @@ class MutableIndex(VectorIndex):
                 latency_s=0.0, stats={"distance_evals": 0.0})
         # alive=None keeps the inner tiers on their bitwise-static paths
         mask = None if self._alive.all() else self._alive
-        r = self._inner.search(q, min(k, n_alive), alive=mask)
+        r = self._inner.search(q, min(k, n_alive), alive=mask, params=params)
         idx = np.asarray(r.indices)
         safe = np.clip(idx, 0, self._row_ids.shape[0] - 1)
         ext = np.where(idx >= 0, self._row_ids[safe], -1)

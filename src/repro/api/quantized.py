@@ -30,8 +30,8 @@ import numpy as np
 from ..kernels import pq_adc
 from ..search import ivf as ivf_lib
 from ..search import quantize as qz
-from .index import (VectorIndex, _load_arrays, _pad_result, _probed_sizes,
-                    _save_dir, _timed, register_index)
+from .index import (SearchParams, VectorIndex, _load_arrays, _pad_result,
+                    _probed_sizes, _save_dir, _timed, register_index)
 
 
 def _drop_tombstones(vals, idx, alive: np.ndarray, k_req: int
@@ -120,7 +120,9 @@ class SQ8Index(VectorIndex):
         return self
 
     def search(self, queries: np.ndarray, k: int,
-               alive: Optional[np.ndarray] = None) -> "SearchResult":
+               alive: Optional[np.ndarray] = None,
+               params: Optional[SearchParams] = None) -> "SearchResult":
+        del params  # flat code scan has no knobs: every row is scored
         self._require_built()
         q = jnp.asarray(queries, jnp.float32)
         k_eff = min(k, self.ntotal)
@@ -225,7 +227,9 @@ class PQIndex(VectorIndex):
         return self
 
     def search(self, queries: np.ndarray, k: int,
-               alive: Optional[np.ndarray] = None) -> "SearchResult":
+               alive: Optional[np.ndarray] = None,
+               params: Optional[SearchParams] = None) -> "SearchResult":
+        del params  # flat ADC scan has no knobs: every row is scored
         self._require_built()
         q = jnp.asarray(queries, jnp.float32)
         k_eff = min(k, self.ntotal)
@@ -328,9 +332,21 @@ class _IVFQuantBase(VectorIndex):
         # coarse layer; subclasses append their code payloads
         return [f"nprobe={self.nprobe}", self._centroids, self._lists]
 
-    def _probe_budget(self, k: int) -> tuple[int, int, int]:
-        """(k requested, k servable by the probe scan, nprobe)."""
-        nprobe = min(self.nprobe, int(self._centroids.shape[0]))
+    def set_params(self, params: SearchParams) -> None:
+        """Adopt a tuned ``nprobe`` default (fingerprint state, same as
+        :class:`~repro.api.index.IVFFlatIndex`)."""
+        if params.nprobe is not None:
+            self.nprobe = params.nprobe
+
+    def _probe_budget(self, k: int,
+                      params: Optional[SearchParams] = None
+                      ) -> tuple[int, int, int]:
+        """(k requested, k servable by the probe scan, nprobe).
+        ``params.nprobe`` overrides ``self.nprobe`` for this call —
+        ladder-snapped, so the static-arg jit caches stay bounded."""
+        nprobe = (self.nprobe if params is None or params.nprobe is None
+                  else params.nprobe)
+        nprobe = min(nprobe, int(self._centroids.shape[0]))
         k_req = min(k, self.ntotal)
         k_eff = min(k_req, nprobe * int(self._lists.shape[1]))
         return k_req, k_eff, nprobe
@@ -405,10 +421,11 @@ class IVFSQ8Index(_IVFQuantBase):
         return self
 
     def search(self, queries: np.ndarray, k: int,
-               alive: Optional[np.ndarray] = None) -> "SearchResult":
+               alive: Optional[np.ndarray] = None,
+               params: Optional[SearchParams] = None) -> "SearchResult":
         self._require_built()
         q = jnp.asarray(queries, jnp.float32)
-        k_req, k_eff, nprobe = self._probe_budget(k)
+        k_req, k_eff, nprobe = self._probe_budget(k, params)
         lists, mask = self._lists, self._mask
         if alive is not None:
             lists, mask = _fold_alive_into_lists(lists, mask, alive)
@@ -492,10 +509,11 @@ class IVFPQIndex(_IVFQuantBase):
         return self
 
     def search(self, queries: np.ndarray, k: int,
-               alive: Optional[np.ndarray] = None) -> "SearchResult":
+               alive: Optional[np.ndarray] = None,
+               params: Optional[SearchParams] = None) -> "SearchResult":
         self._require_built()
         q = jnp.asarray(queries, jnp.float32)
-        k_req, k_eff, nprobe = self._probe_budget(k)
+        k_req, k_eff, nprobe = self._probe_budget(k, params)
         lists, mask = self._lists, self._mask
         if alive is not None:
             lists, mask = _fold_alive_into_lists(lists, mask, alive)

@@ -213,8 +213,17 @@ class ShardedIndex(VectorIndex):
             max_workers=self.n_workers or max(1, len(self._shards)),
             thread_name_prefix="shard")
 
+    def set_params(self, params) -> None:
+        """Broadcast a tuned operating point to every shard — the children
+        hold the knobs (and hash them), so the composed fingerprint moves
+        through the child-fingerprint chain."""
+        self._require_built()
+        for child in self._shards:
+            child.set_params(params)
+
     def search(self, queries: np.ndarray, k: int,
-               alive: Optional[np.ndarray] = None) -> SearchResult:
+               alive: Optional[np.ndarray] = None,
+               params=None) -> SearchResult:
         self._require_built()
         t0 = time.perf_counter()
         q = np.asarray(queries, np.float32)
@@ -228,11 +237,11 @@ class ShardedIndex(VectorIndex):
         if n_sh == 1:
             results = [self._shards[0].search(
                 q, min(k_req, self._shards[0].ntotal),
-                alive=child_alive[0])]
+                alive=child_alive[0], params=params)]
         else:
             futs = [self._pool.submit(self._shards[s].search, q,
                                       min(k_req, self._shards[s].ntotal),
-                                      alive=child_alive[s])
+                                      alive=child_alive[s], params=params)
                     for s in range(n_sh)]
             results = [f.result() for f in futs]
         vals = np.concatenate(

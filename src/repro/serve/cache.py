@@ -1,10 +1,14 @@
 """Thread-safe LRU result cache for the serving engine.
 
-Keys are built by the engine from ``(query bytes, k, index fingerprint)``
-— see :meth:`repro.serve.engine.SearchEngine._cache_key` — so a hot index
-swap invalidates implicitly: old entries stay in the map until evicted but
-can never match a lookup made under the new fingerprint. Hit/miss counters
-feed ``engine.stats()``.
+Keys are built by the engine from ``(query bytes, k, index fingerprint,
+effective operating point)`` — see
+:meth:`repro.serve.engine.SearchEngine._cache_key`. A hot index swap
+invalidates implicitly (new fingerprint), and so does a knob change
+(``set_operating_point`` / a new ``target_recall`` mapping): the resolved
+``SearchParams`` and escalation policy are part of the key, so an answer
+computed under one operating point can never be replayed under another.
+Old entries stay in the map until evicted but can never match a lookup
+made under the new key. Hit/miss counters feed ``engine.stats()``.
 """
 from __future__ import annotations
 

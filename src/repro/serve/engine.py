@@ -16,9 +16,20 @@ batched engine agree up to beam-boundary ties and score rounding (see
 On top of the scheduler:
 
 * an :class:`~repro.serve.cache.LRUCache` keyed on ``(query bytes, k,
-  index fingerprint)`` — repeat queries skip the index entirely, and a
-  hot ``set_index`` swap can never serve stale answers because the
-  fingerprint (content hash, see ``VectorIndex.fingerprint``) changes;
+  index fingerprint, operating point)`` — repeat queries skip the index
+  entirely; a hot ``set_index`` swap can never serve stale answers
+  because the fingerprint (content hash, see ``VectorIndex.fingerprint``)
+  changes, and a knob change (``set_operating_point``) can never replay
+  answers computed under different knobs because the resolved
+  ``SearchParams`` / escalation policy are part of the key;
+* **self-tuning** (``repro.tune``): construct with ``target_recall=`` +
+  an offline-fitted ``OperatingCurve`` and the engine serves the
+  cheapest knob setting that meets the SLO; add an
+  ``EscalationPolicy`` and every batch runs a cheap first pass, answers
+  the rows whose top-k margin is stable, and re-runs only the unstable
+  rows one :data:`~repro.api.index.KNOB_LADDER` rung up — pass-1 +
+  pass-2 ``distance_evals`` compose in stats, and both passes stay on
+  warmed (bucket, k, rung) shapes so serving is compile-budget-zero;
 * ``warmup()`` — pre-compiles the hot path at every padded bucket size so
   the first real request pays search cost, not XLA compile cost;
 * ``stats()`` — QPS (lifetime + windowed), p50/p99 latency, batch-size
@@ -50,11 +61,14 @@ from typing import Any, Optional, Sequence
 
 import numpy as np
 
-from ..api.index import SearchResult, VectorIndex
+from ..api.index import SearchParams, SearchResult, VectorIndex
+from ..tune.autotune import OperatingCurve
+from ..tune.escalate import EscalationPolicy, unstable_rows
 from .cache import LRUCache
 from .metrics import EngineMetrics
 
 _STOP = object()
+_UNSET = object()  # set_operating_point: "leave this field alone"
 
 
 @dataclass
@@ -89,7 +103,11 @@ class SearchEngine:
     """
 
     def __init__(self, index: VectorIndex, max_batch: int = 32,
-                 max_wait_ms: float = 2.0, cache_size: int = 1024):
+                 max_wait_ms: float = 2.0, cache_size: int = 1024,
+                 params: Optional[SearchParams] = None,
+                 target_recall: Optional[float] = None,
+                 curve: Optional[OperatingCurve] = None,
+                 escalation: Optional[EscalationPolicy] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_wait_ms < 0:
@@ -102,6 +120,11 @@ class SearchEngine:
         self.cache = LRUCache(cache_size)
         self.metrics = EngineMetrics()
         self._fingerprint = index.fingerprint()
+        self._explicit_params = params
+        self._target_recall = target_recall
+        self._curve = curve
+        self._escalation = escalation
+        self._resolve_operating_point()
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._thread: Optional[threading.Thread] = None
         self._queue: Optional[asyncio.Queue] = None
@@ -190,10 +213,100 @@ class SearchEngine:
         self.stop()
 
     # ------------------------------------------------------------------
+    # operating point (repro.tune)
+    # ------------------------------------------------------------------
+    def _resolve_operating_point(self) -> None:
+        """Collapse (target_recall, curve, explicit params, escalation)
+        into the concrete per-call knobs every search uses:
+        ``self._params`` (pass 1; None = index defaults),
+        ``self._esc_params`` (pass 2; None = escalation off) and
+        ``self._op_token`` (the cache-key component). Called under
+        ``__init__`` and, via the search executor, whenever the index or
+        the point changes — never concurrently with a batch."""
+        base = SearchParams()
+        if self._target_recall is not None:
+            if self._curve is None:
+                raise ValueError(
+                    "target_recall needs an OperatingCurve: run "
+                    "repro.tune.sweep offline and pass curve=")
+            if self._curve.fingerprint != self._fingerprint:
+                raise ValueError(
+                    f"operating curve was tuned for fingerprint "
+                    f"{self._curve.fingerprint}, live index is "
+                    f"{self._fingerprint} — re-run repro.tune.sweep on "
+                    f"this build (or set_operating_point(curve=...))")
+            # escalation closes small recall gaps, so its recall_slack
+            # DISCOUNTS the curve selection: start up to one rung
+            # cheaper, let pass 2 recover (the autotune bench gate
+            # verifies the SLO on held-out queries)
+            slack = (-self._escalation.recall_slack
+                     if self._escalation is not None else 0.0)
+            base = self._curve.select(self._target_recall, slack=slack).params
+        if self._explicit_params is not None:
+            base = base.merged(self._explicit_params)
+        self._params = base if base.key() != (None, None, None) else None
+        if self._escalation is None:
+            self._esc_params = None
+        else:
+            ep = self._escalation.params
+            if ep is None and self._params is not None:
+                ep = self._params.escalated()
+            if ep is None:
+                raise ValueError(
+                    "escalation needs a pass-2 operating point: give "
+                    "EscalationPolicy(params=...), or set params/"
+                    "target_recall so the engine can take the next "
+                    "ladder rung")
+            self._esc_params = ep
+        self._op_token = (
+            self._target_recall,
+            None if self._params is None else self._params.key(),
+            None if self._escalation is None else
+            (self._escalation.delta, float(self._escalation.threshold),
+             self._esc_params.key()))
+
+    def set_operating_point(self, *, params=_UNSET, target_recall=_UNSET,
+                            curve=_UNSET, escalation=_UNSET) -> None:
+        """Change any part of the operating point on a live engine.
+        Omitted keywords keep their current value; pass ``None`` to clear
+        one. Runs on the search executor, so the switch is atomic with
+        respect to in-flight batches, and the new resolved point enters
+        the cache key — a knob change can never replay an answer computed
+        under the old knobs (the PR-10 cache bugfix)."""
+
+        def _apply():
+            if params is not _UNSET:
+                self._explicit_params = params
+            if target_recall is not _UNSET:
+                self._target_recall = target_recall
+            if curve is not _UNSET:
+                self._curve = curve
+            if escalation is not _UNSET:
+                self._escalation = escalation
+            self._resolve_operating_point()
+
+        if self.running:
+            self._executor.submit(_apply).result()
+        else:
+            _apply()
+
+    def _warm_points(self, k: int) -> list[tuple[int, Optional[SearchParams]]]:
+        """(k_effective, params) pairs a warmup must compile for one
+        served ``k``: with escalation on, BOTH passes over-fetch
+        ``k + delta`` — pass 1 at the base point, pass 2 one rung up."""
+        if self._escalation is None:
+            return [(k, self._params)]
+        kk = k + self._escalation.delta
+        return [(kk, self._params), (kk, self._esc_params)]
+
+    # ------------------------------------------------------------------
     # serving paths
     # ------------------------------------------------------------------
     def _cache_key(self, q: np.ndarray, k: int) -> tuple:
-        return (self._fingerprint, k, q.shape, q.tobytes())
+        # fingerprint pins the build, op_token pins the knobs: both can
+        # change under a live engine (hot swap / set_operating_point) and
+        # either change must retire every prior answer
+        return (self._fingerprint, self._op_token, k, q.shape, q.tobytes())
 
     async def asearch(self, query: np.ndarray, k: int = 10) -> SearchResult:
         """Single-query path: cache lookup, then the micro-batch queue."""
@@ -237,26 +350,92 @@ class SearchEngine:
         return asyncio.run_coroutine_threadsafe(
             self.asearch(query, k), loop).result()
 
+    def _escalated_search(self, qs: np.ndarray, k: int
+                          ) -> tuple[SearchResult, np.ndarray]:
+        """One engine-side search at the resolved operating point,
+        returning ([Q, k] result, escalated-row mask).
+
+        Without escalation this is a plain ``index.search`` at the tuned
+        params. With it: pass 1 over-fetches ``k + delta`` at the cheap
+        point, the normalized top-k tail margin flags unstable rows
+        (``repro.tune.escalate``), and ONLY those rows re-run one ladder
+        rung up — padded to the engine's smallest covering bucket, so
+        pass 2 reuses the same warmed shapes regardless of how many rows
+        escalate, and a row escalated solo is bitwise identical to the
+        same row escalated inside any batch (the tiers' row-invariance
+        contract). Stable rows answer from pass 1 untouched. Stats
+        compose: ``distance_evals`` amortizes the pass-2 cost over the
+        whole batch; per-row attribution happens in ``_run_batch``."""
+        esc = self._escalation
+        if esc is None:
+            r = self.index.search(qs, k, params=self._params)
+            return r, np.zeros(qs.shape[0], bool)
+        kk = k + esc.delta
+        r1 = self.index.search(qs, kk, params=self._params)
+        if r1.scores.shape[1] < kk:
+            # corpus smaller than k + delta: a wider search has nothing
+            # more to find, and the margin is undefined — serve pass 1,
+            # trimmed to the k columns the caller asked for
+            return SearchResult(
+                scores=np.asarray(r1.scores)[:, :k],
+                indices=np.asarray(r1.indices)[:, :k],
+                latency_s=r1.latency_s, stats=dict(r1.stats)), \
+                np.zeros(qs.shape[0], bool)
+        mask = unstable_rows(r1.scores, k, esc.delta, esc.threshold,
+                             ntotal=self.index.ntotal)
+        scores = np.asarray(r1.scores)[:, :k].copy()
+        idx = np.asarray(r1.indices)[:, :k].copy()
+        n, n_esc = qs.shape[0], int(mask.sum())
+        e1 = r1.stats.get("distance_evals", 0.0)
+        e2, latency = 0.0, r1.latency_s
+        if n_esc:
+            sub = qs[mask]
+            bucket = next((b for b in self.buckets if b >= n_esc), n_esc)
+            if bucket > n_esc:
+                sub = np.concatenate(
+                    [sub, np.repeat(sub[:1], bucket - n_esc, axis=0)])
+            r2 = self.index.search(sub, kk, params=self._esc_params)
+            scores[mask] = np.asarray(r2.scores)[:n_esc, :k]
+            idx[mask] = np.asarray(r2.indices)[:n_esc, :k]
+            e2 = r2.stats.get("distance_evals", 0.0)
+            latency += r2.latency_s
+        stats = dict(r1.stats)
+        stats.update({
+            "distance_evals": e1 + e2 * (n_esc / n),
+            "pass1_distance_evals": e1,
+            "pass2_distance_evals": e2,
+            "escalated_frac": n_esc / n,
+        })
+        return SearchResult(scores=scores, indices=idx,
+                            latency_s=latency, stats=stats), mask
+
     def search(self, queries: np.ndarray, k: int = 10) -> SearchResult:
         """Explicit-batch passthrough: the caller already batched, so skip
-        the queue (and the single-query cache) but keep the metrics."""
+        the queue (and the single-query cache) but keep the metrics. Runs
+        at the engine's resolved operating point, escalation included —
+        benches measuring the tuned engine go through here."""
         queries = np.asarray(queries, np.float32)
-        res = self.index.search(queries, k)
+        res, mask = self._escalated_search(queries, k)
         n = queries.shape[0]
         self.metrics.record_batch(size=n, bucket=n,
                                   latencies_s=[res.latency_s] * n,
-                                  distance_evals=res.distance_evals)
+                                  distance_evals=res.distance_evals,
+                                  escalated=int(mask.sum()))
         return res
 
     def set_index(self, index: VectorIndex) -> None:
         """Hot-swap the served index. Runs on the search executor so it
         can never interleave with an in-flight batch; the new fingerprint
-        invalidates every cached result implicitly."""
+        invalidates every cached result implicitly. Re-resolves the
+        operating point against the new build — an engine pinned to a
+        ``target_recall`` curve refuses a swap to a build the curve was
+        not tuned on (re-sweep first, then ``set_operating_point``)."""
         index._require_built()
 
         def _swap():
             self.index = index
             self._fingerprint = index.fingerprint()
+            self._resolve_operating_point()
 
         if self.running:
             self._executor.submit(_swap).result()
@@ -278,6 +457,10 @@ class SearchEngine:
         def _apply():
             out = fn(self.index)
             self._fingerprint = self.index.fingerprint()
+            # re-resolve: a tuned curve is pinned to the pre-mutation
+            # fingerprint, so an engine serving a recall SLO fails loudly
+            # here rather than serve an SLO its curve no longer certifies
+            self._resolve_operating_point()
             return out
 
         if self.running:
@@ -303,9 +486,11 @@ class SearchEngine:
         new_index._require_built()
         rng = np.random.default_rng(seed)
         for k in ks:
-            for b in self.buckets:
-                q = rng.standard_normal((b, new_index.dim)).astype(np.float32)
-                new_index.search(q, k)
+            for kw, p in self._warm_points(k):
+                for b in self.buckets:
+                    q = rng.standard_normal(
+                        (b, new_index.dim)).astype(np.float32)
+                    new_index.search(q, kw, params=p)
         self.set_index(new_index)
         return new_index
 
@@ -323,9 +508,13 @@ class SearchEngine:
         dim = dim if dim is not None else self.index.dim
         rng = np.random.default_rng(seed)
         for k in ks:
-            for b in self.buckets:
-                q = rng.standard_normal((b, dim)).astype(np.float32)
-                self.index.search(q, k)
+            # with escalation on, warm BOTH passes' shapes: k + delta at
+            # the base rung and at the escalated rung, every bucket —
+            # serving then never compiles, however many rows escalate
+            for kw, p in self._warm_points(k):
+                for b in self.buckets:
+                    q = rng.standard_normal((b, dim)).astype(np.float32)
+                    self.index.search(q, kw, params=p)
         return self
 
     # ------------------------------------------------------------------
@@ -397,7 +586,8 @@ class SearchEngine:
                 req.future.set_result(res)
 
     def _run_batch(self, k: int, reqs: list[_Request]) -> list[SearchResult]:
-        """Executor-side: pad to the bucket, search once, slice per caller."""
+        """Executor-side: pad to the bucket, search once (escalating
+        unstable rows at the operating point), slice per caller."""
         size = len(reqs)
         bucket = next(b for b in self.buckets if b >= size)
         qs = np.stack([r.q for r in reqs])
@@ -406,14 +596,23 @@ class SearchEngine:
             # the unpadded rows, and never a degenerate all-zero distance
             qs = np.concatenate(
                 [qs, np.repeat(qs[:1], bucket - size, axis=0)])
-        res = self.index.search(qs, k)
+        res, esc_mask = self._escalated_search(qs, k)
         done = time.perf_counter()
+        e1 = res.stats.get("pass1_distance_evals",
+                           res.stats.get("distance_evals", 0.0))
+        e2 = res.stats.get("pass2_distance_evals", 0.0)
         out = []
         for i, req in enumerate(reqs):
+            stats = dict(res.stats)
+            if self._escalation is not None:
+                # per-row attribution: an escalated row paid both passes,
+                # a stable row only the first
+                stats["distance_evals"] = e1 + (e2 if esc_mask[i] else 0.0)
+                stats["escalated"] = bool(esc_mask[i])
             single = SearchResult(scores=res.scores[i:i + 1].copy(),
                                   indices=res.indices[i:i + 1].copy(),
                                   latency_s=res.latency_s,
-                                  stats=dict(res.stats))
+                                  stats=stats)
             if self.cache.maxsize:
                 # the cached object IS the returned object: freeze its
                 # arrays so a caller mutating its result can't poison
@@ -425,7 +624,8 @@ class SearchEngine:
         self.metrics.record_batch(
             size=size, bucket=bucket,
             latencies_s=[done - r.t_enq for r in reqs],
-            distance_evals=res.distance_evals)
+            distance_evals=res.distance_evals,
+            escalated=int(esc_mask[:size].sum()))
         return out
 
     # ------------------------------------------------------------------
@@ -443,6 +643,16 @@ class SearchEngine:
                             "max_wait_ms": self.max_wait_ms,
                             "buckets": self.buckets,
                             "running": self.running}
+        out["operating_point"] = {
+            "target_recall": self._target_recall,
+            "params": None if self._params is None
+            else self._params.to_dict(),
+            "escalation": None if self._escalation is None else {
+                "delta": self._escalation.delta,
+                "threshold": self._escalation.threshold,
+                "params": self._esc_params.to_dict()},
+            "tuned": self._curve is not None,
+        }
         out["mutation"] = {"mutations": self._mutations,
                            "swaps": self._swaps}
         ms = getattr(self.index, "mutation_stats", None)

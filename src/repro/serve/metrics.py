@@ -30,9 +30,11 @@ class EngineMetrics:
         self._done = deque(maxlen=window)      # completion timestamps
         self._evals_sum = 0.0        # distance_evals weighted by requests
         self._evals_n = 0
+        self.n_escalated = 0         # rows re-run at the next ladder rung
 
     def record_batch(self, size: int, bucket: int, latencies_s: list,
-                     distance_evals: Optional[float]) -> None:
+                     distance_evals: Optional[float],
+                     escalated: int = 0) -> None:
         now = time.perf_counter()
         with self._lock:
             self.n_batches += 1
@@ -44,6 +46,7 @@ class EngineMetrics:
             if distance_evals is not None:
                 self._evals_sum += distance_evals * size
                 self._evals_n += size
+            self.n_escalated += escalated
 
     def record_cached(self, latency_s: float) -> None:
         now = time.perf_counter()
@@ -85,4 +88,9 @@ class EngineMetrics:
             if self._evals_n:
                 out["distance_evals"] = round(
                     self._evals_sum / self._evals_n, 1)
+            if self.n_requests:
+                # fraction of queued rows whose top-k margin was unstable
+                # and paid a second pass (0.0 when escalation is off)
+                out["escalation_rate"] = round(
+                    self.n_escalated / self.n_requests, 4)
             return out

@@ -1,0 +1,48 @@
+"""Self-tuning serving: recall-SLO autotuner + per-query escalation.
+
+Closes the knob loop the ROADMAP names: ``SearchResult.stats`` already
+reports what every query COST (``distance_evals``, ``beam_hops``); this
+package decides what every query SHOULD cost.
+
+* :mod:`repro.tune.autotune` — offline: sweep the
+  :data:`~repro.api.index.KNOB_LADDER` on held-out queries, fit the
+  Pareto :class:`OperatingCurve` (recall vs. distance_evals/QPS),
+  persist it keyed by ``index.fingerprint()``. The serving engine maps
+  ``target_recall`` through it to the cheapest operating point.
+* :mod:`repro.tune.escalate` — online: the top-k margin-stability signal
+  (:func:`topk_margin`) and :class:`EscalationPolicy`; the engine re-runs
+  only unstable queries one ladder rung up.
+
+See ``docs/autotune.md`` for the end-to-end story and
+``benchmarks/table8_autotune.py`` for the gated before/after numbers.
+"""
+from ..api.index import KNOB_LADDER, SearchParams, next_rung, snap_knob
+from .autotune import (
+    OperatingCurve,
+    OperatingPoint,
+    candidate_params,
+    curve_path,
+    load_curve,
+    pareto,
+    save_curve,
+    sweep,
+)
+from .escalate import EscalationPolicy, topk_margin, unstable_rows
+
+__all__ = [
+    "EscalationPolicy",
+    "KNOB_LADDER",
+    "OperatingCurve",
+    "OperatingPoint",
+    "SearchParams",
+    "candidate_params",
+    "curve_path",
+    "load_curve",
+    "next_rung",
+    "pareto",
+    "save_curve",
+    "snap_knob",
+    "sweep",
+    "topk_margin",
+    "unstable_rows",
+]

@@ -1,0 +1,220 @@
+"""Offline recall-SLO autotuner: sweep the knob ladder, fit the Pareto
+operating curve, persist it keyed by index fingerprint.
+
+Hand-picked knob defaults (``nprobe = n_cells/16``, ``ef_search = 64``,
+``k1 = k * rerank_factor * oversample``) encode one global guess about
+query difficulty; the tuner replaces the guess with measurement. Given a
+built index and held-out queries with exact ground truth:
+
+1. :func:`candidate_params` walks the index stack and enumerates
+   :class:`~repro.api.index.SearchParams` along the
+   :data:`~repro.api.index.KNOB_LADDER` for the knobs that stack actually
+   has — IVF stage-1 sweeps ``nprobe``, HNSW-under-rerank sweeps
+   ``ef_search`` and ``rerank_k1`` *together* (the beam width is driven
+   by the stage-1 budget, so tuning them independently wastes the sweep).
+2. :func:`sweep` measures each candidate — recall@k against the exact
+   ground truth, mean ``distance_evals`` from ``SearchResult.stats``, QPS
+   — and keeps the Pareto front: recall strictly increasing with cost.
+3. The resulting :class:`OperatingCurve` maps a recall SLO to the
+   cheapest operating point (:meth:`OperatingCurve.select`); the serving
+   engine calls it when given ``target_recall`` and
+   :func:`save_curve` / :func:`load_curve` persist it as JSON keyed by
+   ``index.fingerprint()`` so a tuned point can never be applied to a
+   different (rebuilt, mutated, swapped) index.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..api.index import (KNOB_LADDER, SearchParams, VectorIndex, snap_knob)
+from ..core.metrics import recall_at_k
+
+_CURVE_VERSION = 1
+
+
+@dataclass(frozen=True)
+class OperatingPoint:
+    """One measured (knobs -> quality/cost) sample on the curve."""
+
+    params: SearchParams
+    recall: float
+    distance_evals: float
+    qps: float
+
+    def to_dict(self) -> dict:
+        return {"params": self.params.to_dict(), "recall": self.recall,
+                "distance_evals": self.distance_evals, "qps": self.qps}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "OperatingPoint":
+        return cls(params=SearchParams.from_dict(d["params"]),
+                   recall=float(d["recall"]),
+                   distance_evals=float(d["distance_evals"]),
+                   qps=float(d["qps"]))
+
+
+@dataclass(frozen=True)
+class OperatingCurve:
+    """Pareto front of measured operating points, cheapest first.
+
+    ``fingerprint`` pins the curve to the exact index build it was
+    measured on; ``k`` to the result size (recall@10 says nothing about
+    recall@100). The serving engine refuses a curve whose fingerprint
+    does not match its live index."""
+
+    points: tuple[OperatingPoint, ...]
+    fingerprint: str
+    k: int
+
+    def select(self, target_recall: float,
+               slack: float = 0.0) -> OperatingPoint:
+        """Cheapest point whose measured recall covers ``target_recall``
+        (plus ``slack`` — see ``EscalationPolicy.recall_slack``). Points
+        are cost-sorted, so the first hit is the answer; if no point
+        reaches the target the most accurate one is returned —
+        best-effort, and the bench gate (scripts/check_bench.py) is what
+        turns a silently missed SLO into a red build."""
+        if not self.points:
+            raise ValueError("empty operating curve")
+        want = target_recall + slack
+        for p in self.points:
+            if p.recall >= want:
+                return p
+        return self.points[-1]
+
+    def to_dict(self) -> dict:
+        return {"version": _CURVE_VERSION, "fingerprint": self.fingerprint,
+                "k": self.k, "points": [p.to_dict() for p in self.points]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "OperatingCurve":
+        return cls(points=tuple(OperatingPoint.from_dict(p)
+                                for p in d["points"]),
+                   fingerprint=str(d["fingerprint"]), k=int(d["k"]))
+
+
+def pareto(points: Sequence[OperatingPoint]) -> tuple[OperatingPoint, ...]:
+    """Cost-sorted Pareto front: walking up the cost axis, keep a point
+    only if it strictly improves recall — dominated knob settings (more
+    evals, no more recall) never make the curve."""
+    front: list[OperatingPoint] = []
+    for p in sorted(points, key=lambda p: (p.distance_evals, -p.recall)):
+        if not front or p.recall > front[-1].recall:
+            front.append(p)
+    return tuple(front)
+
+
+def _stage1(index: VectorIndex) -> VectorIndex:
+    """The knob-bearing stage-1 tier of an arbitrary stack: unwrap
+    Mutable (``_inner``), TwoStage (``base``), and Sharded (shard 0 —
+    shards are homogeneous by construction)."""
+    seen = 0
+    while seen < 8:
+        seen += 1
+        if hasattr(index, "_inner"):           # MutableIndex
+            index = index._inner
+        elif hasattr(index, "rerank_factor"):  # TwoStageIndex
+            index = index.base
+        elif hasattr(index, "_shards"):        # ShardedIndex
+            index = index._shards[0]
+        else:
+            return index
+    return index
+
+
+def candidate_params(index: VectorIndex, k: int,
+                     max_rung: int = 512) -> list[SearchParams]:
+    """Ladder-walk candidates for the knobs this stack actually has.
+
+    * IVF-family stage 1 (has ``nprobe``): sweep ``nprobe`` over the
+      rungs up to the cell count — probing more cells than exist is the
+      same operating point twice.
+    * HNSW stage 1: sweep ``ef_search`` from ``snap(max(k, 8))`` (a beam
+      below k is illegal — search clamps to k anyway) up to ``max_rung``.
+      Under a rerank, tie ``rerank_k1`` to the same rung: the beam width
+      is ``max(ef, k1)``, so a wide k1 under a narrow ef (or vice versa)
+      collapses onto another rung's operating point.
+    * Knob-free stacks (flat / flat-quantized): the single default point.
+    """
+    s1 = _stage1(index)
+    reranked = hasattr(index, "rerank_factor") or (
+        hasattr(index, "_inner") and hasattr(index._inner, "rerank_factor"))
+    if hasattr(s1, "nprobe"):
+        n_cells = max(1, getattr(s1, "n_cells", KNOB_LADDER[-1]))
+        rungs = [r for r in KNOB_LADDER if r <= n_cells] or [KNOB_LADDER[0]]
+        return [SearchParams(nprobe=r) for r in rungs if r <= max_rung]
+    if hasattr(s1, "ef_search"):
+        lo = snap_knob(max(k, 8))
+        rungs = [r for r in KNOB_LADDER if lo <= r <= max_rung]
+        if reranked:
+            return [SearchParams(ef_search=r, rerank_k1=r) for r in rungs]
+        return [SearchParams(ef_search=r) for r in rungs]
+    return [SearchParams()]
+
+
+def sweep(index: VectorIndex, queries: np.ndarray,
+          ground_truth: np.ndarray, k: int,
+          candidates: Optional[Sequence[SearchParams]] = None
+          ) -> OperatingCurve:
+    """Measure every candidate on held-out ``queries`` against exact
+    ``ground_truth`` ids ([Q, >= k], e.g. from a ``FlatIndex`` over the
+    same corpus) and return the Pareto operating curve.
+
+    Each candidate runs twice: a warmup call (absorbs jit compiles for
+    that rung — serving will also be warm) and a timed call that supplies
+    recall, mean ``distance_evals``, and QPS."""
+    if candidates is None:
+        candidates = candidate_params(index, k)
+    gt = np.asarray(ground_truth)[:, :k]
+    measured = []
+    for params in candidates:
+        index.search(queries[:1], k, params=params)  # warm this rung
+        t0 = time.perf_counter()
+        r = index.search(queries, k, params=params)
+        dt = time.perf_counter() - t0
+        measured.append(OperatingPoint(
+            params=params,
+            recall=recall_at_k(r.indices[:, :k], gt),
+            distance_evals=float(r.stats.get("distance_evals", 0.0)),
+            qps=float(queries.shape[0] / max(dt, 1e-9))))
+    return OperatingCurve(points=pareto(measured),
+                          fingerprint=index.fingerprint(), k=k)
+
+
+def save_curve(curve: OperatingCurve, path: str) -> None:
+    """Persist as JSON. The conventional name is
+    ``curve_<fingerprint>_k<k>.json`` so one directory holds the tuned
+    state of many builds; any path works."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(curve.to_dict(), f, indent=1)
+
+
+def load_curve(path: str,
+               index: Optional[VectorIndex] = None) -> OperatingCurve:
+    """Load a persisted curve; with ``index`` given, refuse one measured
+    on a different build — a tuned point is only meaningful against the
+    exact fingerprint it was swept on."""
+    with open(path) as f:
+        curve = OperatingCurve.from_dict(json.load(f))
+    if index is not None:
+        fp = index.fingerprint()
+        if curve.fingerprint != fp:
+            raise ValueError(
+                f"operating curve was tuned for fingerprint "
+                f"{curve.fingerprint}, live index is {fp} — re-run "
+                f"repro.tune.sweep on this build")
+    return curve
+
+
+def curve_path(directory: str, fingerprint: str, k: int) -> str:
+    """The conventional on-disk location for a build's tuned curve."""
+    return os.path.join(directory, f"curve_{fingerprint}_k{k}.json")

@@ -78,6 +78,33 @@ class StreamyIndex(VectorIndex):
         return {"db": self._db}
 
 
+class TunedIndex(VectorIndex):
+    """Self-tuning index whose ``set_params`` applies a knob the
+    fingerprint never hashes -> tuned-policy (and nothing else: the knob
+    is not stored in __init__/build/_load, so fingerprint-missing stays
+    quiet, and the stored corpus IS hashed)."""
+
+    def __init__(self):
+        self._db = []
+
+    def build(self, corpus):
+        self._db = list(corpus)
+        return self
+
+    def set_params(self, params):
+        self.nprobe = params       # applied knob, never fingerprinted
+
+    @property
+    def ntotal(self):
+        return len(self._db)
+
+    def _fingerprint_state(self):
+        return [self._db]
+
+    def save(self, directory):
+        return {"db": self._db}
+
+
 class ShardyIndex(VectorIndex):
     """Composite that reads its children but never hashes their
     fingerprints -> child-fingerprint (and nothing else: the attribute

@@ -46,6 +46,8 @@ EXPECTED = Counter({
     ("fingerprint", "fingerprint-missing", "src/repro/indexes.py"): 1,
     # StreamyIndex.insert bumps self.epoch but never fingerprints it
     ("fingerprint", "mutation-epoch", "src/repro/indexes.py"): 1,
+    # TunedIndex.set_params applies a knob it never fingerprints
+    ("fingerprint", "tuned-policy", "src/repro/indexes.py"): 1,
     ("fingerprint", "save-coverage", "src/repro/indexes.py"): 1,
     ("fingerprint", "stale-exemption", "src/repro/indexes.py"): 1,
     ("fingerprint", "unknown-exemption", "src/repro/indexes.py"): 1,
@@ -280,6 +282,54 @@ def test_check_bench_churn_gates(tmp_path):
         proc = _check_bench("--baseline", str(base), "--candidate",
                             str(cand), "--qps-tol", "0.99",
                             "--recall-tol", "1.0")
+        assert proc.returncode == 1 and fragment in proc.stdout, \
+            (sub, proc.stdout)
+
+
+def _autotune_bench_dirs(tmp_path, **overrides):
+    """Identical base/cand BENCH_autotune.json: isolates the
+    candidate-side self-tuning gates from the baseline-diff gates."""
+    row = {"spec": "RAE64,IVF256,Rerank4", "space": "slo0.95",
+           "target_recall": 0.95, "recall_holdout": 0.98,
+           "default_recall": 0.99, "evals_ratio": 0.55,
+           "escalation_rate": 0.06}
+    row.update(overrides)
+    row = {k: v for k, v in row.items() if v is not None}  # None = drop key
+    payload = {"rows": [row],
+               "config": {"autotune_recall_slack": 0.01,
+                          "autotune_evals_ratio_max": 0.70,
+                          "autotune_required_specs":
+                              ["RAE64,IVF256,Rerank4"]}}
+    for side in ("base", "cand"):
+        d = tmp_path / side
+        d.mkdir(parents=True)
+        (d / "BENCH_autotune.json").write_text(json.dumps(payload))
+    return tmp_path / "base", tmp_path / "cand"
+
+
+def test_check_bench_autotune_gates(tmp_path):
+    """The self-tuning block: a healthy tuned row passes; an SLO miss on
+    the holdout split, a thin evals saving at equal recall, a missing or
+    saturated escalation rate, and a dropped required stack each fail on
+    their own message."""
+    base, cand = _autotune_bench_dirs(tmp_path / "ok")
+    assert _check_bench("--baseline", str(base),
+                        "--candidate", str(cand)).returncode == 0
+    # defaults below the SLO: the equal-recall cost gate is waived
+    base, cand = _autotune_bench_dirs(tmp_path / "waived",
+                                      default_recall=0.90,
+                                      evals_ratio=1.3)
+    assert _check_bench("--baseline", str(base),
+                        "--candidate", str(cand)).returncode == 0
+    for sub, overrides, fragment in [
+            ("slo", {"recall_holdout": 0.92}, "missed the"),
+            ("ratio", {"evals_ratio": 0.85}, "evals_ratio"),
+            ("noesc", {"escalation_rate": None}, "escalation_rate missing"),
+            ("allesc", {"escalation_rate": 1.0}, "margin signal"),
+            ("spec", {"spec": "RAE64,Flat"}, "required stack")]:
+        base, cand = _autotune_bench_dirs(tmp_path / sub, **overrides)
+        proc = _check_bench("--baseline", str(base), "--candidate",
+                            str(cand), "--recall-tol", "1.0")
         assert proc.returncode == 1 and fragment in proc.stdout, \
             (sub, proc.stdout)
 

@@ -1,0 +1,340 @@
+"""Self-tuning serving: knob ladder, autotuner, adaptive escalation.
+
+What is pinned here, per ISSUE 10's acceptance criteria:
+
+* the :data:`KNOB_LADDER` / ``SearchParams`` snapping algebra;
+* per-call ``nprobe``/``ef_search``/``rerank_k1`` overrides answer
+  differently (more knob = more work) WITHOUT recompiling once each
+  rung's jit entry is warm — the compile-budget-zero regression test;
+* operating-curve monotonicity: IVF recall is non-decreasing along the
+  nprobe ladder (probed cell sets are nested), and a swept
+  ``OperatingCurve`` is Pareto by construction (recall strictly
+  increases with cost);
+* escalation determinism: a query escalated solo is bitwise identical
+  to the same query escalated inside a coalesced batch (the serving
+  row-invariance contract, extended to the two-pass path) at compile
+  budget zero. Parity tests use scan tiers (IVF) on integer corpora —
+  exact arithmetic, and the HNSW ``batched="auto"`` lone-vs-batched
+  engine split documented in ``api.graph`` does not apply;
+* the PR-10 cache bugfix: the serving-cache key carries the resolved
+  operating point, so ``set_operating_point`` can never replay answers
+  computed under the old knobs;
+* curve persistence is fingerprint-keyed: loading a curve against a
+  different build raises.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.analysis.runtime import no_retrace
+from repro.api import KNOB_LADDER, SearchParams, next_rung, snap_knob
+from repro.serve.engine import SearchEngine, _Request
+from repro.tune import (EscalationPolicy, OperatingCurve, OperatingPoint,
+                        load_curve, pareto, save_curve, sweep, topk_margin,
+                        unstable_rows)
+
+N, DIM, K = 2048, 16, 10
+
+
+def _int_corpus(seed: int, n: int = N, dim: int = DIM) -> np.ndarray:
+    """Integer-valued f32 vectors: exact arithmetic, so batched and
+    per-query scans agree bitwise. Rows are distinct w.p. ~1."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(-8, 8, (n, dim)).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return _int_corpus(0)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    rng = np.random.default_rng(7)
+    return corpus[rng.choice(len(corpus), 32, replace=False)].copy()
+
+
+@pytest.fixture(scope="module")
+def ivf(corpus):
+    return api.IVFFlatIndex(n_cells=32, seed=0).build(corpus)
+
+
+@pytest.fixture(scope="module")
+def ground_truth(corpus, queries):
+    return np.asarray(api.FlatIndex().build(corpus)
+                      .search(queries, K).indices)
+
+
+# ---------------------------------------------------------------------------
+# ladder + SearchParams algebra
+# ---------------------------------------------------------------------------
+def test_ladder_is_strictly_increasing_geometricish():
+    steps = np.diff(np.asarray(KNOB_LADDER))
+    assert (steps > 0).all()
+    ratios = np.asarray(KNOB_LADDER[1:]) / np.asarray(KNOB_LADDER[:-1])
+    assert ratios.max() <= 2.0  # no rung more than doubles the work
+
+
+def test_snap_rounds_up_and_clamps():
+    assert snap_knob(1) == KNOB_LADDER[0]
+    for r in KNOB_LADDER:
+        assert snap_knob(r) == r           # rungs are fixed points
+    assert snap_knob(9) == 12
+    assert snap_knob(KNOB_LADDER[-1] + 1) == KNOB_LADDER[-1]
+
+
+def test_next_rung_steps_and_saturates():
+    assert next_rung(8) == 12
+    assert next_rung(9) == 16              # snap(9)=12, next is 16
+    assert next_rung(KNOB_LADDER[-1]) == KNOB_LADDER[-1]
+
+
+def test_search_params_snap_merge_escalate():
+    p = SearchParams(nprobe=9, ef_search=100)
+    assert (p.nprobe, p.ef_search, p.rerank_k1) == (12, 128, None)
+    assert p == SearchParams(nprobe=12, ef_search=128)  # snapped == equal
+    assert p.merged(SearchParams(nprobe=48)).nprobe == 48
+    assert p.merged(SearchParams()).ef_search == 128
+    e = p.escalated()
+    assert (e.nprobe, e.ef_search, e.rerank_k1) == (16, 192, None)
+    assert SearchParams.from_dict(p.to_dict()) == p
+    with pytest.raises(ValueError, match="must be >= 1"):
+        SearchParams(nprobe=0)
+
+
+# ---------------------------------------------------------------------------
+# per-call knobs: behavior + the no-recompile regression
+# ---------------------------------------------------------------------------
+def test_ivf_per_call_nprobe_changes_work(ivf, queries):
+    lo = ivf.search(queries, K, params=SearchParams(nprobe=8))
+    hi = ivf.search(queries, K, params=SearchParams(nprobe=32))
+    assert hi.distance_evals > lo.distance_evals
+    # per-call override does NOT move the fingerprint (no state changed)
+    fp = ivf.fingerprint()
+    ivf.search(queries, K, params=SearchParams(nprobe=16))
+    assert ivf.fingerprint() == fp
+
+
+def test_ivf_laddered_calls_do_not_recompile(ivf, queries):
+    """ISSUE 10 satellite: repeated per-call laddered nprobe overrides
+    must reuse the cached static-arg jit — zero recompiles once warm."""
+    rungs = [SearchParams(nprobe=r) for r in (8, 12, 16, 32)]
+    for p in rungs:  # warm every rung once at the serving shape
+        ivf.search(queries, K, params=p)
+    with no_retrace(budget=0, what="laddered nprobe storm"):
+        for _ in range(3):
+            for p in rungs:
+                ivf.search(queries, K, params=p)
+
+
+def test_two_stage_rerank_k1_override(corpus, queries):
+    ts = api.TwoStageIndex(api.make_reducer("pca", 8),
+                           api.IVFFlatIndex(n_cells=32),
+                           rerank_factor=4).build(corpus)
+    r = ts.search(queries, K, params=SearchParams(rerank_k1=16))
+    assert r.stats["rerank_evals"] == 16.0
+    # k1 never drops below k: the rerank can't return unfetched rows
+    r2 = ts.search(queries, 24, params=SearchParams(rerank_k1=8))
+    assert r2.stats["rerank_evals"] == 24.0
+
+
+def test_set_params_moves_fingerprint(corpus):
+    # local builds: set_params mutates serving state (and the
+    # fingerprint with it), so never touch the shared fixtures here
+    ix_ivf = api.IVFFlatIndex(n_cells=16, seed=0).build(corpus[:512])
+    h = api.HNSWIndex(m=8, ef_search=32, seed=0).build(corpus[:512])
+    for ix, p in [(ix_ivf, SearchParams(nprobe=24)),
+                  (h, SearchParams(ef_search=96))]:
+        fp = ix.fingerprint()
+        ix.set_params(p)
+        assert ix.fingerprint() != fp, type(ix).__name__
+
+
+# ---------------------------------------------------------------------------
+# operating curve: monotonicity + persistence
+# ---------------------------------------------------------------------------
+def test_ivf_recall_monotone_along_ladder(ivf, queries, ground_truth):
+    """Probed cell sets are nested as nprobe grows, so recall along the
+    ladder is non-decreasing — the property the autotuner's 'cheapest
+    point meeting the SLO' selection rests on."""
+    from repro.core.metrics import recall_at_k
+
+    recalls = [recall_at_k(
+        ivf.search(queries, K, params=SearchParams(nprobe=r)).indices,
+        ground_truth) for r in (8, 12, 16, 24, 32)]
+    assert all(b >= a - 1e-12 for a, b in zip(recalls, recalls[1:])), recalls
+
+
+def test_sweep_returns_pareto_curve(ivf, queries, ground_truth):
+    curve = sweep(ivf, queries, ground_truth, K)
+    assert curve.fingerprint == ivf.fingerprint() and curve.k == K
+    evals = [p.distance_evals for p in curve.points]
+    recalls = [p.recall for p in curve.points]
+    assert evals == sorted(evals)
+    assert all(b > a for a, b in zip(recalls, recalls[1:]))  # strict
+    # select: cheapest point covering the target; best-effort at the top
+    cheap = curve.select(0.0)
+    assert cheap is curve.points[0]
+    assert curve.select(2.0) is curve.points[-1]
+
+
+def test_pareto_drops_dominated_points():
+    mk = lambda r, c: OperatingPoint(params=SearchParams(nprobe=8),
+                                     recall=r, distance_evals=c, qps=1.0)
+    front = pareto([mk(0.9, 100), mk(0.8, 200), mk(0.95, 300)])
+    assert [(p.recall, p.distance_evals) for p in front] == \
+        [(0.9, 100), (0.95, 300)]
+
+
+def test_curve_roundtrip_and_fingerprint_pinning(tmp_path, ivf, queries,
+                                                 ground_truth, corpus):
+    curve = sweep(ivf, queries, ground_truth, K,
+                  candidates=[SearchParams(nprobe=8),
+                              SearchParams(nprobe=16)])
+    path = str(tmp_path / "curve.json")
+    save_curve(curve, path)
+    assert load_curve(path, ivf) == curve
+    other = api.IVFFlatIndex(n_cells=16).build(corpus[:512])
+    with pytest.raises(ValueError, match="tuned for fingerprint"):
+        load_curve(path, other)
+
+
+# ---------------------------------------------------------------------------
+# margin signal
+# ---------------------------------------------------------------------------
+def test_topk_margin_separates_stable_from_unstable():
+    s = np.array([[10.0, 9, 8, 7, 1, 0.9, 0.8],     # insulated top-4
+                  [10.0, 9, 8, 7, 6.99, 6.98, 6.97]])  # razor-thin
+    m = topk_margin(s, k=4, delta=3)
+    assert m[0] > 0.5 and m[1] < 0.05
+    u = unstable_rows(s, 4, 3, threshold=0.15, ntotal=10_000)
+    assert list(u) == [False, True]
+
+
+def test_unstable_rows_short_probe_policy():
+    short = np.array([[5.0, 4, 3, -np.inf, -np.inf, -np.inf, -np.inf]])
+    # a short probe escalates when the corpus holds more...
+    assert unstable_rows(short, 4, 3, 0.15, ntotal=10_000)[0]
+    # ...but not when the corpus simply has nothing else to offer
+    assert not unstable_rows(short, 4, 3, 0.15, ntotal=3)[0]
+
+
+def test_threshold_extremes_force_none_and_all():
+    s = np.array([[10.0, 9, 8, 7, 1, 0.9, 0.8]])
+    assert not unstable_rows(s, 4, 3, threshold=0.0, ntotal=100)[0]
+    assert unstable_rows(s, 4, 3, threshold=1.5, ntotal=100)[0]
+
+
+def test_escalation_policy_validation():
+    with pytest.raises(ValueError, match="delta"):
+        EscalationPolicy(delta=0)
+    with pytest.raises(ValueError, match="threshold"):
+        EscalationPolicy(threshold=-0.1)
+    with pytest.raises(ValueError, match="recall_slack"):
+        EscalationPolicy(recall_slack=-0.01)
+
+
+# ---------------------------------------------------------------------------
+# engine: escalation determinism + compile budget + the cache bugfix
+# ---------------------------------------------------------------------------
+def _reqs(qs):
+    return [_Request(q=q, k=K, future=None) for q in qs]
+
+
+def test_escalated_solo_bitwise_equals_escalated_in_batch(ivf, queries):
+    """ISSUE 10 acceptance: a query escalated solo must return bitwise
+    identical ids/scores to the same query escalated inside a coalesced
+    batch — pass 1 AND pass 2 ride the tiers' row-invariance contract —
+    and the whole two-pass path stays at compile budget zero once
+    warmup() has compiled both rungs at every bucket."""
+    eng = SearchEngine(ivf, max_batch=4, cache_size=0,
+                       params=SearchParams(nprobe=8),
+                       escalation=EscalationPolicy(delta=3, threshold=1.5))
+    eng.warmup(ks=(K,))
+    qs = queries[:4]
+    with no_retrace(budget=0, what="escalated solo-vs-batch parity"):
+        batch = eng._run_batch(K, _reqs(qs))
+        solos = [eng._run_batch(K, _reqs(qs[i:i + 1]))[0]
+                 for i in range(len(qs))]
+    for i, solo in enumerate(solos):
+        assert solo.stats["escalated"] and batch[i].stats["escalated"]
+        np.testing.assert_array_equal(solo.indices, batch[i].indices)
+        assert solo.scores.tobytes() == batch[i].scores.tobytes()
+    assert eng.metrics.snapshot()["escalation_rate"] == 1.0
+
+
+def test_escalation_off_rows_untouched(ivf, queries):
+    """threshold=0 never escalates: answers must equal the plain
+    single-pass answers at the base params, bitwise."""
+    eng = SearchEngine(ivf, max_batch=4, cache_size=0,
+                       params=SearchParams(nprobe=8),
+                       escalation=EscalationPolicy(delta=3, threshold=0.0))
+    eng.warmup(ks=(K,))
+    base = ivf.search(queries[:4], K + 3, params=SearchParams(nprobe=8))
+    out = eng._run_batch(K, _reqs(queries[:4]))
+    for i, r in enumerate(out):
+        assert not r.stats["escalated"]
+        np.testing.assert_array_equal(
+            r.indices[0], np.asarray(base.indices)[i, :K])
+    assert eng.metrics.snapshot()["escalation_rate"] == 0.0
+
+
+def test_escalated_rows_pay_both_passes_in_stats(ivf, queries):
+    eng = SearchEngine(ivf, max_batch=4, cache_size=0,
+                       params=SearchParams(nprobe=8),
+                       escalation=EscalationPolicy(delta=3, threshold=1.5))
+    out = eng._run_batch(K, _reqs(queries[:2]))
+    for r in out:
+        e1 = r.stats["pass1_distance_evals"]
+        e2 = r.stats["pass2_distance_evals"]
+        assert e2 > 0 and r.stats["distance_evals"] == pytest.approx(e1 + e2)
+
+
+def test_cache_key_includes_operating_point(ivf, queries):
+    """The PR-10 bugfix: a knob change on the SAME fingerprint must not
+    replay cached answers computed under the old knobs."""
+    with SearchEngine(ivf, max_batch=2, max_wait_ms=0.5,
+                      cache_size=64) as eng:
+        q = queries[0]
+        eng.search_one(q, K)
+        eng.search_one(q, K)
+        assert eng.cache.hits == 1
+        eng.set_operating_point(params=SearchParams(nprobe=32))
+        eng.search_one(q, K)          # same query, new knobs: MUST miss
+        assert eng.cache.hits == 1
+        eng.search_one(q, K)          # same knobs again: hits again
+        assert eng.cache.hits == 2
+
+
+def test_engine_target_recall_selects_cheapest_point(ivf):
+    mk = lambda r, c, np_: OperatingPoint(
+        params=SearchParams(nprobe=np_), recall=r, distance_evals=c,
+        qps=1.0)
+    curve = OperatingCurve(points=(mk(0.9, 100, 8), mk(0.97, 200, 12),
+                                   mk(0.999, 400, 24)),
+                           fingerprint=ivf.fingerprint(), k=K)
+    eng = SearchEngine(ivf, target_recall=0.95, curve=curve)
+    assert eng._params.nprobe == 12
+    # recall_slack discounts the selection: escalation is trusted to
+    # close the gap, so the engine starts a rung cheaper and derives
+    # pass 2 one ladder rung up from there
+    eng2 = SearchEngine(ivf, target_recall=0.95, curve=curve,
+                        escalation=EscalationPolicy(recall_slack=0.08))
+    assert eng2._params.nprobe == 8        # 0.90 >= 0.95 - 0.08
+    assert eng2._esc_params.nprobe == 12
+    with pytest.raises(ValueError, match="needs an OperatingCurve"):
+        SearchEngine(ivf, target_recall=0.9)
+    with pytest.raises(ValueError, match="pass-2 operating point"):
+        SearchEngine(ivf, escalation=EscalationPolicy())
+
+
+def test_engine_rejects_foreign_curve(corpus, ivf):
+    other = api.IVFFlatIndex(n_cells=16).build(corpus[:512])
+    curve = OperatingCurve(
+        points=(OperatingPoint(params=SearchParams(nprobe=8), recall=0.99,
+                               distance_evals=1.0, qps=1.0),),
+        fingerprint=other.fingerprint(), k=K)
+    with pytest.raises(ValueError, match="tuned for fingerprint"):
+        SearchEngine(ivf, target_recall=0.9, curve=curve)
